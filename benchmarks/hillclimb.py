@@ -1,0 +1,85 @@
+"""Perf-iteration driver (EXPERIMENTS.md §Perf).
+
+Recompiles a dry-run cell with config/code overrides and reports the three
+roofline terms, so each hypothesis->change->measure cycle is one command:
+
+    PYTHONPATH=src:benchmarks python benchmarks/hillclimb.py \
+        --arch qwen2_vl_72b --shape train_4k --set attn_chunk=1024
+
+Results append to experiments/hillclimb.jsonl.
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse        # noqa: E402
+import dataclasses     # noqa: E402
+import json            # noqa: E402
+import time            # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.launch import mesh as meshlib  # noqa: E402
+from repro.launch.dryrun import analyze, lower_cell, scale_depth, unit_count  # noqa: E402
+
+import roofline  # noqa: E402
+
+
+def measure(arch: str, shape: str, overrides: dict, label: str,
+            full_memory: bool = False) -> dict:
+    mesh = meshlib.make_production_mesh()
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    u = unit_count(cfg)
+    rec = {"arch": arch, "shape": shape, "mesh": "pod16x16", "units": u,
+           "label": label, "overrides": overrides, "full": {}}
+    for d in (1, 2):
+        t0 = time.time()
+        c = lower_cell(scale_depth(cfg, d), shape, mesh).compile()
+        rec[f"depth{d}"] = analyze(c)
+        rec[f"depth{d}"]["compile_s"] = round(time.time() - t0, 1)
+        del c
+    if full_memory:
+        c = lower_cell(cfg, shape, mesh).compile()
+        rec["full"] = analyze(c)
+        del c
+    cell = roofline.analyze_cell({**rec, "n_devices": 256})
+    out = {"label": label, "arch": arch, "shape": shape,
+           "overrides": {k: str(v) for k, v in overrides.items()},
+           **{k: cell[k] for k in ("t_compute", "t_memory", "t_collective",
+                                   "dominant", "mfu_bound", "useful_ratio")}}
+    if full_memory:
+        out["peak_gib"] = rec["full"]["memory"]["peak_bytes"] / 2**30
+    with open("experiments/hillclimb.jsonl", "a") as f:
+        f.write(json.dumps(out) + "\n")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--label", default="iter")
+    ap.add_argument("--full-memory", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (int/float parsed)")
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                pass
+        overrides[k] = v
+    out = measure(args.arch, args.shape, overrides, args.label,
+                  args.full_memory)
+    print(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

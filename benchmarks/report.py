@@ -1,0 +1,63 @@
+"""Emit the EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts."""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import roofline  # noqa: E402
+
+
+def dryrun_table():
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(roofline.DEFAULT_DIR, "*.json"))):
+        rec = json.load(open(fn))
+        if rec.get("arch") == "graph_engine":
+            continue
+        if rec.get("skipped"):
+            rows.append((rec["arch"], rec["shape"], rec["mesh"], "SKIP",
+                         rec["reason"], ""))
+            continue
+        mem = rec["full"].get("memory", {})
+        coll = rec["full"].get("collectives", {})
+        rows.append((
+            rec["arch"], rec["shape"], rec["mesh"],
+            f"ok ({rec['compile_s']}s)",
+            f"{mem.get('peak_bytes', 0)/2**30:.1f} GiB",
+            f"{coll.get('total', 0)/2**30:.2f} GiB/{coll.get('count', 0)}"))
+    out = ["| arch | shape | mesh | compile | peak/dev | HLO coll bytes/ops |",
+           "|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(x) for x in r) + " |")
+    return "\n".join(out)
+
+
+def graph_table():
+    out = ["| cell | mesh | query | per-level coll | flops(body) | compile |",
+           "|---|---|---|---|---|---|"]
+    for fn in sorted(glob.glob(os.path.join(roofline.DEFAULT_DIR,
+                                            "graph_engine*.json"))):
+        rec = json.load(open(fn))
+        name = os.path.basename(fn).replace(".json", "")
+        for q in ("bfs", "sssp"):
+            if q not in rec:
+                continue
+            c = rec[q]["collectives"]
+            out.append(
+                f"| {name} | {rec['mesh']} | {q} | "
+                f"{c.get('total', 0)/1024:.0f} KiB/{c.get('count')} ops | "
+                f"{rec[q]['cost'].get('flops', 0):.2e} | "
+                f"{rec[q].get('compile_s', '?')}s |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print(dryrun_table())
+        print()
+    if which in ("all", "graph"):
+        print(graph_table())
+        print()
+    if which in ("all", "roofline"):
+        print(roofline.markdown(roofline.table()))

@@ -1,0 +1,18 @@
+"""Serve a small model with batched requests: prefill + incremental decode
+through the snapshot-validated parameter store.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import subprocess
+import sys
+import os
+
+root = os.path.join(os.path.dirname(__file__), "..")
+cmd = [
+    sys.executable, "-m", "repro.launch.serve",
+    "--arch", "granite_moe_1b", "--reduced",
+    "--batch", "4", "--prompt-len", "32", "--gen", "16",
+]
+env = dict(os.environ)
+env["PYTHONPATH"] = os.path.join(root, "src")
+raise SystemExit(subprocess.call(cmd, env=env))

@@ -1,0 +1,27 @@
+"""End-to-end training driver: a ~20M-param same-family Qwen3 model for a
+few hundred steps on CPU, with checkpoint/restart and the synthetic data
+pipeline.  (On a real pod, drop --reduced and pass --mesh single.)
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import argparse
+import subprocess
+import sys
+import os
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--arch", default="qwen3_32b")
+args = ap.parse_args()
+
+root = os.path.join(os.path.dirname(__file__), "..")
+cmd = [
+    sys.executable, "-m", "repro.launch.train",
+    "--arch", args.arch, "--reduced",
+    "--steps", str(args.steps), "--batch", "8", "--seq", "128",
+    "--ckpt-dir", "/tmp/repro_train_lm", "--ckpt-every", "50",
+    "--log-every", "20",
+]
+env = dict(os.environ)
+env["PYTHONPATH"] = os.path.join(root, "src")
+raise SystemExit(subprocess.call(cmd, env=env))

@@ -1,0 +1,6 @@
+"""repro: PANIGRAHAM-JAX — consistent non-blocking dynamic-graph operations
+(Chatterjee, Peri, Sa — CS.DC 2020) rebuilt as a multi-pod JAX framework,
+plus the assigned LM architecture zoo sharing the same distributed substrate.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,3 @@
+from .checkpointer import (  # noqa: F401
+    Checkpointer, latest_step, save_checkpoint, restore_checkpoint,
+)

@@ -1,0 +1,274 @@
+"""The graph query operations: BFS, SSSP (+negative-cycle check), BC.
+
+Non-recursive traversals (the paper's queue/stack machinery) become
+*edge-parallel frontier fixed points* under ``lax.while_loop``:
+
+  * BFS      -- boolean-semiring frontier expansion (scatter-or per level);
+  * SSSP     -- Bellman-Ford relax to fixed point, plus the paper's
+                CHECKNEGCYCLE: one extra relax pass; any improvement implies a
+                negative cycle reachable from the source;
+  * BC       -- Brandes: forward level/sigma counting, backward dependency
+                accumulation per level.
+
+Each query also has a *dense batched* variant (vmap over sources becomes a
+semiring matmul on the MXU -- see ``semiring.py`` / ``repro.kernels``), which
+is both the Ligra-style static baseline and the TPU-native path the paper's
+CPU design could not exploit.
+
+All functions are pure and jitted; masks/dists are fixed-shape ``[vcap]``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .graph_state import INF, NOKEY, GraphState, densify, live_edge_mask
+from . import semiring
+
+
+class BFSResult(NamedTuple):
+    ok: jax.Array        # bool[]  source was alive
+    reached: jax.Array   # bool[vcap]
+    dist: jax.Array      # int32[vcap]  (-1 = unreached)
+    parent: jax.Array    # int32[vcap]  (NOKEY = none; BFS-tree edges)
+
+
+class SSSPResult(NamedTuple):
+    ok: jax.Array        # bool[]  source alive and no negative cycle
+    negcycle: jax.Array  # bool[]
+    dist: jax.Array      # f32[vcap]  (+inf = unreachable)
+    parent: jax.Array    # int32[vcap]
+
+
+class BCResult(NamedTuple):
+    ok: jax.Array        # bool[]
+    delta: jax.Array     # f32[vcap]  dependencies delta(s|v) of source s
+    sigma: jax.Array     # f32[vcap]  shortest-path counts from s
+    level: jax.Array     # int32[vcap]
+
+
+def _edge_views(state: GraphState):
+    vcap = state.vcap
+    live = live_edge_mask(state)
+    srcc = jnp.where(live, state.esrc, 0)
+    dstc = jnp.where(live, state.edst, 0)
+    return live, srcc, dstc
+
+
+# --------------------------------- BFS -----------------------------------
+
+@jax.jit
+def bfs(state: GraphState, src) -> BFSResult:
+    src = jnp.asarray(src, jnp.int32)
+    vcap = state.vcap
+    live, srcc, dstc = _edge_views(state)
+    ok = state.alive[jnp.clip(src, 0, vcap - 1)] & (src >= 0) & (src < vcap)
+
+    reached0 = jnp.zeros((vcap,), jnp.bool_).at[src].set(ok, mode="drop")
+    dist0 = jnp.where(reached0, 0, -1).astype(jnp.int32)
+    parent0 = jnp.full((vcap,), NOKEY, jnp.int32)
+
+    def cond(carry):
+        _, _, _, frontier, lvl = carry
+        return frontier.any() & (lvl < vcap)
+
+    def body(carry):
+        reached, dist, parent, frontier, lvl = carry
+        act = live & frontier[srcc]
+        hit = jnp.zeros((vcap,), jnp.bool_).at[dstc].max(act, mode="drop")
+        newly = hit & ~reached
+        cand_par = jnp.full((vcap,), NOKEY, jnp.int32).at[dstc].min(
+            jnp.where(act, srcc, NOKEY), mode="drop")
+        parent = jnp.where(newly, cand_par, parent)
+        dist = jnp.where(newly, lvl + 1, dist)
+        return reached | newly, dist, parent, newly, lvl + 1
+
+    reached, dist, parent, _, _ = lax.while_loop(
+        cond, body, (reached0, dist0, parent0, reached0, jnp.int32(0)))
+    return BFSResult(ok, reached, dist, parent)
+
+
+# --------------------------------- SSSP ----------------------------------
+
+def _relax_once(dist, live, srcc, dstc, ew, vcap):
+    cand = jnp.full((vcap,), INF).at[dstc].min(
+        jnp.where(live, dist[srcc] + ew, INF), mode="drop")
+    return jnp.minimum(dist, cand)
+
+
+@jax.jit
+def sssp(state: GraphState, src) -> SSSPResult:
+    src = jnp.asarray(src, jnp.int32)
+    vcap = state.vcap
+    live, srcc, dstc = _edge_views(state)
+    ew = jnp.where(live, state.ew, INF)
+    ok_src = state.alive[jnp.clip(src, 0, vcap - 1)] & (src >= 0) & (src < vcap)
+
+    dist0 = jnp.full((vcap,), INF).at[src].set(
+        jnp.where(ok_src, 0.0, INF), mode="drop")
+
+    def cond(carry):
+        _, changed, it = carry
+        return changed & (it < vcap)
+
+    def body(carry):
+        dist, _, it = carry
+        nd = _relax_once(dist, live, srcc, dstc, ew, vcap)
+        return nd, (nd < dist).any(), it + 1
+
+    dist, _, _ = lax.while_loop(cond, body, (dist0, jnp.bool_(True), jnp.int32(0)))
+
+    # The paper's CHECKNEGCYCLE: one extra relax pass; strict improvement on
+    # any reachable vertex implies a negative cycle.
+    extra = _relax_once(dist, live, srcc, dstc, ew, vcap)
+    negcycle = (extra < dist).any()
+
+    # Parent reconstruction: any tight edge dist[v] == dist[u] + w(u,v);
+    # deterministic tie-break = min source id.
+    tight = live & (dist[dstc] == dist[srcc] + ew) & (dist[srcc] < INF)
+    parent = jnp.full((vcap,), NOKEY, jnp.int32).at[dstc].min(
+        jnp.where(tight, srcc, NOKEY), mode="drop")
+    parent = parent.at[jnp.clip(src, 0, vcap - 1)].set(NOKEY)
+    return SSSPResult(ok_src & ~negcycle, negcycle, dist, parent)
+
+
+# ---------------------------------- BC -----------------------------------
+
+@jax.jit
+def bc_dependencies(state: GraphState, src) -> BCResult:
+    """Brandes single-source dependency accumulation delta(src | .)."""
+    src = jnp.asarray(src, jnp.int32)
+    vcap = state.vcap
+    live, srcc, dstc = _edge_views(state)
+    ok = state.alive[jnp.clip(src, 0, vcap - 1)] & (src >= 0) & (src < vcap)
+
+    level0 = jnp.full((vcap,), -1, jnp.int32).at[src].set(
+        jnp.where(ok, 0, -1), mode="drop")
+    sigma0 = jnp.zeros((vcap,), jnp.float32).at[src].set(
+        jnp.where(ok, 1.0, 0.0), mode="drop")
+    front0 = level0 == 0
+
+    # Forward phase: levels + shortest-path counts.
+    def fcond(carry):
+        _, _, frontier, lvl = carry
+        return frontier.any() & (lvl < vcap)
+
+    def fbody(carry):
+        level, sigma, frontier, lvl = carry
+        act = live & frontier[srcc]
+        hit = jnp.zeros((vcap,), jnp.bool_).at[dstc].max(act, mode="drop")
+        newly = hit & (level < 0)
+        adds = jnp.zeros((vcap,), jnp.float32).at[dstc].add(
+            jnp.where(act, sigma[srcc], 0.0), mode="drop")
+        sigma = jnp.where(newly, adds, sigma)
+        level = jnp.where(newly, lvl + 1, level)
+        return level, sigma, newly, lvl + 1
+
+    level, sigma, _, maxl = lax.while_loop(
+        fcond, fbody, (level0, sigma0, front0, jnp.int32(0)))
+
+    # Backward phase: delta[u] += sum over tree edges (u,w) at level l->l+1
+    # of sigma[u]/sigma[w] * (1 + delta[w]), from the deepest level down.
+    sig_src = sigma[srcc]
+    sig_dst = jnp.where(sigma[dstc] > 0, sigma[dstc], 1.0)
+
+    def bcond(carry):
+        _, l = carry
+        return l >= 0
+
+    def bbody(carry):
+        delta, l = carry
+        on_lvl = live & (level[srcc] == l) & (level[dstc] == l + 1)
+        contrib = jnp.where(on_lvl, sig_src / sig_dst * (1.0 + delta[dstc]), 0.0)
+        delta = delta + jnp.zeros((vcap,), jnp.float32).at[srcc].add(
+            contrib, mode="drop")
+        return delta, l - 1
+
+    delta, _ = lax.while_loop(
+        bcond, bbody, (jnp.zeros((vcap,), jnp.float32), maxl - 1))
+    delta = jnp.where(level == 0, 0.0, delta)  # source contributes nothing
+    return BCResult(ok, delta, sigma, level)
+
+
+def bc(state: GraphState, v, sources=None) -> jax.Array:
+    """Betweenness centrality of ``v``: sum_s delta(s|v).
+
+    ``sources`` defaults to every alive vertex (exact Brandes).  Batched via
+    ``lax.map`` -- on the dense path this becomes semiring matmuls.
+    """
+    v = jnp.asarray(v, jnp.int32)
+    if sources is None:
+        sources = jnp.arange(state.vcap, dtype=jnp.int32)
+
+    def one(s):
+        r = bc_dependencies(state, s)
+        return jnp.where(r.ok, r.delta[jnp.clip(v, 0, state.vcap - 1)], 0.0)
+
+    vals = lax.map(one, jnp.asarray(sources, jnp.int32))
+    ok = state.alive[jnp.clip(v, 0, state.vcap - 1)]
+    return jnp.where(ok, jnp.sum(vals), jnp.nan)
+
+
+# ------------------------ dense batched variants --------------------------
+# vmap-over-sources == semiring matmuls: the MXU path (and the "static
+# parallel analytics" baseline corresponding to Ligra in the paper's study).
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def bfs_batched_dense(adj_mask: jax.Array, srcs: jax.Array,
+                      alive: jax.Array, use_kernel: bool = False):
+    """Multi-source BFS over a dense adjacency mask.  Returns dist[S, V]."""
+    V = adj_mask.shape[0]
+    S = srcs.shape[0]
+    a = (adj_mask & alive[:, None] & alive[None, :]).astype(jnp.float32)
+    ok = alive[jnp.clip(srcs, 0, V - 1)]
+    front0 = jax.nn.one_hot(srcs, V, dtype=jnp.float32) * ok[:, None]
+    dist0 = jnp.where(front0 > 0, 0, -1).astype(jnp.int32)
+
+    def cond(c):
+        _, front, lvl = c
+        return (front > 0).any() & (lvl < V)
+
+    def body(c):
+        dist, front, lvl = c
+        nxt = semiring.bool_mm(front, a, use_kernel=use_kernel)
+        newly = (nxt > 0) & (dist < 0)
+        dist = jnp.where(newly, lvl + 1, dist)
+        return dist, newly.astype(jnp.float32), lvl + 1
+
+    dist, _, _ = lax.while_loop(cond, body, (dist0, front0, jnp.int32(0)))
+    return dist
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def sssp_batched_dense(w_dense: jax.Array, srcs: jax.Array,
+                       alive: jax.Array, use_kernel: bool = False):
+    """Multi-source Bellman-Ford over dense weights.  Returns (dist[S,V], negcycle[S])."""
+    V = w_dense.shape[0]
+    big = jnp.where(alive[:, None] & alive[None, :], w_dense, INF)
+    ok = alive[jnp.clip(srcs, 0, V - 1)]
+    dist0 = jnp.where(
+        jax.nn.one_hot(srcs, V, dtype=jnp.float32) * ok[:, None] > 0, 0.0, INF)
+
+    def cond(c):
+        _, changed, it = c
+        return changed & (it < V)
+
+    def body(c):
+        dist, _, it = c
+        nd = jnp.minimum(dist, semiring.minplus_mm(dist, big, use_kernel=use_kernel))
+        return nd, (nd < dist).any(), it + 1
+
+    dist, _, _ = lax.while_loop(cond, body, (dist0, jnp.bool_(True), jnp.int32(0)))
+    extra = jnp.minimum(dist, semiring.minplus_mm(dist, big, use_kernel=use_kernel))
+    negcycle = ((extra < dist) & (extra < INF)).any(axis=1)
+    return dist, negcycle
+
+
+def dense_views(state: GraphState):
+    """Snapshot -> (adjacency mask, dense weights, alive) for batched queries."""
+    w = densify(state)
+    return w < INF, w, state.alive

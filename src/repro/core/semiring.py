@@ -1,0 +1,52 @@
+"""Semiring matmuls: the dense/MXU formulation of graph traversal.
+
+  * bool semiring  (or, and)        -> BFS frontier expansion
+  * tropical       (min, +)         -> SSSP relaxation
+  * counting       (+, x) on masks  -> sigma path counting (Brandes)
+
+``*_mm(..., use_kernel=True)`` dispatches to the Pallas TPU kernels in
+``repro.kernels`` (validated in interpret mode on CPU); the default path is
+pure jnp and serves as the oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_BLOCK = 128  # MXU-aligned logical tile for the blocked jnp fallbacks
+
+
+def bool_mm(f: jax.Array, a: jax.Array, use_kernel: bool = False) -> jax.Array:
+    """(S,V) x (V,V) boolean-semiring product, as f32 {0,1} masks."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.bool_mm(f, a)
+    return (jnp.dot(f, a, precision=jax.lax.Precision.HIGHEST) > 0).astype(jnp.float32)
+
+
+def minplus_mm(d: jax.Array, w: jax.Array, use_kernel: bool = False) -> jax.Array:
+    """(S,V) x (V,V) tropical product: out[s,j] = min_k d[s,k] + w[k,j]."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.minplus_mm(d, w)
+    # Blocked over k to bound the (S, K, V) broadcast working set.
+    V = w.shape[0]
+    blk = min(_BLOCK, V)
+    nb = -(-V // blk)
+    pad = nb * blk - V
+    dp = jnp.pad(d, ((0, 0), (0, pad)), constant_values=jnp.inf)
+    wp = jnp.pad(w, ((0, pad), (0, 0)), constant_values=jnp.inf)
+
+    def body(i, acc):
+        dk = jax.lax.dynamic_slice_in_dim(dp, i * blk, blk, axis=1)
+        wk = jax.lax.dynamic_slice_in_dim(wp, i * blk, blk, axis=0)
+        cand = jnp.min(dk[:, :, None] + wk[None, :, :], axis=1)
+        return jnp.minimum(acc, cand)
+
+    init = jnp.full((d.shape[0], w.shape[1]), jnp.inf, d.dtype)
+    return jax.lax.fori_loop(0, nb, body, init)
+
+
+def count_mm(s: jax.Array, a: jax.Array) -> jax.Array:
+    """(S,V) x (V,V) counting product (plain matmul on path counts)."""
+    return jnp.dot(s, a, precision=jax.lax.Precision.HIGHEST)

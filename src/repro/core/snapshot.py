@@ -1,0 +1,224 @@
+"""PANIGRAHAM framework: multi-scan/validate snapshots (OP / SCAN / CMPTREE).
+
+The paper's interface operation OP(v):
+
+    1. validate the query vertex is alive;
+    2. SCAN: repeatedly TREECOLLECT partial snapshots until two *consecutive*
+       collects compare equal (CMPTREE over (vertex set, parents, ecnt));
+    3. the matched collect is linearizable (LP = last read of the (m-1)-th
+       collect).
+
+Here a TREECOLLECT is an atomic jitted query over one committed MVCC state
+version; "interrupting updates" are the batches committed between collects
+(by the workload harness, or by other shards in the distributed setting).
+CMPTREE compares exactly what the paper compares:
+
+    * the reached vertex set            (vertex added/removed in window),
+    * the traversal-tree parents        (path changed),
+    * per-vertex ``ecnt`` of the snapshot region  (edge removed & re-added:
+      the ABA case version counters exist for).
+
+Note the global ``version`` is *deliberately not* compared: an update outside
+the query's snapshot region must not invalidate the query -- that selectivity
+is the point of the paper's SNode/ecnt design (and is what our benchmarks in
+``benchmarks/bench_scan_stats.py`` measure, mirroring the paper's Fig 12/13).
+
+Execution modes (paper section 5):
+    * PG-Cn  -- linearizable: double-collect until match;
+    * PG-Icn -- single collect, no validation (best-effort consistency).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .graph_state import NOKEY, GraphState
+from . import queries
+
+
+class Collect(NamedTuple):
+    """One TREECOLLECT: a query result + its validation vector."""
+    result: object        # BFSResult | SSSPResult | BCResult
+    reached: jax.Array    # bool[vcap]   snapshot region
+    parent: jax.Array     # int32[vcap]  traversal tree (NOKEY outside region)
+    ecnt: jax.Array       # int32[vcap]  ecnt masked to the region
+    payload: jax.Array    # f32[vcap]    dist/delta values masked to the region
+
+
+@jax.jit
+def cmp_tree(a: Collect, b: Collect) -> jax.Array:
+    """The paper's CMPTREE: equality of region, tree, ecnt (and payloads)."""
+    return (
+        jnp.array_equal(a.reached, b.reached)
+        & jnp.array_equal(a.parent, b.parent)
+        & jnp.array_equal(a.ecnt, b.ecnt)
+        & jnp.array_equal(a.payload, b.payload)
+    )
+
+
+# ----------------------------- collectors --------------------------------
+
+@jax.jit
+def collect_bfs(state: GraphState, src) -> Collect:
+    r = queries.bfs(state, src)
+    m = r.reached
+    return Collect(
+        result=r,
+        reached=m,
+        parent=jnp.where(m, r.parent, NOKEY),
+        ecnt=jnp.where(m, state.ecnt, 0),
+        payload=jnp.where(m, r.dist.astype(jnp.float32), 0.0),
+    )
+
+
+@jax.jit
+def collect_sssp(state: GraphState, src) -> Collect:
+    r = queries.sssp(state, src)
+    m = r.dist < jnp.inf
+    return Collect(
+        result=r,
+        reached=m,
+        parent=jnp.where(m, r.parent, NOKEY),
+        ecnt=jnp.where(m, state.ecnt, 0),
+        payload=jnp.where(m, r.dist, 0.0) + r.negcycle.astype(jnp.float32),
+    )
+
+
+@jax.jit
+def collect_bc(state: GraphState, src) -> Collect:
+    r = queries.bc_dependencies(state, src)
+    m = r.level >= 0
+    return Collect(
+        result=r,
+        reached=m,
+        parent=jnp.where(m, r.level, NOKEY),   # level array plays the tree role
+        ecnt=jnp.where(m, state.ecnt, 0),
+        payload=jnp.where(m, r.delta + r.sigma, 0.0),
+    )
+
+
+COLLECTORS: dict[str, Callable] = {
+    "bfs": collect_bfs,
+    "sssp": collect_sssp,
+    "bc": collect_bc,
+}
+
+
+# ----------------------------- OP drivers --------------------------------
+
+@dataclass
+class ScanStats:
+    """Per-query statistics mirroring the paper's Fig 12/13."""
+    collects: int = 0               # TREECOLLECT invocations in the SCAN
+    interrupting_updates: int = 0   # committed batches during the query
+    validated: bool = True
+
+
+@dataclass
+class StateRef:
+    """Mutable cell holding the latest committed state (the 'shared heap').
+
+    The update stream commits new versions into the ref; queries read whatever
+    version is current at each collect -- this is how "concurrency" manifests
+    at batch granularity in the functional setting.
+    """
+    state: GraphState
+    commits: int = 0
+    on_read: list = field(default_factory=list)  # callbacks, for harnesses
+
+    def commit(self, new_state: GraphState) -> None:
+        self.state = new_state
+        self.commits += 1
+
+    def read(self) -> GraphState:
+        for cb in self.on_read:
+            cb(self)
+        return self.state
+
+
+def op_linearizable(ref: StateRef, query: str, src, max_collects: int = 64):
+    """PG-Cn: the paper's OP -- double-collect until CMPTREE matches.
+
+    Returns ``(Collect | None, ScanStats)``.  None when the source vertex is
+    not alive at the first read (the paper's NULL return).
+    """
+    coll = COLLECTORS[query]
+    stats = ScanStats()
+    commits0 = ref.commits
+
+    state = ref.read()
+    src_i = int(src)
+    if not (0 <= src_i < state.vcap) or not bool(state.alive[src_i]):
+        stats.interrupting_updates = ref.commits - commits0
+        return None, stats
+
+    prev = coll(state, src)
+    stats.collects = 1
+    while stats.collects < max_collects:
+        cur = coll(ref.read(), src)
+        stats.collects += 1
+        if bool(cmp_tree(prev, cur)):
+            stats.interrupting_updates = ref.commits - commits0
+            return cur, stats
+        prev = cur
+    stats.validated = False
+    stats.interrupting_updates = ref.commits - commits0
+    return prev, stats
+
+
+def op_inconsistent(ref: StateRef, query: str, src):
+    """PG-Icn: single collect, no validation (the throughput/consistency dial)."""
+    state = ref.read()
+    if not (0 <= int(src) < state.vcap) or not bool(state.alive[int(src)]):
+        return None, ScanStats(collects=0, validated=False)
+    return COLLECTORS[query](state, src), ScanStats(collects=1, validated=False)
+
+
+# ------------------- fully-jitted PG-Cn (on-device retry loop) ------------
+
+def op_linearizable_jit(state: GraphState, batches, src,
+                        max_collects: int = 32):
+    """Beyond-paper: the whole OP pipeline — update commits, collects, and
+    CMPTREE retries — inside ONE jitted ``lax.while_loop``, so the snapshot
+    protocol runs entirely on-device (no host round-trip per collect; on a
+    real TPU the retry loop costs device steps, not dispatch latency).
+
+    ``batches``: a stacked OpBatch (leading axis = pending update batches)
+    committed one per collect, modelling the paper's concurrent updaters.
+    Returns ``(final_state, Collect, collects_used, validated)``.
+    """
+    import jax
+    from jax import lax
+    from .updates import apply_batch
+
+    n_batches = batches.kind.shape[0]
+
+    def one_collect(st):
+        return collect_bfs(st, src)
+
+    def commit_next(st, i):
+        batch = jax.tree.map(lambda x: x[jnp.minimum(i, n_batches - 1)],
+                             batches)
+        new_st, _, _ = apply_batch(st, batch)
+        return jax.tree.map(
+            lambda a, b: jnp.where(i < n_batches, a, b), new_st, st)
+
+    c0 = one_collect(state)
+
+    def cond(carry):
+        st, prev, i, matched = carry
+        return (~matched) & (i < max_collects)
+
+    def body(carry):
+        st, prev, i, _ = carry
+        st = commit_next(st, i - 1)          # an "interrupting" update
+        cur = one_collect(st)
+        matched = cmp_tree(prev, cur)
+        return st, cur, i + 1, matched
+
+    st, coll, collects, matched = lax.while_loop(
+        cond, body, (state, c0, jnp.int32(1), jnp.bool_(False)))
+    return st, coll, collects, matched

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  * ``bool_mm``      -- boolean-semiring matmul (batched BFS, MXU)
+  * ``minplus_mm``   -- tropical matmul (batched SSSP relax, VPU)
+  * ``flash_attention`` -- causal GQA flash attention (LM train/prefill)
+
+Each kernel: ``<name>.py`` (pl.pallas_call + BlockSpec), validated against
+the pure-jnp oracle in ``ref.py``; ``ops.py`` holds the jit'd wrappers.
+"""
+from . import ops, ref  # noqa: F401

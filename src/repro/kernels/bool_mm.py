@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: boolean-semiring blocked matmul (BFS frontier expansion).
+
+out[s, j] = OR_k f[s, k] AND a[k, j], computed as an f32 {0,1} mask matmul on
+the MXU with a threshold epilogue.  Grid = (S/bm, V/bn, V/bk) with k innermost
+so the output tile accumulates in VMEM across the k sweep (revisiting).
+
+Block sizes are MXU-aligned (128x128 tiles, bk=512 to amortize the epilogue);
+VMEM working set per step = bm*bk + bk*bn + bm*bn floats ~= (128*512*2 +
+128*128)*4B ~= 0.6 MB, far under the ~16 MB/core budget, leaving room for
+double buffering of the HBM->VMEM pipeline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 512
+
+
+def _kernel(f_ref, a_ref, o_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(f_ref[...], a_ref[...],
+                          preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[...] = (o_ref[...] > 0).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def bool_mm(f: jax.Array, a: jax.Array, *, bm: int = DEFAULT_BM,
+            bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+            interpret: bool = True) -> jax.Array:
+    """f: [S, V] {0,1} f32; a: [V, V'] {0,1} f32 -> [S, V'] {0,1} f32.
+
+    Shapes must be multiples of the block sizes (``ops.bool_mm`` pads).
+    """
+    s, kdim = f.shape
+    _, n = a.shape
+    bm, bn, bk = min(bm, s), min(bn, n), min(bk, kdim)
+    grid = (s // bm, n // bn, kdim // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((s, n), jnp.float32),
+        interpret=interpret,
+    )(f, a)

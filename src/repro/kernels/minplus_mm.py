@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: tropical (min,+) blocked matmul (SSSP relaxation).
+
+out[s, j] = min_k d[s, k] + w[k, j].  No MXU analogue exists for (min,+), so
+the inner product runs on the VPU via a broadcast-add + min-reduce over a
+*small* k slab (bk=16) to bound the (bm, bk, bn) broadcast working set:
+128*16*128*4B = 1 MB in VMEM.  Grid = (S/bm, V/bn, V/bk), k innermost with
+output-tile accumulation (running elementwise min) across the k sweep.
+
++inf entries (absent edges / unreached sources) flow through min() untouched,
+so the tombstone encoding of the graph state needs no special-casing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 16
+
+
+def _kernel(d_ref, w_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, jnp.inf)
+
+    d = d_ref[...]          # (bm, bk)
+    w = w_ref[...]          # (bk, bn)
+    cand = jnp.min(d[:, :, None] + w[None, :, :], axis=1)
+    o_ref[...] = jnp.minimum(o_ref[...], cand)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def minplus_mm(d: jax.Array, w: jax.Array, *, bm: int = DEFAULT_BM,
+               bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+               interpret: bool = True) -> jax.Array:
+    """d: [S, V] f32; w: [V, V'] f32 -> [S, V'] f32 (min-plus product)."""
+    s, kdim = d.shape
+    _, n = w.shape
+    bm, bn, bk = min(bm, s), min(bn, n), min(bk, kdim)
+    grid = (s // bm, n // bn, kdim // bk)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((s, n), jnp.float32),
+        interpret=interpret,
+    )(d, w)

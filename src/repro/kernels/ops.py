@@ -1,0 +1,52 @@
+"""jit'd public wrappers around the Pallas kernels (padding + dispatch).
+
+On a real TPU these run compiled (``interpret=False``); in this CPU container
+they execute the kernel bodies in interpret mode, validated against
+``ref.py`` in ``tests/test_kernels.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import bool_mm as _bool
+from . import minplus_mm as _minplus
+from . import flash_attention as _flash
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad2(x, bm, bn, value=0.0):
+    m, n = x.shape
+    mp, np_ = -(-m // bm) * bm, -(-n // bn) * bn
+    return jnp.pad(x, ((0, mp - m), (0, np_ - n)), constant_values=value), (m, n)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def bool_mm(f: jax.Array, a: jax.Array, bm: int = 128, bn: int = 128,
+            bk: int = 512) -> jax.Array:
+    """Padded boolean-semiring matmul; any (S, V) x (V, V') shapes."""
+    fp, (s, _) = _pad2(f.astype(jnp.float32), bm, bk)
+    ap, (_, n) = _pad2(a.astype(jnp.float32), bk, bn)
+    out = _bool.bool_mm(fp, ap, bm=bm, bn=bn, bk=bk, interpret=INTERPRET)
+    return out[:s, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def minplus_mm(d: jax.Array, w: jax.Array, bm: int = 128, bn: int = 128,
+               bk: int = 16) -> jax.Array:
+    """Padded tropical matmul; +inf padding is the semiring identity."""
+    dp, (s, _) = _pad2(d, bm, bk, value=jnp.inf)
+    wp, (_, n) = _pad2(w, bk, bn, value=jnp.inf)
+    out = _minplus.minplus_mm(dp, wp, bm=bm, bn=bn, bk=bk, interpret=INTERPRET)
+    return out[:s, :n]
+
+
+def flash_attention(q, k, v, causal: bool = True, sm_scale=None, window=None,
+                    bq: int = 128, bk: int = 128):
+    """Causal GQA flash attention; q [B,Hq,S,D], kv [B,Hkv,S,D]."""
+    return _flash.flash_attention(
+        q, k, v, causal=causal, sm_scale=sm_scale, window=window,
+        bq=bq, bk=bk, interpret=INTERPRET)

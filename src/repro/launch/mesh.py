@@ -1,0 +1,86 @@
+"""Production mesh construction and sharding-spec sanitization.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 chips per pod; the multi-pod mesh adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    """The data-parallel axes: batch shards over (pod, data)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def sanitize_spec(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Drop axes that are absent from the mesh or don't divide the dim."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec = tuple(spec) + (None,) * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, spec):
+        if entry is None:
+            out.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        names = tuple(n for n in names if n in sizes)
+        while names and dim % math.prod(sizes[n] for n in names) != 0:
+            names = names[:-1]
+        if not names:
+            out.append(None)
+        elif len(names) == 1:
+            out.append(names[0])
+        else:
+            out.append(names)
+    return P(*out)
+
+
+def sanitize_shardings(specs, shapes, mesh: Mesh):
+    """Tree of desired P -> tree of NamedSharding, validated against mesh.
+
+    ``shapes`` is a matching tree of arrays / ShapeDtypeStructs.
+    """
+    def one(spec, like):
+        if spec is None:
+            spec = P()
+        return NamedSharding(mesh, sanitize_spec(spec, like.shape, mesh))
+
+    return jax.tree.map(one, specs, shapes,
+                        is_leaf=lambda s: isinstance(s, P) or s is None)
+
+
+def batch_shardings(batch_shapes: dict, mesh: Mesh,
+                    full_batch: bool = False):
+    """Input batches: leading dim over the DP axes; training shards the
+    batch over EVERY axis (order data, model, pod — drop-from-end keeps
+    (data, model) when the pod axis doesn't divide, giving hierarchical DP
+    with pod-replicated batches).  M-RoPE positions carry a leading section
+    axis, so the batch dim is axis 1 there."""
+    if full_batch:
+        dp = tuple(a for a in ("data", "model", "pod")
+                   if a in mesh.axis_names)
+    else:
+        dp = dp_axes(mesh)
+    out = {}
+    for k, v in batch_shapes.items():
+        if k == "positions":
+            spec = P(None, dp)
+        elif v.ndim >= 1:
+            spec = P(dp)
+        else:
+            spec = P()
+        out[k] = NamedSharding(mesh, sanitize_spec(spec, v.shape, mesh))
+    return out

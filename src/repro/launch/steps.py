@@ -1,0 +1,66 @@
+"""jit-able step functions: train / prefill / decode (+ their shardings)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import Model
+from repro.optim import adamw_init, adamw_update, warmup_cosine
+from repro.optim.compress import compress_grads
+from . import mesh as meshlib
+
+
+def build_train_step(model: Model, *, peak_lr: float = 3e-4,
+                     warmup_steps: int = 100, total_steps: int = 10_000,
+                     weight_decay: float = 0.1, compress: bool = False):
+    def train_step(params, opt, batch, comp_state=None):
+        loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+        if compress:
+            grads, comp_state = compress_grads(grads, comp_state)
+        lr = warmup_cosine(opt.step, peak_lr=peak_lr,
+                           warmup_steps=warmup_steps,
+                           total_steps=total_steps)
+        params, opt = adamw_update(grads, opt, params, lr=lr,
+                                   weight_decay=weight_decay)
+        metrics = {"loss": loss, "lr": lr}
+        if compress:
+            return params, opt, comp_state, metrics
+        return params, opt, metrics
+
+    return train_step
+
+
+def build_prefill_step(model: Model):
+    def prefill_step(params, cache, batch):
+        kw = {k: batch[k] for k in ("positions", "frames") if k in batch}
+        return model.prefill(params, batch["tokens"], cache, **kw)
+
+    return prefill_step
+
+
+def build_decode_step(model: Model):
+    def decode_step(params, cache, batch):
+        kw = {k: batch[k] for k in ("positions",) if k in batch}
+        return model.decode_step(params, batch["tokens"], cache, **kw)
+
+    return decode_step
+
+
+def train_state_shardings(model: Model, mesh, params_sds, opt_sds):
+    pspecs = model.specs()
+    p_sh = meshlib.sanitize_shardings(pspecs, params_sds, mesh)
+    o_sh = type(opt_sds)(
+        step=NamedSharding(mesh, P()),
+        m=meshlib.sanitize_shardings(pspecs, opt_sds.m, mesh),
+        v=meshlib.sanitize_shardings(pspecs, opt_sds.v, mesh),
+    )
+    return p_sh, o_sh
+
+
+def cache_shardings(model: Model, mesh, cache_sds):
+    specs = model.cache_specs()
+    return meshlib.sanitize_shardings(specs, cache_sds, mesh)

@@ -1,0 +1,131 @@
+"""Trainer CLI: data pipeline + model + AdamW + checkpoint/restart.
+
+On real hardware this runs under the production mesh (``--mesh single|multi``)
+with the same sharding rules the dry-run proves out; on this CPU container
+use ``--reduced`` for an end-to-end run of a small same-family model:
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3_32b --reduced \
+        --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+Fault tolerance: checkpoints every ``--ckpt-every`` steps (async), resumes
+from the latest checkpoint automatically, straggler steps are flagged by
+the heartbeat monitor, data is a pure function of the step index (restart
+never replays or skips tokens).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced as make_reduced
+from repro.data import SyntheticTokens, shard_batch
+from repro.models import get_model
+from repro.models.sharding_ctx import sharding_context
+from repro.optim import adamw_init
+from repro.runtime import HeartbeatMonitor
+from repro.checkpoint import Checkpointer
+from . import mesh as meshlib
+from . import steps as steplib
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_32b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--mesh", choices=["none", "single", "multi"],
+                    default="none")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = make_reduced(cfg)
+        cfg = dataclasses.replace(cfg, remat=True)
+    model = get_model(cfg)
+
+    mesh = None
+    if args.mesh != "none":
+        mesh = meshlib.make_production_mesh(multi_pod=args.mesh == "multi")
+
+    ds = SyntheticTokens(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                         global_batch=args.batch, seed=0)
+
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    opt = adamw_init(params, cfg.moment_dtype)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"[train] {cfg.name}: {n_params:,} params, "
+          f"{jax.device_count()} device(s)")
+
+    step_fn = steplib.build_train_step(
+        model, peak_lr=args.lr, warmup_steps=max(2, args.steps // 10),
+        total_steps=args.steps, compress=args.compress_grads)
+    if args.compress_grads:
+        from repro.optim import compress_init
+        comp = compress_init(params)
+    train_step = jax.jit(step_fn)
+
+    ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+    start = 0
+    if ckpt:
+        state_like = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            {"params": params, "opt": opt})
+        s, restored = ckpt.restore_latest(state_like)
+        if restored is not None:
+            params, opt = restored["params"], restored["opt"]
+            start = s
+            print(f"[train] resumed from step {start}")
+
+    mon = HeartbeatMonitor(on_straggler=lambda s, dt, med: print(
+        f"[straggler] step {s}: {dt:.3f}s vs median {med:.3f}s"))
+
+    ctx = sharding_context(mesh, full_batch=True) if mesh else _null()
+    with ctx:
+        t_start = time.time()
+        for step in range(start, args.steps):
+            batch = shard_batch(ds.batch_at(step), mesh)
+            mon.start()
+            if args.compress_grads:
+                params, opt, comp, metrics = train_step(params, opt, batch,
+                                                        comp)
+            else:
+                params, opt, metrics = train_step(params, opt, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = mon.stop(step)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"step {step:5d} loss {float(metrics['loss']):8.4f} "
+                      f"lr {float(metrics['lr']):.2e} {dt*1e3:7.1f} ms")
+            if ckpt and (step + 1) % args.ckpt_every == 0:
+                ckpt.save(step + 1, {"params": params, "opt": opt})
+        if ckpt:
+            ckpt.save(args.steps, {"params": params, "opt": opt},
+                      blocking=True)
+    tok_s = (args.steps - start) * args.batch * args.seq \
+        / max(time.time() - t_start, 1e-9)
+    print(f"[train] done: {tok_s:,.0f} tokens/s, "
+          f"stragglers={mon.stragglers}")
+
+
+class _null:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+if __name__ == "__main__":
+    main()

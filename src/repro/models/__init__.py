@@ -1,0 +1,3 @@
+"""Assigned-architecture model zoo sharing one functional layer library."""
+from .config import ModelConfig  # noqa: F401
+from .registry import Model, get_model, input_specs  # noqa: F401

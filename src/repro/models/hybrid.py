@@ -1,0 +1,201 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a weight-SHARED attention block.
+
+Structure: the layer stack is organised as super-blocks of ``attn_every``
+Mamba2 layers followed by one invocation of a single shared transformer
+block (same weights at every invocation point, as in Zamba2).  Remaining
+``L % attn_every`` Mamba2 layers run after the scan.
+
+Simplification vs the released Zamba2 (documented in DESIGN.md): the shared
+block attends over the hidden stream only (Zamba2 concatenates the original
+embedding and uses 2x-width attention + LoRA adapters per invocation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+from . import layers as L
+from . import ssm as S
+
+
+def _n_super(cfg: ModelConfig):
+    return cfg.num_layers // cfg.attn_every, cfg.num_layers % cfg.attn_every
+
+
+def init(key, cfg: ModelConfig):
+    ke, km, ka, kt = jax.random.split(key, 4)
+    ns, rem = _n_super(cfg)
+
+    def one(k):
+        p = S.init_ssm_block(k, cfg)
+        n1, _ = L.init_rmsnorm(cfg.d_model, cfg.dtype)
+        return {"mixer": p, "ln": n1}
+
+    stack = jax.vmap(one)(jax.random.split(km, ns * cfg.attn_every))
+    stack = jax.tree.map(
+        lambda x: x.reshape((ns, cfg.attn_every) + x.shape[1:]), stack)
+    tail = jax.vmap(one)(jax.random.split(kt, rem)) if rem else None
+
+    shared_attn = L.init_attention(ka, cfg)
+    shared_mlp = L.init_mlp(jax.random.fold_in(ka, 1), cfg)
+    n1, _ = L.init_rmsnorm(cfg.d_model, cfg.dtype)
+    n2, _ = L.init_rmsnorm(cfg.d_model, cfg.dtype)
+    fn, _ = L.init_rmsnorm(cfg.d_model, cfg.dtype)
+    params = {
+        "embed": L.init_embed(ke, cfg),
+        "lm_head": L.init_unembed(jax.random.fold_in(ke, 7), cfg),
+        "blocks": stack,
+        "shared": {"attn": shared_attn, "mlp": shared_mlp,
+                   "ln1": n1, "ln2": n2},
+        "final_norm": fn,
+    }
+    if tail is not None:
+        params["tail"] = tail
+    return params
+
+
+def specs(cfg: ModelConfig):
+    ns, rem = _n_super(cfg)
+    one = {"mixer": S.ssm_block_specs(cfg), "ln": P(None)}
+    stack = jax.tree.map(lambda s: P(*((None, None) + tuple(s))), one,
+                         is_leaf=lambda s: isinstance(s, P))
+    out = {
+        "embed": L.embed_specs(cfg),
+        "lm_head": L.unembed_specs(cfg),
+        "blocks": stack,
+        "shared": {"attn": L.attention_specs(cfg), "mlp": L.mlp_specs(cfg),
+                   "ln1": P(None), "ln2": P(None)},
+        "final_norm": P(None),
+    }
+    if rem:
+        out["tail"] = jax.tree.map(lambda s: P(*((None,) + tuple(s))), one,
+                                   is_leaf=lambda s: isinstance(s, P))
+    return out
+
+
+def _shared_block(sp, h, cfg, cache, positions):
+    a, nc = L.attention(sp["attn"], L.rms_norm(h, sp["ln1"], cfg.norm_eps),
+                        cfg, positions=positions, cache=cache)
+    h = h + a
+    h = h + L.mlp(sp["mlp"], L.rms_norm(h, sp["ln2"], cfg.norm_eps))
+    return h, nc
+
+
+def forward(params, tokens, cfg: ModelConfig, caches=None, positions=None):
+    """caches: None or dict(ssm=[ns,ae,...], attn={k,v,idx}[ns], tail=[rem,...])."""
+    from .sharding_ctx import constrain
+    h = constrain(L.embed(params["embed"], tokens), "dp", None, None)
+    ns, rem = _n_super(cfg)
+    sp = params["shared"]
+
+    def mamba_sub(hh, lp, cache):
+        o, nc = S.mamba_block(lp["mixer"],
+                              L.rms_norm(hh, lp["ln"], cfg.norm_eps), cfg,
+                              cache)
+        return hh + o, nc
+
+    if caches is None:
+        def super_body(hh, bp):
+            hh = lax.optimization_barrier(hh)
+            def inner(h2, lp):
+                h2, _ = mamba_sub(h2, lp, None)
+                return h2, None
+            hh, _ = lax.scan(inner, hh, bp, unroll=cfg.scan_unroll)
+            hh, _ = _shared_block(sp, hh, cfg, None, positions)
+            return hh, None
+
+        super_body = jax.checkpoint(super_body) if cfg.remat else super_body
+        h, _ = lax.scan(super_body, h, params["blocks"],
+                        unroll=cfg.scan_unroll)
+        if rem:
+            def inner(h2, lp):
+                h2, _ = mamba_sub(h2, lp, None)
+                return h2, None
+            h, _ = lax.scan(inner, h, params["tail"],
+                            unroll=cfg.scan_unroll)
+        new_caches = None
+    else:
+        def super_body(hh, xs):
+            bp, ssm_c, attn_c = xs
+            def inner(h2, x2):
+                lp, cc = x2
+                return mamba_sub(h2, lp, cc)
+            hh, ssm_nc = lax.scan(inner, hh, (bp, ssm_c),
+                                  unroll=cfg.scan_unroll)
+            hh, attn_nc = _shared_block(sp, hh, cfg, attn_c, positions)
+            return hh, (ssm_nc, attn_nc)
+
+        h, (ssm_nc, attn_nc) = lax.scan(
+            super_body, h, (params["blocks"], caches["ssm"], caches["attn"]),
+            unroll=cfg.scan_unroll)
+        tail_nc = None
+        if rem:
+            def inner(h2, x2):
+                lp, cc = x2
+                return mamba_sub(h2, lp, cc)
+            h, tail_nc = lax.scan(inner, h, (params["tail"], caches["tail"]),
+                                  unroll=cfg.scan_unroll)
+        new_caches = {"ssm": ssm_nc, "attn": attn_nc, "tail": tail_nc}
+    return L.rms_norm(h, params["final_norm"], cfg.norm_eps), new_caches
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    h, _ = forward(params, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    mask = (targets != 0).astype(jnp.float32)
+    nll, cnt = L.unembed_chunked_xent(params["lm_head"], h, targets, mask,
+                                      cfg.xent_chunk)
+    return nll / jnp.maximum(cnt, 1.0)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    ns, rem = _n_super(cfg)
+    ssm_one = S.init_ssm_cache(cfg, batch, dtype)
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    out = {
+        "ssm": jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None, None],
+                                       (ns, cfg.attn_every) + x.shape),
+            ssm_one),
+        "attn": {
+            "k": jnp.zeros((ns, batch, kv, max_len, hd), dtype),
+            "v": jnp.zeros((ns, batch, kv, max_len, hd), dtype),
+            "idx": jnp.zeros((ns,), jnp.int32),
+        },
+        "tail": jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (rem,) + x.shape), ssm_one)
+        if rem else None,
+    }
+    return out
+
+
+def cache_specs(cfg: ModelConfig):
+    ns, rem = _n_super(cfg)
+    sone = S.ssm_cache_specs(cfg)
+    out = {
+        "ssm": jax.tree.map(lambda s: P(*((None, None) + tuple(s))), sone,
+                            is_leaf=lambda s: isinstance(s, P)),
+        "attn": {
+            "k": P(None, L.FSDP, None, L.TP, None),
+            "v": P(None, L.FSDP, None, L.TP, None),
+            "idx": P(None),
+        },
+        "tail": jax.tree.map(lambda s: P(*((None,) + tuple(s))), sone,
+                             is_leaf=lambda s: isinstance(s, P))
+        if rem else None,
+    }
+    return out
+
+
+def prefill(params, tokens, cfg: ModelConfig, cache, positions=None):
+    h, nc = forward(params, tokens, cfg, caches=cache, positions=positions)
+    return L.unembed_logits(params["lm_head"], h[:, -1:, :]), nc
+
+
+def decode_step(params, tokens, cfg: ModelConfig, cache, positions=None):
+    return prefill(params, tokens, cfg, cache, positions)

@@ -1,0 +1,243 @@
+"""Mixture-of-Experts with REAL expert parallelism (shard_map + all-to-all).
+
+Two implementations behind one ``moe()`` entry point:
+
+  * ``_moe_shard_map`` — the production path, used whenever a sharding
+    context with (data, model) axes is active.  Experts are sharded over
+    ``data`` (EP) and each expert's FFN over ``model`` (TP).  Tokens travel
+    to their expert's owner row via an explicit ``lax.all_to_all`` with
+    per-destination capacity buckets, run through the owner's experts, and
+    return via the reverse all-to-all; the TP partial outputs merge with one
+    psum.  This is the canonical MoE dance — under plain GSPMD the
+    data-dependent scatter/gather dispatch is unpartitionable and silently
+    replicates the full global token buffer on every chip (measured: 160
+    GiB/chip on llama4-maverick train_4k).
+  * ``_moe_dense`` — pure-jnp capacity dispatch (scatter into [E, C, d]),
+    used on single-device runs (unit tests, CPU examples) and as the oracle
+    the shard_map path is tested against.
+
+Both drop tokens beyond capacity (standard capacity-factor semantics) and
+add a Switch-style load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+from .layers import FSDP, TP, _init
+from . import sharding_ctx
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": _init(ks[0], (d, e), jnp.float32),
+        "wi": _init(ks[1], (e, d, ff), cfg.dtype),
+        "wg": _init(ks[2], (e, d, ff), cfg.dtype),
+        "wo": _init(ks[3], (e, ff, d), cfg.dtype, scale=ff ** -0.5),
+    }
+
+
+def moe_specs(cfg: ModelConfig):
+    # Experts over the data axis (EP), expert-FFN hidden over model (TP).
+    return {
+        "router": P(None, None),
+        "wi": P(FSDP, None, TP),
+        "wg": P(FSDP, None, TP),
+        "wo": P(FSDP, TP, None),
+    }
+
+
+def _route(xt, router, e, k):
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), router)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(me * ce)
+    return gate, idx, aux
+
+
+def _positions_in_bucket(bucket_ids, n_buckets):
+    """Rank of each element within its bucket (exclusive cumsum of one-hot)."""
+    oh = (bucket_ids[:, None] == jnp.arange(n_buckets)[None, :]) \
+        .astype(jnp.int32)
+    return (jnp.cumsum(oh, axis=0) - oh)[
+        jnp.arange(bucket_ids.shape[0]), jnp.clip(bucket_ids, 0, n_buckets - 1)]
+
+
+@jax.custom_vjp
+def take_rows(x, idx, inv):
+    """``x[idx]`` with out-of-range -> 0, whose TRANSPOSE IS ALSO A GATHER.
+
+    ``inv [N, K]``: for each row of x, the (up to K) output rows sourcing it
+    (out-of-range = none).  The standard gather VJP is a scatter-add, whose
+    XLA lowering materializes payload-sized f32/u32 helper buffers (~16
+    GiB/layer for the MoE dispatch); with the inverse map supplied both
+    directions are fill-gathers.
+    """
+    return x.at[idx].get(mode="fill", fill_value=0)
+
+
+def _take_rows_fwd(x, idx, inv):
+    return take_rows(x, idx, inv), (inv, jnp.zeros((), x.dtype))
+
+
+def _take_rows_bwd(res, g):
+    inv, probe = res
+    dx = sum(g.at[inv[:, j]].get(mode="fill", fill_value=0)
+             for j in range(inv.shape[1]))
+    return dx.astype(probe.dtype), None, None
+
+
+take_rows.defvjp(_take_rows_fwd, _take_rows_bwd)
+
+
+def _moe_dense(p, x, cfg: ModelConfig):
+    """Single-device capacity dispatch (also the shard_map oracle)."""
+    b, s, d = x.shape
+    t, k, e = b * s, cfg.top_k, cfg.num_experts
+    cap = max(1, int(t * k * cfg.capacity_factor / e))
+
+    xt = x.reshape(t, d)
+    gate, idx, aux = _route(xt, p["router"], e, k)
+    flat_e = idx.reshape(t * k)
+    pos = _positions_in_bucket(flat_e, e)
+    keep = pos < cap
+    posc = jnp.where(keep, pos, cap)
+    tok = jnp.arange(t * k, dtype=jnp.int32) // k
+
+    buf = jnp.zeros((e, cap, d), x.dtype).at[
+        jnp.where(keep, flat_e, e), posc].set(xt[tok], mode="drop")
+    hidden = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"])) \
+        * jnp.einsum("ecd,edf->ecf", buf, p["wi"])
+    eout = jnp.einsum("ecf,efd->ecd", hidden, p["wo"])
+
+    gathered = eout[jnp.where(keep, flat_e, 0), jnp.where(keep, posc, 0)]
+    wts = (gate.reshape(t * k) * keep).astype(x.dtype)
+    out = ((gathered * wts[:, None]).reshape(t, k, d)).sum(axis=1)
+    return out.reshape(b, s, d), aux
+
+
+def _moe_shard_map(p, x, cfg: ModelConfig, mesh):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    nd, nm = sizes["data"], sizes["model"]
+    e, d, k = cfg.num_experts, cfg.d_model, cfg.top_k
+    e_row = e // nd              # experts owned per data row
+    b, s, _ = x.shape
+    # Training shards the batch over (data, model); every model column of a
+    # data row must see the row's full token set (the TP psum merges their
+    # ff shards), so the body all-gathers over 'model' INSIDE the manual
+    # region and is checkpointed there: the only saved residual per layer is
+    # the (data, model)-sharded input slice, not the gathered buffers —
+    # shard_map internals are opaque to the outer scan-level remat.
+    gather_model = (b % (nd * nm) == 0)
+
+    def body(xin, router, wi, wg, wo):
+        if gather_model:
+            xl = lax.all_gather(xin, "model", axis=0, tiled=True)
+        else:
+            xl = xin
+        bl = xl.shape[0]
+        tl = bl * s
+        xt = xl.reshape(tl, d)
+        gate, idx, aux = _route(xt, router, e, k)
+        flat_e = idx.reshape(tl * k)
+        row = flat_e // e_row                       # owner data-row
+        le = flat_e % e_row                         # expert id within owner
+
+        # ---- outbound: per-destination-row capacity buckets --------------
+        # All payload movement uses take_rows (gather both ways); the only
+        # scatters are tiny int32 inverse-map builds.
+        cap = max(1, -(-tl * k * int(cfg.capacity_factor * 100) // 100 // nd))
+        tk = tl * k
+        pos = _positions_in_bucket(row, nd)
+        keep = pos < cap
+        slot_of = jnp.where(keep, row * cap + pos, nd * cap)   # [tk]
+        tr = nd * cap
+        slot_src = jnp.full((tr,), tk, jnp.int32).at[slot_of].set(
+            jnp.arange(tk, dtype=jnp.int32), mode="drop", unique_indices=True)
+
+        send_x = take_rows(
+            xt, jnp.where(slot_src < tk, slot_src // k, tl),
+            slot_of.reshape(tl, k))
+        send_le = jnp.full((tr,), -1, jnp.int32).at[slot_of].set(
+            le, mode="drop", unique_indices=True)
+
+        recv_x = lax.all_to_all(send_x, "data", 0, 0, tiled=True)
+        recv_le = lax.all_to_all(send_le, "data", 0, 0, tiled=True)
+
+        # ---- owner side: per-expert capacity buffers ----------------------
+        valid = recv_le >= 0
+        c2 = max(1, -(-tr * 13 // (10 * e_row)))    # 1.3x local slack
+        lec = jnp.where(valid, recv_le, e_row)
+        pos2 = _positions_in_bucket(lec, e_row)
+        keep2 = valid & (pos2 < c2)
+        eslot_of = jnp.where(keep2, lec * c2 + pos2, e_row * c2)  # [tr]
+        slot_tok = jnp.full((e_row * c2,), tr, jnp.int32).at[eslot_of].set(
+            jnp.arange(tr, dtype=jnp.int32), mode="drop", unique_indices=True)
+        buf = take_rows(recv_x, slot_tok, eslot_of[:, None]) \
+            .reshape(e_row, c2, d)
+
+        hidden = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg)) \
+            * jnp.einsum("ecd,edf->ecf", buf, wi)
+        part = jnp.einsum("ecf,efd->ecd", hidden, wo)
+        part = lax.psum(part, "model")              # merge TP ff shards
+
+        y_recv = take_rows(part.reshape(e_row * c2, d), eslot_of,
+                           slot_tok[:, None])
+
+        # ---- return trip + combine ---------------------------------------
+        y_send = lax.all_to_all(y_recv, "data", 0, 0, tiled=True)
+        y_slot = take_rows(y_send, slot_of, slot_src[:, None])   # [tk, d]
+        wts = (gate * keep.reshape(tl, k).astype(gate.dtype)).astype(x.dtype)
+        y_tok = (y_slot.reshape(tl, k, d) * wts[:, :, None]).sum(axis=1)
+        aux = lax.pmean(aux, "data")
+        y = y_tok.reshape(bl, s, d)
+        if gather_model:
+            c = lax.axis_index("model")
+            own = bl // nm
+            y = lax.dynamic_slice_in_dim(y, c * own, own, axis=0)
+        return y, aux
+
+    body = jax.checkpoint(body)
+    # ALL mesh axes are manual (an auto 'pod' axis trips an XLA partitioner
+    # crash - "Invalid binary instruction opcode copy").  The pod axis is
+    # simply unused inside: experts replicate across pods (hierarchical EP,
+    # all-to-all stays inside a pod's ICI domain - exactly what you want on
+    # real hardware, DCN never sees dispatch traffic).
+    if gather_model:
+        xspec = P(("data", "model"), None, None)
+    elif "pod" in mesh.axis_names and b % (
+            sizes["pod"] * nd) == 0:
+        xspec = P(("pod", "data"), None, None)
+    else:
+        xspec = P("data", None, None)
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(xspec, P(None, None),
+                  P("data", None, "model"), P("data", None, "model"),
+                  P("data", "model", None)),
+        out_specs=(xspec, P()),
+        axis_names=set(mesh.axis_names), check_vma=False)
+    return fn(x, p["router"], p["wi"], p["wg"], p["wo"])
+
+
+def moe(p, x, cfg: ModelConfig):
+    """x: [B, S, d] -> (out [B, S, d], aux_loss scalar)."""
+    mesh = sharding_ctx._CTX.get("mesh")
+    if (mesh is not None and sharding_ctx._CTX.get("active")
+            and {"data", "model"} <= set(mesh.axis_names)):
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        if (cfg.num_experts % sizes["data"] == 0
+                and cfg.d_ff % sizes["model"] == 0
+                and x.shape[0] % sizes["data"] == 0):
+            return _moe_shard_map(p, x, cfg, mesh)
+    return _moe_dense(p, x, cfg)

@@ -1,0 +1,89 @@
+"""Config -> model dispatch: one uniform API over every architecture family.
+
+    model = get_model(cfg)
+    params = model.init(key)                  # or jax.eval_shape(model.init, key)
+    loss   = model.loss_fn(params, batch)
+    logits, cache = model.prefill(params, tokens, cache)
+    logits, cache = model.decode_step(params, tokens, cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import transformer, ssm, hybrid, encdec
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    specs: Callable          # () -> param PartitionSpec tree
+    loss_fn: Callable        # (params, batch) -> scalar
+    prefill: Callable        # (params, tokens, cache, **kw) -> (logits, cache)
+    decode_step: Callable    # (params, tokens, cache, **kw) -> (logits, cache)
+    init_cache: Callable     # (batch, max_len) -> cache
+    cache_specs: Callable    # () -> cache PartitionSpec tree
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        mod = transformer
+    elif cfg.family == "ssm":
+        mod = ssm
+    elif cfg.family == "hybrid":
+        mod = hybrid
+    elif cfg.family in ("encdec", "audio"):
+        mod = encdec
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+
+    return Model(
+        cfg=cfg,
+        init=lambda key: mod.init(key, cfg),
+        specs=lambda: mod.specs(cfg),
+        loss_fn=lambda params, batch: mod.loss_fn(params, batch, cfg),
+        prefill=lambda params, tokens, cache, **kw: mod.prefill(
+            params, tokens, cfg, cache, **kw),
+        decode_step=lambda params, tokens, cache, **kw: mod.decode_step(
+            params, tokens, cfg, cache, **kw),
+        init_cache=lambda batch, max_len, dtype=jnp.bfloat16: mod.init_cache(
+            cfg, batch, max_len, dtype),
+        cache_specs=lambda: mod.cache_specs(cfg),
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: str, global_batch: int,
+                seq_len: int) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a dry-run cell.
+
+    Modality frontends are stubs per the assignment: the VLM gets M-RoPE
+    position streams, the audio model gets precomputed frame embeddings.
+    """
+    sds = jax.ShapeDtypeStruct
+    b, s = global_batch, seq_len
+    if shape.startswith("train"):
+        batch = {"tokens": sds((b, s), jnp.int32)}
+        if cfg.mrope_sections:
+            batch["positions"] = sds((3, b, s - 1), jnp.int32)
+        if cfg.family in ("encdec", "audio"):
+            batch["frames"] = sds((b, cfg.encoder_seq, cfg.d_model),
+                                  jnp.float32)
+        return batch
+    if shape.startswith("prefill"):
+        out = {"tokens": sds((b, s), jnp.int32)}
+        if cfg.mrope_sections:
+            out["positions"] = sds((3, b, s), jnp.int32)
+        if cfg.family in ("encdec", "audio"):
+            out["frames"] = sds((b, cfg.encoder_seq, cfg.d_model),
+                                jnp.float32)
+        return out
+    # decode shapes: one new token against a cache of length seq_len
+    out = {"tokens": sds((b, 1), jnp.int32)}
+    if cfg.mrope_sections:
+        out["positions"] = sds((3, b, 1), jnp.int32)
+    return out

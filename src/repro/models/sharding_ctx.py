@@ -1,0 +1,85 @@
+"""Ambient sharding context for activation constraints.
+
+The launcher installs the mesh before tracing; layer code calls
+``constrain(x, "dp", None, "tp")`` with *logical* axis tags which resolve to
+the physical mesh axes ("dp" -> ("pod","data") when present, "tp" ->
+("model",)).  Outside a context (unit tests, CPU smoke runs) ``constrain``
+is a no-op, so model code never depends on a mesh being present.  Dims not
+divisible by the resolved axis product are left unconstrained.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_CTX: dict = {"active": False, "dp": (), "tp": (), "sizes": {}}
+
+
+@contextlib.contextmanager
+def sharding_context(mesh, full_batch: bool = False):
+    """``full_batch=True`` (training): the batch dim shards over EVERY mesh
+    axis (ZeRO-3 posture; per-device batch of ~1 sequence bounds the remat
+    carries).  Axis order ("data","model","pod") matters: non-divisible dims
+    drop axes from the END, so a 256-seq batch on the 512-chip mesh keeps
+    (data, model) and replicates over pod (hierarchical DP)."""
+    names = tuple(mesh.axis_names)
+    old = dict(_CTX)
+    dp_order = ("data", "model", "pod") if full_batch else ("pod", "data")
+    _CTX.update(
+        active=True,
+        dp=tuple(a for a in dp_order if a in names),
+        tp=tuple(a for a in ("model",) if a in names),
+        sizes=dict(zip(names, mesh.devices.shape)),
+        mesh=mesh,
+    )
+    try:
+        yield
+    finally:
+        _CTX.clear()
+        _CTX.update(old)
+
+
+def _resolve(tag: Optional[str]):
+    if tag is None:
+        return None
+    if tag == "dp":
+        return _CTX["dp"] or None
+    if tag == "tp":
+        return _CTX["tp"] or None
+    if tag == "xb":
+        # batch axes excluding the model axis (frees it for vocab/TP use in
+        # the same tensor, e.g. chunked-xent logits [b, s, vocab])
+        xb = tuple(a for a in _CTX["dp"] if a != "model")
+        return xb or None
+    return tag
+
+
+def constrain(x: jax.Array, *tags):
+    if not _CTX["active"]:
+        return x
+    spec = []
+    used: set = set()
+    for dim, tag in zip(x.shape, tags):
+        r = _resolve(tag)
+        if r is None:
+            spec.append(None)
+            continue
+        axes = tuple(a for a in (r if isinstance(r, tuple) else (r,))
+                     if a not in used)
+        # drop axes from the end until the dim divides evenly
+        while axes and dim % math.prod(_CTX["sizes"].get(a, 1)
+                                       for a in axes) != 0:
+            axes = axes[:-1]
+        if not axes:
+            spec.append(None)
+            continue
+        used.update(axes)
+        spec.append(axes[0] if len(axes) == 1 else axes)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x

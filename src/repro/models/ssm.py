@@ -1,0 +1,269 @@
+"""Mamba2 (state-space duality / SSD) blocks, chunked for TPU.
+
+The SSD algorithm (Dao & Gu, arXiv:2405.21060) splits the sequence into
+chunks: an intra-chunk quadratic term (batched matmuls -> MXU-friendly) plus
+an inter-chunk linear state recurrence (a short ``lax.scan`` over chunks).
+Decode is the O(1)-per-token state recurrence — this is why ``long_500k``
+runs for the SSM/hybrid architectures while quadratic-attention models skip
+it.
+
+Simplifications vs the reference CUDA implementation (documented in
+DESIGN.md): n_groups=1 (B/C shared across heads), no bias terms, gated
+RMSNorm before out-projection.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+from .layers import FSDP, TP, _init, rms_norm, init_rmsnorm
+
+
+def conv_dim(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_state
+
+
+def init_ssm_block(key, cfg: ModelConfig):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "in_z": _init(ks[0], (d, di), cfg.dtype),
+        "in_xbc": _init(ks[1], (d, conv_dim(cfg)), cfg.dtype),
+        "in_dt": _init(ks[2], (d, h), cfg.dtype),
+        "conv_w": _init(ks[3], (conv_dim(cfg), cfg.conv_kernel), cfg.dtype,
+                        scale=cfg.conv_kernel ** -0.5),
+        "conv_b": jnp.zeros((conv_dim(cfg),), cfg.dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.ones((di,), cfg.dtype),
+        "out": _init(ks[4], (di, d), cfg.dtype, scale=di ** -0.5),
+    }
+
+
+def ssm_block_specs(cfg: ModelConfig):
+    return {
+        "in_z": P(FSDP, TP), "in_xbc": P(FSDP, TP), "in_dt": P(FSDP, None),
+        "conv_w": P(TP, None), "conv_b": P(TP),
+        "A_log": P(None), "D": P(None), "dt_bias": P(None),
+        "norm": P(TP), "out": P(TP, FSDP),
+    }
+
+
+def _causal_conv(xbc, w, b, cache=None):
+    """Depthwise causal conv1d. xbc: [B, S, C]; w: [C, K].
+
+    Training: left-pad K-1. Decode: cache [B, K-1, C] carries history.
+    Returns (out [B, S, C], new_cache).
+    """
+    k = w.shape[1]
+    if cache is None:
+        pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+        new_cache = None
+    else:
+        pad = jnp.concatenate([cache.astype(xbc.dtype), xbc], axis=1)
+        new_cache = pad[:, -(k - 1):, :]
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[:, i][None, None, :]
+              for i in range(k))
+    return jax.nn.silu(out + b[None, None, :]), new_cache
+
+
+def ssd_chunked(x, dt, a, bm, cm, chunk: int, init_state=None):
+    """SSD forward. x [B,S,H,Pd]; dt [B,S,H] (softplus applied);
+    a [H] (negative); bm, cm [B,S,N].  Returns (y, final_state [B,H,Pd,N])."""
+    b, s, h, pd = x.shape
+    n = bm.shape[-1]
+    chunk = min(chunk, s)
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        # dt=0 padding is exactly state-neutral: decay=exp(0)=1, update=0.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0)))
+
+    xc = x.reshape(b, nc, chunk, h, pd)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    bc = bm.reshape(b, nc, chunk, n)
+    cc = cm.reshape(b, nc, chunk, n)
+
+    da = dtc * a[None, None, None, :]                     # [b,nc,l,h]
+    cum = jnp.cumsum(da, axis=2)
+
+    # intra-chunk quadratic term (the "attention-like" dual form)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [b,nc,i,j,h]
+    causal = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
+    decay = jnp.exp(jnp.where(causal[None, None, :, :, None], seg, -jnp.inf))
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)
+    att = cb[..., None] * decay * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att.astype(x.dtype), xc)
+
+    # per-chunk boundary states
+    right = jnp.exp(cum[:, :, -1:, :] - cum)              # [b,nc,l,h]
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", bc,
+                        (dtc * right).astype(x.dtype), xc)
+    total = jnp.exp(cum[:, :, -1, :])                     # [b,nc,h]
+
+    def scan_fn(hprev, xs):
+        tot, st = xs
+        hnew = tot[:, :, None, None].astype(hprev.dtype) * hprev + st
+        return hnew, hprev
+
+    h0 = init_state if init_state is not None else \
+        jnp.zeros((b, h, pd, n), x.dtype)
+    final, hprevs = lax.scan(scan_fn, h0,
+                             (total.transpose(1, 0, 2),
+                              states.transpose(1, 0, 2, 3, 4)))
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)              # [b,nc,h,pd,n]
+
+    left = jnp.exp(cum)                                   # [b,nc,l,h]
+    y_inter = jnp.einsum("bcln,bchpn->bclhp", cc, hprevs) \
+        * left[..., None].astype(x.dtype)
+    y = (y_intra + y_inter).reshape(b, nc * chunk, h, pd)
+    return y[:, :s], final
+
+
+def mamba_block(p, x, cfg: ModelConfig, cache=None):
+    """One Mamba2 block. cache: None or dict(conv=[B,K-1,C], ssd=[B,H,Pd,N]).
+    Returns (out [B,S,d], new_cache)."""
+    b, s, _ = x.shape
+    di, n, h, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+
+    z = jnp.einsum("bsd,de->bse", x, p["in_z"])
+    xbc = jnp.einsum("bsd,de->bse", x, p["in_xbc"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["in_dt"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"][None, None, :])
+
+    conv_cache = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_cache)
+    xs = xbc[..., :di].reshape(b, s, h, pd)
+    bm = xbc[..., di:di + n]
+    cm = xbc[..., di + n:]
+
+    a = -jnp.exp(p["A_log"])
+
+    if cache is None or s > 1:
+        init_state = cache["ssd"] if cache is not None else None
+        y, final = ssd_chunked(xs, dt, a, bm, cm, cfg.ssm_chunk, init_state)
+    else:
+        # decode: one-step recurrence
+        da = jnp.exp(dt[:, 0] * a[None, :])               # [b,h]
+        upd = jnp.einsum("bn,bh,bhp->bhpn", bm[:, 0],
+                         dt[:, 0].astype(x.dtype), xs[:, 0])
+        final = da[:, :, None, None].astype(x.dtype) * cache["ssd"] + upd
+        y = jnp.einsum("bn,bhpn->bhp", cm[:, 0], final)[:, None]
+        y = y.reshape(b, 1, h, pd)
+
+    y = y + xs * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(b, s, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv, "ssd": final}
+    return out, new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim(cfg)), dtype),
+        "ssd": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_headdim,
+                          cfg.ssm_state), dtype),
+    }
+
+
+def ssm_cache_specs(cfg: ModelConfig):
+    return {"conv": P(FSDP, None, TP), "ssd": P(FSDP, TP, None, None)}
+
+
+# ------------------------- full Mamba2 LM --------------------------------
+
+def init(key, cfg: ModelConfig):
+    from .layers import init_embed
+    ke, kl = jax.random.split(key)
+    lkeys = jax.random.split(kl, cfg.num_layers)
+
+    def one(k):
+        p = init_ssm_block(k, cfg)
+        n1, _ = init_rmsnorm(cfg.d_model, cfg.dtype)
+        return {"mixer": p, "ln": n1}
+
+    stack = jax.vmap(one)(lkeys)
+    fn, _ = init_rmsnorm(cfg.d_model, cfg.dtype)
+    from .layers import init_unembed
+    return {"embed": init_embed(ke, cfg), "layers": stack, "final_norm": fn,
+            "lm_head": init_unembed(jax.random.fold_in(ke, 7), cfg)}
+
+
+def specs(cfg: ModelConfig):
+    from .layers import embed_specs
+    one = {"mixer": ssm_block_specs(cfg), "ln": P(None)}
+    stack = jax.tree.map(lambda s: P(*((None,) + tuple(s))), one,
+                         is_leaf=lambda s: isinstance(s, P))
+    from .layers import unembed_specs
+    return {"embed": embed_specs(cfg), "layers": stack,
+            "final_norm": P(None), "lm_head": unembed_specs(cfg)}
+
+
+def forward(params, tokens, cfg: ModelConfig, caches=None):
+    from .layers import embed, rms_norm as rn
+    from .sharding_ctx import constrain
+    h = constrain(embed(params["embed"], tokens), "dp", None, None)
+
+    if caches is None:
+        def body(hh, lp):
+            hh = lax.optimization_barrier(hh)
+            o, _ = mamba_block(lp["mixer"], rn(hh, lp["ln"], cfg.norm_eps), cfg)
+            return hh + o, None
+
+        body = jax.checkpoint(body) if cfg.remat else body
+        h, _ = lax.scan(body, h, params["layers"], unroll=cfg.scan_unroll)
+        new_caches = None
+    else:
+        def body(hh, xs):
+            lp, cache = xs
+            o, nc = mamba_block(lp["mixer"], rn(hh, lp["ln"], cfg.norm_eps),
+                                cfg, cache)
+            return hh + o, nc
+
+        h, new_caches = lax.scan(body, h, (params["layers"], caches),
+                                 unroll=cfg.scan_unroll)
+    return rn(h, params["final_norm"], cfg.norm_eps), new_caches
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    from .layers import unembed_chunked_xent
+    tokens = batch["tokens"]
+    h, _ = forward(params, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    mask = (targets != 0).astype(jnp.float32)
+    nll, cnt = unembed_chunked_xent(params["lm_head"], h, targets, mask,
+                                    cfg.xent_chunk)
+    return nll / jnp.maximum(cnt, 1.0)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    one = init_ssm_cache(cfg, batch, dtype)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.num_layers,) + x.shape), one)
+
+
+def cache_specs(cfg: ModelConfig):
+    one = ssm_cache_specs(cfg)
+    return jax.tree.map(lambda s: P(*((None,) + tuple(s))), one,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def prefill(params, tokens, cfg: ModelConfig, cache, positions=None):
+    from .layers import unembed_logits
+    h, new_caches = forward(params, tokens, cfg, caches=cache)
+    return unembed_logits(params["lm_head"], h[:, -1:, :]), new_caches
+
+
+def decode_step(params, tokens, cfg: ModelConfig, cache, positions=None):
+    return prefill(params, tokens, cfg, cache, positions)

@@ -1,0 +1,177 @@
+"""Decoder-only transformer LM (dense / MoE / VLM backbones).
+
+Layers are stacked along a leading L axis and executed with
+``lax.scan`` (+ ``jax.checkpoint`` remat), so the HLO contains ONE layer body
+regardless of depth — essential for compiling 80-layer models against a
+512-device mesh in reasonable time, and for bounding activation memory.
+
+Per-layer heterogeneity (gemma3's 5 local : 1 global pattern) is threaded as
+a scanned ``window`` array: local layers carry the sliding-window size,
+global layers carry a huge value — one homogeneous body, per-layer masks.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+from . import layers as L
+from .moe import init_moe, moe, moe_specs
+from .sharding_ctx import constrain
+
+
+BIG_WINDOW = jnp.int32(2**30)   # "global" attention == window larger than S
+
+
+def _init_layer(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    attn_p = L.init_attention(k1, cfg)
+    if cfg.num_experts:
+        ffn_p = init_moe(k2, cfg)
+    else:
+        ffn_p = L.init_mlp(k2, cfg)
+    n1, _ = L.init_rmsnorm(cfg.d_model, cfg.dtype)
+    n2, _ = L.init_rmsnorm(cfg.d_model, cfg.dtype)
+    return {"attn": attn_p, "ffn": ffn_p, "ln1": n1, "ln2": n2}
+
+
+def _layer_specs(cfg: ModelConfig):
+    return {
+        "attn": L.attention_specs(cfg),
+        "ffn": moe_specs(cfg) if cfg.num_experts else L.mlp_specs(cfg),
+        "ln1": P(None), "ln2": P(None),
+    }
+
+
+def layer_windows(cfg: ModelConfig) -> jax.Array:
+    """Per-layer window sizes implementing the local:global pattern."""
+    idx = jnp.arange(cfg.num_layers)
+    if cfg.local_global and cfg.window:
+        is_global = (idx % (cfg.local_global + 1)) == cfg.local_global
+        return jnp.where(is_global, BIG_WINDOW, cfg.window).astype(jnp.int32)
+    if cfg.window:
+        return jnp.full((cfg.num_layers,), cfg.window, jnp.int32)
+    return jnp.full((cfg.num_layers,), BIG_WINDOW, jnp.int32)
+
+
+def init(key, cfg: ModelConfig):
+    ke, kl = jax.random.split(key)
+    lkeys = jax.random.split(kl, cfg.num_layers)
+    stack_p = jax.vmap(lambda k: _init_layer(k, cfg))(lkeys)
+    fn, _ = L.init_rmsnorm(cfg.d_model, cfg.dtype)
+    return {"embed": L.init_embed(ke, cfg), "layers": stack_p,
+            "final_norm": fn,
+            "lm_head": L.init_unembed(jax.random.fold_in(ke, 7), cfg)}
+
+
+def specs(cfg: ModelConfig):
+    stack_s = jax.tree.map(lambda s: P(*((None,) + tuple(s))),
+                           _layer_specs(cfg),
+                           is_leaf=lambda s: isinstance(s, P))
+    return {"embed": L.embed_specs(cfg), "layers": stack_s,
+            "final_norm": P(None), "lm_head": L.unembed_specs(cfg)}
+
+
+def _layer_apply(lp, h, cfg, window, cache, positions):
+    # NOTE (Perf iters 1-2, EXPERIMENTS.md): barriers / explicit replicate
+    # constraints here do NOT stop the CPU backend from shipping weight
+    # all-gathers in f32 (its dots convert operands to f32 and the
+    # partitioner orders convert-before-gather) — both refuted; the roofline
+    # applies a documented dtype correction instead (TPU MXU consumes bf16
+    # natively, so real gathers move half the bytes).
+    a, new_cache = L.attention(lp["attn"], L.rms_norm(h, lp["ln1"], cfg.norm_eps),
+                               cfg, positions=positions, cache=cache,
+                               window=window)
+    h = h + a
+    hn = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+    if cfg.num_experts:
+        f, aux = moe(lp["ffn"], hn, cfg)
+    else:
+        f, aux = L.mlp(lp["ffn"], hn), jnp.float32(0)
+    return h + f, new_cache, aux
+
+
+def forward(params, tokens, cfg: ModelConfig, *, caches=None, positions=None,
+            h: Optional[jax.Array] = None):
+    """Returns (hidden [B,S,d], new_caches, aux_loss)."""
+    if h is None:
+        h = L.embed(params["embed"], tokens)
+    h = constrain(h, "dp", None, None)
+    windows = layer_windows(cfg)
+
+    if caches is None:
+        def body(carry, xs):
+            hh, aux = carry
+            lp, win = xs
+            # barrier: stops XLA from hoisting the backward's f32 cast of
+            # the whole saved-carry stack out of the loop (4 GiB at 48L)
+            hh = lax.optimization_barrier(hh)
+            hh, _, a = _layer_apply(lp, hh, cfg, win, None, positions)
+            return (hh, aux + a), None
+
+        body = jax.checkpoint(body) if cfg.remat else body
+        (h, aux), _ = lax.scan(body, (h, jnp.float32(0)),
+                               (params["layers"], windows),
+                               unroll=cfg.scan_unroll)
+        new_caches = None
+    else:
+        def body(carry, xs):
+            hh, aux = carry
+            lp, win, cache = xs
+            hh, nc, a = _layer_apply(lp, hh, cfg, win, cache, positions)
+            return (hh, aux + a), nc
+
+        (h, aux), new_caches = lax.scan(body, (h, jnp.float32(0)),
+                                        (params["layers"], windows, caches),
+                                        unroll=cfg.scan_unroll)
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return h, new_caches, aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    positions = batch.get("positions")
+    h, _, aux = forward(params, tokens[:, :-1], cfg, positions=positions)
+    targets = tokens[:, 1:]
+    mask = (targets != 0).astype(jnp.float32)
+    nll, cnt = L.unembed_chunked_xent(params["lm_head"], h, targets, mask,
+                                      cfg.xent_chunk)
+    return nll / jnp.maximum(cnt, 1.0) + 0.01 * aux
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+               dtype=jnp.bfloat16):
+    kv, hd, nl = cfg.num_kv_heads, cfg.head_dim, cfg.num_layers
+    return {
+        "k": jnp.zeros((nl, batch_size, kv, max_len, hd), dtype),
+        "v": jnp.zeros((nl, batch_size, kv, max_len, hd), dtype),
+        "idx": jnp.zeros((nl,), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig):
+    """Desired shardings for the KV cache: batch over data, seq over model
+    (sequence parallelism — enables 500k contexts at batch 1)."""
+    return {
+        "k": P(None, L.FSDP, None, L.TP, None),
+        "v": P(None, L.FSDP, None, L.TP, None),
+        "idx": P(None),
+    }
+
+
+def prefill(params, tokens, cfg: ModelConfig, cache, positions=None):
+    """Run the prompt through the model, filling the cache.
+    Returns (last-token logits, cache)."""
+    h, new_caches, _ = forward(params, tokens, cfg, caches=cache,
+                               positions=positions)
+    logits = L.unembed_logits(params["lm_head"], h[:, -1:, :])
+    return logits, new_caches
+
+
+def decode_step(params, tokens, cfg: ModelConfig, cache, positions=None):
+    """One incremental token: tokens [B, 1] -> (logits [B,1,V], cache)."""
+    return prefill(params, tokens, cfg, cache, positions=positions)

@@ -1,0 +1,5 @@
+from .adamw import AdamWState, adamw_init, adamw_update, moment_specs  # noqa: F401
+from .schedule import warmup_cosine  # noqa: F401
+from .compress import (  # noqa: F401
+    CompressState, compress_init, compress_grads,
+)

@@ -1,0 +1,93 @@
+"""AdamW, hand-rolled for sharding control.
+
+Moments live in ``cfg.moment_dtype`` (fp32 default; bf16 for the 400B-class
+MoE where fp32 moments would not fit 16 GB/chip) and inherit the parameter
+shardings — with FSDP param specs this is ZeRO-sharded optimizer state for
+free.  Global-norm clipping runs in fp32.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+def adamw_init(params, moment_dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def moment_specs(param_specs):
+    """Moments are sharded exactly like their parameters."""
+    return param_specs
+
+
+def _sumsq(x: jax.Array) -> jax.Array:
+    """Sum of squares in f32 WITHOUT materializing an f32 copy of the whole
+    (possibly multi-GiB stacked) leaf: scan over leading-axis slices with an
+    optimization barrier so XLA cannot hoist the f32 convert out of the
+    loop."""
+    if x.ndim >= 3 and x.shape[0] > 1:
+        def body(acc, sl):
+            sl = jax.lax.optimization_barrier(sl)
+            return acc + jnp.sum(jnp.square(sl.astype(jnp.float32))), None
+        acc, _ = jax.lax.scan(body, jnp.float32(0), x)
+        return acc
+    return jnp.sum(jnp.square(x.astype(jnp.float32)))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(_sumsq(x) for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1, clip_norm=1.0):
+    """Returns (new_params, new_state)."""
+    step = state.step + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gn, 1e-12))
+
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd_slice(g, m, v, p):
+        gf = g.astype(jnp.float32) * scale
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = mf / bc1
+        vhat = vf / bc2
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * pf)
+        return pf.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
+
+    def upd(g, m, v, p):
+        # Stacked (per-layer) leaves update one slice at a time: the f32
+        # working copies of a [L, ...] MoE gradient would otherwise
+        # materialize whole (3.75 GiB per leaf at llama4 scale).  The
+        # barrier stops XLA hoisting convert(stack) back out of the loop.
+        if g.ndim >= 3 and g.shape[0] > 1:
+            def body(_, args):
+                return None, upd_slice(*jax.lax.optimization_barrier(args))
+            _, out = jax.lax.scan(body, None, (g, m, v, p))
+            return out
+        return upd_slice(g, m, v, p)
+
+    out = jax.tree.map(upd, grads, state.m, state.v, params)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(step=step, m=new_m, v=new_v)

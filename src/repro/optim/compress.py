@@ -1,0 +1,55 @@
+"""Error-feedback int8 gradient compression (distributed-optimization trick).
+
+At 1000-node scale the cross-pod gradient all-reduce rides the slow DCN
+links; int8 quantization cuts that volume 4x (bf16) / 2x (vs fp16).  Error
+feedback (Seide et al., 1-bit SGD lineage) accumulates the quantization
+residual locally and re-injects it next step, preserving convergence.
+
+Usage inside train_step, *before* the optimizer:
+
+    grads_q, comp_state = compress_grads(grads, comp_state)
+
+In a multi-pod deployment the quantize sits before the cross-pod psum and
+the dequantize after it; here the transform is applied to the already
+reduced gradients, which has identical numerics for the optimizer path (the
+saving itself is a wire-level property we cannot measure on one host).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressState(NamedTuple):
+    residual: dict     # error-feedback accumulator, same tree as grads
+
+
+def compress_init(params) -> CompressState:
+    return CompressState(
+        residual=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params))
+
+
+def _quant_dequant(x: jax.Array):
+    """Symmetric per-tensor int8 fake-quant. Returns (dq, err)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    dq = q.astype(jnp.float32) * scale
+    return dq, xf - dq
+
+
+def compress_grads(grads, state: CompressState):
+    """Returns (dequantized grads, new state). Fully jittable."""
+    def one(g, r):
+        dq, err = _quant_dequant(g.astype(jnp.float32) + r)
+        return dq.astype(g.dtype), err
+
+    out = jax.tree.map(one, grads, state.residual)
+    dq = jax.tree.map(lambda t: t[0], out,
+                      is_leaf=lambda t: isinstance(t, tuple))
+    res = jax.tree.map(lambda t: t[1], out,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    return dq, CompressState(residual=res)

@@ -1,0 +1,90 @@
+"""Data pipeline determinism + distributed graph queries + dryrun units."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import PUTE, PUTV, apply_ops, bfs, make_graph, sssp
+from repro.core.partition import make_distributed_query, shard_edges
+from repro.data import SyntheticTokens
+
+
+def test_pipeline_determinism_across_restarts():
+    ds1 = SyntheticTokens(vocab_size=100, seq_len=16, global_batch=4, seed=7)
+    ds2 = SyntheticTokens(vocab_size=100, seq_len=16, global_batch=4, seed=7)
+    b1 = ds1.batch_at(41)["tokens"]
+    b2 = ds2.batch_at(41)["tokens"]
+    assert np.array_equal(b1, b2)
+    assert b1.shape == (4, 17)   # seq_len + 1 (inputs+targets)
+    assert not np.array_equal(b1, ds1.batch_at(42)["tokens"])
+    assert b1.min() >= 1 and b1.max() < 100
+
+
+def test_distributed_query_equals_local():
+    g = make_graph(16, 64)
+    g, _ = apply_ops(g, [(PUTV, i) for i in range(8)]
+                     + [(PUTE, i, (i + 1) % 8, float(i + 1))
+                        for i in range(8)]
+                     + [(PUTE, 0, 5, 1.0)])
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    g = shard_edges(g, 1)
+    fn, _, _ = make_distributed_query(mesh, "bfs")
+    reached, dist, parent, ec = jax.jit(fn)(
+        g.alive, g.ecnt, g.esrc, g.edst, g.ew, jnp.int32(0))
+    ref = bfs(g, 0)
+    assert np.array_equal(np.asarray(dist), np.asarray(ref.dist))
+    assert np.array_equal(np.asarray(reached), np.asarray(ref.reached))
+    fn2, _, _ = make_distributed_query(mesh, "sssp")
+    _, dist2, neg, _ = jax.jit(fn2)(
+        g.alive, g.ecnt, g.esrc, g.edst, g.ew, jnp.int32(0))
+    ref2 = sssp(g, 0)
+    assert np.allclose(np.asarray(dist2), np.asarray(ref2.dist))
+    assert bool(neg) == bool(ref2.negcycle)
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import parse_collective_bytes
+    hlo = """
+      %ag = bf16[8,512,336]{2,1,0} all-gather(%x), replica_groups=...
+      %ar = f32[1024]{0} all-reduce(%y), to_apply=%sum
+      %rs = f32[2,64]{1,0} reduce-scatter(%z), dimensions={0}
+      %a2a = bf16[16,40,128]{2,1,0} all-to-all(%w), dimensions={0}
+      %cp = u32[7]{0} collective-permute(%q), source_target_pairs=...
+      %ars = f32[12]{0} all-reduce-start(%y2), to_apply=%sum
+      %not_a_collective = f32[9999]{0} add(%a, %b)
+    """
+    out = parse_collective_bytes(hlo)
+    assert out["all-gather"] == 8 * 512 * 336 * 2
+    assert out["all-reduce"] == 1024 * 4 + 12 * 4
+    assert out["reduce-scatter"] == 128 * 4
+    assert out["all-to-all"] == 16 * 40 * 128 * 2
+    assert out["collective-permute"] == 7 * 4
+    assert out["count"] == 6
+    assert out["total"] == sum(v for k, v in out.items()
+                               if k not in ("total", "count"))
+
+
+def test_sanitize_spec_divisibility():
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import sanitize_spec
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # axis absent from mesh -> dropped
+    assert sanitize_spec(P("pod", "model"), (8, 8), mesh) == P(None, "model")
+    # 1-sized axes always divide
+    assert sanitize_spec(P("data"), (7,), mesh) == P("data")
+
+
+def test_scale_depth_and_units():
+    from repro.launch.dryrun import scale_depth, unit_count
+    from repro.configs import get_config
+    z = get_config("zamba2_12b")
+    assert unit_count(z) == 6                      # 38 // 6
+    z1 = scale_depth(z, 1)
+    assert z1.num_layers == 1 * 6 + 2              # keeps the tail
+    w = get_config("whisper_large_v3")
+    w2 = scale_depth(w, 2)
+    assert w2.num_layers == 2 and w2.encoder_layers == 2
+    q = get_config("qwen3_32b")
+    assert scale_depth(q, 2).num_layers == 2
+    assert scale_depth(q, 2).scan_unroll

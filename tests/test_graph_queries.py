@@ -1,0 +1,140 @@
+"""BFS / SSSP / BC vs the sequential oracle, COO and dense paths."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    PUTE, PUTV, REME, REMV, apply_ops, bc, bc_dependencies, bfs,
+    bfs_batched_dense, dense_views, make_graph, sssp, sssp_batched_dense,
+)
+from repro.data import load_rmat_graph, rmat_edges
+from oracle import GraphOracle
+
+INF = float("inf")
+
+
+def build_pair(n, edges):
+    g = make_graph(max(16, n), max(16, 4 * len(edges)))
+    o = GraphOracle()
+    ops = [(PUTV, v) for v in range(n)]
+    ops += [(PUTE, u, v, w) for u, v, w in edges]
+    g, _ = apply_ops(g, ops)
+    for op in ops:
+        if op[0] == PUTV:
+            o.put_v(op[1])
+        else:
+            o.put_e(op[1], op[2], op[3])
+    return g, o
+
+
+def rand_graph(seed, n=24, m=80, weighted=True):
+    rng = np.random.default_rng(seed)
+    edges = []
+    seen = set()
+    while len(edges) < m:
+        u, v = rng.integers(0, n, 2)
+        if u == v or (u, v) in seen:
+            continue
+        seen.add((u, v))
+        w = float(rng.integers(1, 9)) if weighted else 1.0
+        edges.append((int(u), int(v), w))
+    return build_pair(n, edges)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_bfs_matches_oracle(seed):
+    g, o = rand_graph(seed)
+    for src in (0, 3, 17):
+        r = bfs(g, src)
+        exp = o.bfs(src)
+        dist = np.asarray(r.dist)
+        for v in range(24):
+            e = exp.get(v, -1) if exp else -1
+            assert dist[v] == e, (src, v)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_sssp_matches_oracle(seed):
+    g, o = rand_graph(seed)
+    for src in (0, 5):
+        r = sssp(g, src)
+        exp, neg = o.sssp(src)
+        assert not bool(r.negcycle) == (not neg)
+        dist = np.asarray(r.dist)
+        for v in range(24):
+            assert dist[v] == pytest.approx(exp.get(v, INF)), (src, v)
+
+
+def test_sssp_negative_cycle():
+    g, o = build_pair(4, [(0, 1, 1.0), (1, 2, -5.0), (2, 1, 1.0),
+                          (0, 3, 2.0)])
+    r = sssp(g, 0)
+    assert bool(r.negcycle)
+    assert not bool(r.ok)
+    # negative edges WITHOUT a cycle are fine
+    g2, _ = build_pair(4, [(0, 1, 5.0), (0, 2, 2.0), (2, 1, -4.0)])
+    r2 = sssp(g2, 0)
+    assert not bool(r2.negcycle)
+    assert np.asarray(r2.dist)[1] == pytest.approx(-2.0)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_bc_dependencies_match_oracle(seed):
+    g, o = rand_graph(seed, n=16, m=40, weighted=False)
+    for src in (0, 7):
+        r = bc_dependencies(g, src)
+        exp = o.bc_dependencies(src)
+        delta = np.asarray(r.delta)
+        for v in range(16):
+            assert delta[v] == pytest.approx(exp.get(v, 0.0), abs=1e-4), \
+                (src, v)
+
+
+def test_bc_full_sum():
+    # known graph: path 0 -> 1 -> 2: BC(1) = 1 (only 0->2 passes through 1)
+    g, _ = build_pair(3, [(0, 1, 1.0), (1, 2, 1.0)])
+    val = bc(g, 1, sources=jnp.arange(3))
+    assert float(val) == pytest.approx(1.0)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_dense_batched_matches_coo(seed):
+    g, _ = rand_graph(seed, n=20, m=60)
+    am, wd, alive = dense_views(g)
+    srcs = jnp.array([0, 3, 11])
+    dd = np.asarray(bfs_batched_dense(am, srcs, alive))
+    for i, s in enumerate([0, 3, 11]):
+        ref = np.asarray(bfs(g, s).dist)
+        assert np.array_equal(dd[i], ref)
+    ds, neg = sssp_batched_dense(wd, srcs, alive)
+    ds = np.asarray(ds)
+    for i, s in enumerate([0, 3, 11]):
+        ref = np.asarray(sssp(g, s).dist)
+        assert np.allclose(ds[i], ref)
+
+
+def test_queries_respect_dead_vertices():
+    g, o = build_pair(4, [(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0)])
+    g, _ = apply_ops(g, [(REMV, 1)])
+    o.rem_v(1)
+    r = bfs(g, 0)
+    exp = o.bfs(0)
+    assert np.asarray(r.dist)[2] == -1
+    assert np.asarray(r.reached).sum() == len(exp)
+
+
+def test_query_on_dead_source():
+    g, _ = build_pair(3, [(0, 1, 1.0)])
+    g, _ = apply_ops(g, [(REMV, 0)])
+    assert not bool(bfs(g, 0).ok)
+    assert not bool(sssp(g, 0).ok)
+
+
+def test_rmat_generator_properties():
+    src, dst, w = rmat_edges(64, 400, seed=1)
+    assert (src != dst).all()
+    assert src.min() >= 0 and src.max() < 64
+    assert w.min() >= 1 and w.max() <= 6  # log2(64)
+    g = load_rmat_graph(64, 400, seed=1)
+    r = bfs(g, int(src[0]))
+    assert bool(r.ok)

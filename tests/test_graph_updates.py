@@ -1,0 +1,130 @@
+"""ADT semantics of the batched update engine vs the sequential oracle."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    GETE, GETV, PUTE, PUTV, REME, REMV, NOKEY,
+    apply_ops, compact, get_e, get_v, make_graph, num_edges, num_vertices,
+)
+from oracle import GraphOracle
+
+
+def apply_and_check(g, oracle, ops):
+    """Apply ops both ways; compare per-op return values."""
+    g, res = apply_ops(g, ops)
+    ok = np.asarray(res.ok)
+    val = np.asarray(res.val)
+    for i, op in enumerate(ops):
+        kind = op[0]
+        if kind == PUTV:
+            exp = oracle.put_v(op[1])
+            assert ok[i] == exp, (i, op)
+        elif kind == REMV:
+            exp = oracle.rem_v(op[1])
+            assert ok[i] == exp, (i, op)
+        elif kind == PUTE:
+            e_ok, e_val = oracle.put_e(op[1], op[2], op[3])
+            assert ok[i] == e_ok, (i, op)
+            assert val[i] == pytest.approx(e_val), (i, op)
+        elif kind == REME:
+            e_ok, e_val = oracle.rem_e(op[1], op[2])
+            assert ok[i] == e_ok, (i, op)
+            assert val[i] == pytest.approx(e_val), (i, op)
+    return g
+
+
+def test_vertex_ops_basic():
+    g = make_graph(16, 16)
+    o = GraphOracle()
+    g = apply_and_check(g, o, [(PUTV, 1), (PUTV, 2), (PUTV, 1), (REMV, 3),
+                               (REMV, 1)])
+    assert bool(get_v(g, 2))
+    assert not bool(get_v(g, 1))
+    assert int(num_vertices(g)) == 1
+
+
+def test_edge_ops_full_adt():
+    g = make_graph(16, 32)
+    o = GraphOracle()
+    g = apply_and_check(g, o, [(PUTV, 0), (PUTV, 1), (PUTV, 2)])
+    # 4a add-new, 4b replace, 4c same-weight, 4d missing vertex
+    g = apply_and_check(g, o, [
+        (PUTE, 0, 1, 2.0),     # (True, inf)
+        (PUTE, 0, 1, 2.0),     # (False, 2.0) same weight
+        (PUTE, 0, 1, 5.0),     # (True, 2.0)  replace
+        (PUTE, 0, 9, 1.0),     # (False, inf) vertex missing
+        (REME, 0, 1),          # (True, 5.0)
+        (REME, 0, 1),          # (False, inf)
+        (REME, 1, 2),          # (False, inf) never existed
+    ])
+    ok, w = get_e(g, 0, 1)
+    assert not bool(ok)
+
+
+def test_remv_clears_incident_edges():
+    g = make_graph(8, 16)
+    o = GraphOracle()
+    g = apply_and_check(g, o, [(PUTV, 0), (PUTV, 1), (PUTV, 2),
+                               (PUTE, 0, 1, 1.0), (PUTE, 1, 2, 1.0),
+                               (PUTE, 2, 0, 1.0)])
+    g = apply_and_check(g, o, [(REMV, 1)])
+    # re-adding 1 must give a fresh (empty) edge list, as in the paper
+    g = apply_and_check(g, o, [(PUTV, 1)])
+    ok, _ = get_e(g, 0, 1)
+    assert not bool(ok)
+    ok, _ = get_e(g, 2, 0)
+    assert bool(ok)
+    assert int(num_edges(g)) == 1
+
+
+def test_intra_batch_chains():
+    g = make_graph(8, 16)
+    o = GraphOracle()
+    g = apply_and_check(g, o, [(PUTV, 0), (PUTV, 1)])
+    # put/rem/put same edge inside one batch: sequential semantics
+    g = apply_and_check(g, o, [
+        (PUTE, 0, 1, 1.0), (REME, 0, 1), (PUTE, 0, 1, 3.0),
+        (PUTE, 0, 1, 3.0), (REME, 0, 1), (REME, 0, 1),
+    ])
+    ok, _ = get_e(g, 0, 1)
+    assert not bool(ok)
+
+
+def test_ecnt_bumps_on_out_edge_mutations():
+    g = make_graph(8, 16)
+    g, _ = apply_ops(g, [(PUTV, 0), (PUTV, 1)])
+    e0 = int(np.asarray(g.ecnt)[0])
+    g, _ = apply_ops(g, [(PUTE, 0, 1, 1.0)])
+    g, _ = apply_ops(g, [(PUTE, 0, 1, 2.0)])   # weight update bumps
+    g, _ = apply_ops(g, [(PUTE, 0, 1, 2.0)])   # same weight: NO bump
+    g, _ = apply_ops(g, [(REME, 0, 1)])
+    assert int(np.asarray(g.ecnt)[0]) == e0 + 3
+
+
+def test_overflow_grow_and_compact():
+    g = make_graph(8, 4)
+    g, _ = apply_ops(g, [(PUTV, i) for i in range(7)])
+    g, res = apply_ops(g, [(PUTE, 0, i, 1.0) for i in range(1, 7)])
+    assert all(np.asarray(res.ok))
+    assert int(num_edges(g)) == 6
+    g, _ = apply_ops(g, [(REME, 0, 1), (REME, 0, 2)])
+    g = compact(g)
+    assert int(num_edges(g)) == 4
+    used = int((np.asarray(g.esrc) != NOKEY).sum())
+    assert used == 4
+
+
+def test_version_bumps_per_batch():
+    g = make_graph(8, 8)
+    v0 = int(g.version)
+    g, _ = apply_ops(g, [(PUTV, 0)])
+    g, _ = apply_ops(g, [(PUTV, 1)])
+    assert int(g.version) == v0 + 2
+
+
+def test_gets_linearize_at_batch_end():
+    g = make_graph(8, 8)
+    g, res = apply_ops(g, [(PUTV, 0), (GETV, 0), (REMV, 0), (GETV, 0)])
+    ok = np.asarray(res.ok)
+    # both GETVs see the post-batch state (0 removed)
+    assert not ok[1] and not ok[3]

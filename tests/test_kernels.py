@@ -1,0 +1,104 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.bool_mm import bool_mm as raw_bool_mm
+from repro.kernels.minplus_mm import minplus_mm as raw_minplus_mm
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("s,k,n", [(128, 128, 128), (70, 200, 130),
+                                   (1, 512, 64), (256, 64, 256)])
+def test_bool_mm_shapes(s, k, n):
+    f = (RNG.random((s, k)) < 0.15).astype(np.float32)
+    a = (RNG.random((k, n)) < 0.08).astype(np.float32)
+    out = np.asarray(ops.bool_mm(jnp.asarray(f), jnp.asarray(a)))
+    exp = np.asarray(ref.bool_mm_ref(jnp.asarray(f), jnp.asarray(a)))
+    assert np.array_equal(out, exp)
+
+
+def test_bool_mm_block_sweep():
+    f = (RNG.random((96, 160)) < 0.2).astype(np.float32)
+    a = (RNG.random((160, 96)) < 0.2).astype(np.float32)
+    exp = np.asarray(ref.bool_mm_ref(jnp.asarray(f), jnp.asarray(a)))
+    for bm, bn, bk in [(32, 32, 32), (96, 96, 160), (64, 32, 80)]:
+        out = np.asarray(ops.bool_mm(jnp.asarray(f), jnp.asarray(a),
+                                     bm=bm, bn=bn, bk=bk))
+        assert np.array_equal(out, exp), (bm, bn, bk)
+
+
+@pytest.mark.parametrize("s,k,n", [(64, 64, 64), (50, 90, 70), (1, 128, 30)])
+def test_minplus_shapes(s, k, n):
+    d = RNG.random((s, k)).astype(np.float32)
+    d[RNG.random((s, k)) < 0.3] = np.inf
+    w = RNG.random((k, n)).astype(np.float32)
+    w[RNG.random((k, n)) < 0.5] = np.inf
+    out = np.asarray(ops.minplus_mm(jnp.asarray(d), jnp.asarray(w)))
+    exp = np.asarray(ref.minplus_mm_ref(jnp.asarray(d), jnp.asarray(w)))
+    assert np.allclose(out, exp, equal_nan=True)
+
+
+def test_minplus_all_inf():
+    d = np.full((16, 32), np.inf, np.float32)
+    w = RNG.random((32, 16)).astype(np.float32)
+    out = np.asarray(ops.minplus_mm(jnp.asarray(d), jnp.asarray(w)))
+    assert np.isinf(out).all()
+
+
+@pytest.mark.parametrize("b,hq,hkv,sq,skv,d", [
+    (1, 4, 4, 32, 32, 16),     # MHA square
+    (2, 4, 2, 37, 53, 16),     # GQA ragged
+    (1, 8, 1, 16, 64, 32),     # MQA decode-ish (ends aligned)
+    (2, 2, 2, 1, 40, 16),      # single-query decode
+])
+def test_flash_attention_causal(b, hq, hkv, sq, skv, d):
+    q = RNG.standard_normal((b, hq, sq, d)).astype(np.float32)
+    k = RNG.standard_normal((b, hkv, skv, d)).astype(np.float32)
+    v = RNG.standard_normal((b, hkv, skv, d)).astype(np.float32)
+    out = ops.flash_attention(*map(jnp.asarray, (q, k, v)), bq=16, bk=16)
+    exp = ref.flash_attention_ref(*map(jnp.asarray, (q, k, v)))
+    assert np.max(np.abs(np.asarray(out) - np.asarray(exp))) < 3e-5
+
+
+def test_flash_attention_noncausal():
+    q = RNG.standard_normal((1, 2, 24, 16)).astype(np.float32)
+    k = RNG.standard_normal((1, 2, 40, 16)).astype(np.float32)
+    v = RNG.standard_normal((1, 2, 40, 16)).astype(np.float32)
+    out = ops.flash_attention(*map(jnp.asarray, (q, k, v)), causal=False,
+                              bq=16, bk=16)
+    exp = ref.flash_attention_ref(*map(jnp.asarray, (q, k, v)), causal=False)
+    assert np.max(np.abs(np.asarray(out) - np.asarray(exp))) < 3e-5
+
+
+def test_flash_attention_window():
+    q = RNG.standard_normal((1, 2, 48, 16)).astype(np.float32)
+    k = RNG.standard_normal((1, 2, 48, 16)).astype(np.float32)
+    v = RNG.standard_normal((1, 2, 48, 16)).astype(np.float32)
+    out = ops.flash_attention(*map(jnp.asarray, (q, k, v)), window=8,
+                              bq=16, bk=16)
+    # windowed oracle
+    lg = np.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(16)
+    i = np.arange(48)[:, None]
+    j = np.arange(48)[None, :]
+    m = (j <= i) & (j > i - 8)
+    lg = np.where(m[None, None], lg, -np.inf)
+    p = np.exp(lg - lg.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    exp = np.einsum("bhqk,bhkd->bhqd", p, v)
+    assert np.max(np.abs(np.asarray(out) - exp)) < 3e-5
+
+
+def test_flash_attention_bf16():
+    q = RNG.standard_normal((1, 2, 32, 16)).astype(np.float32)
+    k = RNG.standard_normal((1, 2, 32, 16)).astype(np.float32)
+    v = RNG.standard_normal((1, 2, 32, 16)).astype(np.float32)
+    qb, kb, vb = (jnp.asarray(x, jnp.bfloat16) for x in (q, k, v))
+    out = ops.flash_attention(qb, kb, vb, bq=16, bk=16)
+    exp = ref.flash_attention_ref(qb, kb, vb)
+    assert out.dtype == jnp.bfloat16
+    assert np.max(np.abs(np.asarray(out, np.float32)
+                         - np.asarray(exp, np.float32))) < 3e-2

@@ -1,0 +1,107 @@
+"""Hypothesis property tests: the ADT against the sequential oracle, and
+semiring-query invariants on random graphs."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    PUTE, PUTV, REME, REMV, apply_ops, bfs, bc_dependencies, get_e, get_v,
+    make_graph, num_edges, sssp,
+)
+from repro.kernels import ops as kops, ref as kref
+from oracle import GraphOracle
+
+N = 8
+
+op_strategy = st.one_of(
+    st.tuples(st.just(PUTV), st.integers(0, N - 1)),
+    st.tuples(st.just(REMV), st.integers(0, N - 1)),
+    st.tuples(st.just(PUTE), st.integers(0, N - 1), st.integers(0, N - 1),
+              st.sampled_from([1.0, 2.0, 3.0])),
+    st.tuples(st.just(REME), st.integers(0, N - 1), st.integers(0, N - 1)),
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(op_strategy, min_size=1, max_size=30))
+def test_adt_matches_oracle_under_random_ops(ops_list):
+    """One op per batch = strict sequential semantics vs the oracle."""
+    g = make_graph(N, 64)
+    o = GraphOracle()
+    for op in ops_list:
+        g, res = apply_ops(g, [op])
+        ok = bool(np.asarray(res.ok)[0])
+        val = float(np.asarray(res.val)[0])
+        if op[0] == PUTV:
+            assert ok == o.put_v(op[1])
+        elif op[0] == REMV:
+            assert ok == o.rem_v(op[1])
+        elif op[0] == PUTE:
+            eok, ev = o.put_e(op[1], op[2], op[3])
+            assert (ok, val) == (eok, ev)
+        elif op[0] == REME:
+            eok, ev = o.rem_e(op[1], op[2])
+            assert (ok, val) == (eok, ev)
+    # final-state agreement
+    assert int(num_edges(g)) == len(o.edges)
+    for v in range(N):
+        assert bool(get_v(g, v)) == o.get_v(v)
+    for u in range(N):
+        for v in range(N):
+            ok, w = get_e(g, u, v)
+            eok, ew = o.get_e(u, v)
+            assert bool(ok) == eok and float(w) == ew
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(op_strategy, min_size=1, max_size=25),
+       st.integers(0, N - 1))
+def test_query_invariants_random_graphs(ops_list, src):
+    g = make_graph(N, 64)
+    g, _ = apply_ops(g, [(PUTV, i) for i in range(N)])
+    g, _ = apply_ops(g, ops_list, batch_size=max(1, len(ops_list)))
+    r = bfs(g, src)
+    dist = np.asarray(r.dist)
+    reached = np.asarray(r.reached)
+    # invariant: reached <=> dist >= 0; source dist 0 when ok
+    assert ((dist >= 0) == reached).all()
+    if bool(r.ok):
+        assert dist[src] == 0
+        s = sssp(g, src)
+        sd = np.asarray(s.dist)
+        # unit-free invariant: hop count <= weighted distance is NOT general,
+        # but: sssp-reachable set == bfs-reachable set (positive weights)
+        if not bool(s.negcycle):
+            assert ((sd < np.inf) == reached).all()
+        b = bc_dependencies(g, src)
+        assert (np.asarray(b.sigma)[reached] > 0).all()
+        assert not np.isnan(np.asarray(b.delta)).any()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 5), st.integers(1, 6), st.integers(1, 5),
+       st.integers(0, 2**31 - 1))
+def test_bool_mm_property(sb, kb, nb, seed):
+    rng = np.random.default_rng(seed)
+    s, k, n = sb * 17, kb * 23, nb * 19
+    f = (rng.random((s, k)) < 0.2).astype(np.float32)
+    a = (rng.random((k, n)) < 0.2).astype(np.float32)
+    out = np.asarray(kops.bool_mm(jnp.asarray(f), jnp.asarray(a),
+                                  bm=32, bn=32, bk=32))
+    exp = np.asarray(kref.bool_mm_ref(jnp.asarray(f), jnp.asarray(a)))
+    assert np.array_equal(out, exp)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_minplus_triangle_inequality_property(seed):
+    """(D (x) W) (x) W >= D (x) (W (x) W) never violated elementwise up to
+    fp error — associativity of the tropical semiring."""
+    rng = np.random.default_rng(seed)
+    d = rng.random((8, 16)).astype(np.float32) * 10
+    w = rng.random((16, 16)).astype(np.float32) * 10
+    lhs = kops.minplus_mm(kops.minplus_mm(jnp.asarray(d), jnp.asarray(w)),
+                          jnp.asarray(w))
+    rhs = kops.minplus_mm(jnp.asarray(d),
+                          kops.minplus_mm(jnp.asarray(w), jnp.asarray(w)))
+    assert np.allclose(np.asarray(lhs), np.asarray(rhs), atol=1e-4)
