@@ -1,0 +1,201 @@
+"""Incremental-engine throughput/latency benchmark (paper-style micro).
+
+Workload: an R-MAT graph takes a stream of localized edge-update commits
+(each commit dirties at most ``hot_frac`` of the vertices — the paper's
+"only part of the graph moved" regime) interleaved with BFS/SSSP queries
+from a fixed source.  We compare:
+
+  * **full**     — the static baseline: fresh ``queries.bfs``/``sssp``
+                   fixed point on every committed snapshot;
+  * **incr**     — the engine path: ``engine.incremental`` delta queries
+                   driven by the version ring's per-commit dirty sets.
+
+plus the end-to-end ``GraphService`` streaming path (update ops/sec with
+queries riding along), and query latency as the update rate per query
+grows.  Prints ``name,us_per_call,derived`` CSV rows like the other
+benchmarks, then a speedup summary.
+
+    PYTHONPATH=src python benchmarks/bench_engine.py [--verify]
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import numpy as np
+import jax
+
+from repro.core import PUTE, REME, queries
+from repro.data import load_rmat_graph
+from repro.engine import (
+    GraphService,
+    VersionRing,
+    incremental_bfs,
+    incremental_sssp,
+    validate_incremental,
+)
+
+_INCR = {"bfs": incremental_bfs, "sssp": incremental_sssp}
+_FULL = {"bfs": queries.bfs, "sssp": queries.sssp}
+
+
+def _row(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _block(res):
+    jax.tree.map(lambda x: x.block_until_ready(), res)
+    return res
+
+
+def make_commit_stream(rng, n, n_commits, ops_per_commit, hot_frac):
+    """Edge churn confined to a hot vertex set of ``hot_frac * n`` sources."""
+    hot = rng.choice(n, size=max(2, int(n * hot_frac)), replace=False)
+    stream = []
+    for _ in range(n_commits):
+        ops = []
+        for _ in range(ops_per_commit):
+            u = int(rng.choice(hot))
+            v = int(rng.integers(0, n))
+            if rng.random() < 0.6:
+                ops.append((PUTE, u, v, float(rng.integers(1, 9))))
+            else:
+                ops.append((REME, u, v))
+        stream.append(ops)
+    return stream
+
+
+def build_versions(graph, stream, depth):
+    """Commit the stream through a VersionRing; return [(state, dirty)]."""
+    ring = VersionRing(graph, depth=depth)
+    out = []
+    for ops in stream:
+        from repro.core import apply_ops
+        state, _ = apply_ops(ring.latest.state, ops, batch_size=len(ops))
+        entry = ring.commit(state)
+        out.append((entry.state, entry.dirty))
+    return out
+
+
+def bench_query_paths(graph, versions, src, kind, verify=False):
+    """Per-commit query latency: full fixed point vs engine delta path."""
+    full_fn, incr_fn = _FULL[kind], _INCR[kind]
+    # Warm up compilation on both paths.
+    _block(full_fn(versions[0][0], src))
+    prior, _ = incr_fn(versions[0][0], None, None, src)
+    _block(incr_fn(versions[0][0], prior, versions[0][1], src)[0])
+
+    t0 = time.perf_counter()
+    for state, _ in versions:
+        _block(full_fn(state, src))
+    t_full = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    prior = None
+    dirty = None
+    modes = {"unchanged": 0, "delta": 0, "full": 0}
+    for state, d in versions:
+        res, stats = incr_fn(state, prior, d if prior is not None else None,
+                             src)
+        _block(res)
+        modes[stats.mode] += 1
+        prior = res
+    t_incr = time.perf_counter() - t0
+
+    if verify:
+        prior = None
+        for state, d in versions:
+            res, _ = incr_fn(state, prior, d if prior is not None else None,
+                             src)
+            assert validate_incremental(state, src, res, kind), kind
+            prior = res
+
+    n = len(versions)
+    us_full = t_full / n * 1e6
+    us_incr = t_incr / n * 1e6
+    speedup = t_full / t_incr
+    _row(f"engine_{kind}_full", us_full, f"commits={n}")
+    _row(f"engine_{kind}_incr", us_incr,
+         f"speedup={speedup:.2f}x;unchanged={modes['unchanged']};"
+         f"delta={modes['delta']};full={modes['full']}")
+    return speedup
+
+
+def bench_service_stream(graph, stream, src, batch_size=32):
+    """End-to-end GraphService: ops/sec with a query after every commit."""
+    svc = GraphService(graph, ring_depth=max(8, len(stream) + 2),
+                       batch_size=batch_size)
+    # warmup
+    svc.query("bfs", src)
+    n_ops = 0
+    t0 = time.perf_counter()
+    for ops in stream:
+        svc.submit_many(ops)
+        svc.flush()
+        n_ops += len(ops)
+        _block(svc.query("bfs", src).result)
+    dt = time.perf_counter() - t0
+    _row("engine_service_stream", dt / max(len(stream), 1) * 1e6,
+         f"update_ops_per_s={n_ops / dt:.0f};"
+         f"queries_per_s={len(stream) / dt:.1f};"
+         f"unchanged={svc.stats.unchanged};delta={svc.stats.delta};"
+         f"full={svc.stats.full}")
+
+
+def bench_latency_vs_update_rate(graph, rng, n, src, hot_frac,
+                                 rates=(8, 32, 128), n_commits=24):
+    """Query latency as more update ops land between consecutive queries."""
+    for rate in rates:
+        stream = make_commit_stream(rng, n, n_commits, rate, hot_frac)
+        versions = build_versions(graph, stream, depth=n_commits + 2)
+        for kind in ("bfs", "sssp"):
+            full_fn, incr_fn = _FULL[kind], _INCR[kind]
+            _block(full_fn(versions[0][0], src))
+            prior = None
+            t0 = time.perf_counter()
+            for state, d in versions:
+                res, _ = incr_fn(state, prior,
+                                 d if prior is not None else None, src)
+                _block(res)
+                prior = res
+            t_incr = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            for state, _ in versions:
+                _block(full_fn(state, src))
+            t_full = time.perf_counter() - t0
+            _row(f"engine_{kind}_rate{rate}",
+                 t_incr / n_commits * 1e6,
+                 f"full_us={t_full / n_commits * 1e6:.1f};"
+                 f"speedup={t_full / t_incr:.2f}x")
+
+
+def main(n=2048, edge_factor=8, n_commits=32, ops_per_commit=24,
+         hot_frac=0.05, seed=0, verify=False):
+    rng = np.random.default_rng(seed)
+    graph = load_rmat_graph(n, n * edge_factor, slack=2.0, seed=seed)
+    deg = np.bincount(np.asarray(graph.esrc)[np.asarray(graph.esrc) < n],
+                      minlength=n)
+    src = int(np.argmax(deg))  # well-connected source: large reached region
+
+    print("name,us_per_call,derived", flush=True)
+    stream = make_commit_stream(rng, n, n_commits, ops_per_commit, hot_frac)
+    versions = build_versions(graph, stream, depth=n_commits + 2)
+
+    speedups = {}
+    for kind in ("bfs", "sssp"):
+        speedups[kind] = bench_query_paths(graph, versions, src, kind,
+                                           verify=verify)
+    bench_service_stream(graph, stream, src)
+    bench_latency_vs_update_rate(graph, rng, n, src, hot_frac)
+
+    print(f"\nIncremental speedup at <={hot_frac * 100:.0f}% dirty/commit: "
+          f"BFS {speedups['bfs']:.2f}x, SSSP {speedups['sssp']:.2f}x "
+          f"over full recompute", flush=True)
+    return speedups
+
+
+if __name__ == "__main__":
+    main(verify="--verify" in sys.argv)

@@ -1,0 +1,43 @@
+"""ScanStats across update rates — the paper's Fig 12/13 microbenchmark.
+
+For each update share in the op mix, run the PG-Cn workload and report how
+many TREECOLLECTs each SCAN needed and how many update batches interrupted
+it (plus the fraction of scans that validated within the collect budget).
+
+    PYTHONPATH=src python benchmarks/bench_scan_stats.py
+
+Prints ``name,us_per_call,derived`` CSV rows like the other benchmarks.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import numpy as np
+
+from workload import load_graph, make_ops, run_mix
+
+
+def scan_stats_vs_update_rate(n: int = 256, n_ops: int = 60,
+                              rates=(0.1, 0.25, 0.4, 0.55, 0.7),
+                              query: str = "bfs", seed: int = 0):
+    rng = np.random.default_rng(seed)
+    graph = load_graph(n)
+    print("name,us_per_call,derived", flush=True)
+    for rate in rates:
+        search = 0.1
+        dist = (rate, search, 1.0 - rate - search)
+        ops = make_ops(rng, n_ops, n, dist)
+        r = run_mix(graph, ops, query, "pgcn")
+        q = max(r.queries, 1)
+        us = r.seconds / q * 1e6
+        print(f"fig1213_{query}_v{n}_upd{int(rate * 100)},{us:.1f},"
+              f"collects/scan={r.collects / q:.2f};"
+              f"interrupts/query={r.interrupts / q:.2f};"
+              f"queries={r.queries}", flush=True)
+
+
+if __name__ == "__main__":
+    scan_stats_vs_update_rate()

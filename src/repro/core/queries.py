@@ -100,6 +100,27 @@ def _relax_once(dist, live, srcc, dstc, ew, vcap):
     return jnp.minimum(dist, cand)
 
 
+def relax_fixpoint(dist0, live, srcc, dstc, ew, vcap):
+    """Bellman-Ford label-correcting fixed point from admissible upper bounds.
+
+    Returns ``(dist, changed-at-exit, iterations)``.  Shared by ``sssp`` and
+    the engine's delta queries (``repro.engine.incremental``) so the two
+    paths cannot drift apart — their bit-identical guarantee rests on
+    running the exact same relax pass.
+    """
+
+    def cond(carry):
+        _, changed, it = carry
+        return changed & (it < vcap)
+
+    def body(carry):
+        dist, _, it = carry
+        nd = _relax_once(dist, live, srcc, dstc, ew, vcap)
+        return nd, (nd < dist).any(), it + 1
+
+    return lax.while_loop(cond, body, (dist0, jnp.bool_(True), jnp.int32(0)))
+
+
 @jax.jit
 def sssp(state: GraphState, src) -> SSSPResult:
     src = jnp.asarray(src, jnp.int32)
@@ -111,21 +132,14 @@ def sssp(state: GraphState, src) -> SSSPResult:
     dist0 = jnp.full((vcap,), INF).at[src].set(
         jnp.where(ok_src, 0.0, INF), mode="drop")
 
-    def cond(carry):
-        _, changed, it = carry
-        return changed & (it < vcap)
+    dist, changed, _ = relax_fixpoint(dist0, live, srcc, dstc, ew, vcap)
 
-    def body(carry):
-        dist, _, it = carry
-        nd = _relax_once(dist, live, srcc, dstc, ew, vcap)
-        return nd, (nd < dist).any(), it + 1
-
-    dist, _, _ = lax.while_loop(cond, body, (dist0, jnp.bool_(True), jnp.int32(0)))
-
-    # The paper's CHECKNEGCYCLE: one extra relax pass; strict improvement on
-    # any reachable vertex implies a negative cycle.
-    extra = _relax_once(dist, live, srcc, dstc, ew, vcap)
-    negcycle = (extra < dist).any()
+    # The paper's CHECKNEGCYCLE for free: the fixed-point loop only exits
+    # with ``changed`` still True when the vcap-th pass improved something,
+    # which (shortest simple paths having < vcap edges) happens iff a
+    # negative cycle is reachable — the extra relax pass it would otherwise
+    # take to prove convergence is the loop's own final no-change pass.
+    negcycle = changed
 
     # Parent reconstruction: any tight edge dist[v] == dist[u] + w(u,v);
     # deterministic tie-break = min source id.

@@ -20,8 +20,11 @@ CMPTREE compares exactly what the paper compares:
 
 Note the global ``version`` is *deliberately not* compared: an update outside
 the query's snapshot region must not invalidate the query -- that selectivity
-is the point of the paper's SNode/ecnt design (and is what our benchmarks in
-``benchmarks/bench_scan_stats.py`` measure, mirroring the paper's Fig 12/13).
+is the point of the paper's SNode/ecnt design.  ``benchmarks/bench_scan_stats.py``
+measures it directly (collects and interrupting updates across update rates,
+mirroring the paper's Fig 12/13), and ``repro.engine`` turns it into an index:
+per-commit dirty-vertex sets drive the delta queries benchmarked by
+``benchmarks/bench_engine.py``.
 
 Execution modes (paper section 5):
     * PG-Cn  -- linearizable: double-collect until match;

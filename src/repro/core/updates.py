@@ -221,16 +221,62 @@ def apply_batch(state: GraphState, ops: OpBatch):
 
 
 def apply_ops(state: GraphState, ops: Sequence[Tuple], batch_size: int | None = None):
-    """Host convenience: apply ops with automatic compact/grow on overflow."""
+    """Host convenience: apply ops with automatic compact/grow on overflow.
+
+    Each retry applies the batch at most once: on overflow we ``compact``,
+    and — when even a tombstone-free table cannot hold the worst case of one
+    append per batch slot — ``grow_edges`` before the single retry.  The
+    worst-case bound (``used + B <= ecap``) guarantees the retry cannot
+    overflow again, at the cost of occasionally growing a table that a
+    tighter count would have squeezed the batch into.
+    """
     batch = make_batch(ops, batch_size)
+    B = int(batch.kind.shape[0])
     while True:
         new_state, res, overflow = apply_batch(state, batch)
         if not bool(overflow):
             return new_state, res
         state = compact(state)
-        _, _, still = apply_batch(state, batch)
-        if bool(still):
+        while int(used_slots(state)) + B > state.ecap:
             state = grow_edges(state)
+
+
+# ------------------------- dirty-set helpers ----------------------------
+# The engine's version ring (``repro.engine``) derives per-commit
+# *dirty-vertex sets* from these: the set of vertices whose out-edge list or
+# liveness may differ between two committed snapshots.  ``ecnt[u]`` is bumped
+# on every successful mutation of u's out-edges (including RemV-driven
+# incident-edge invalidation, which bumps the *source* of every killed edge),
+# so the ecnt delta alone covers every edge change; the alive delta covers
+# vertex insertion/removal.  This is the paper's SNode/ecnt selectivity made
+# into a first-class index.
+
+@jax.jit
+def dirty_vertices(prev: GraphState, new: GraphState) -> jax.Array:
+    """bool[vcap]: vertices whose edge list or liveness changed prev -> new.
+
+    Both states must share ``vcap`` (use ``dirty_vertices_padded`` across a
+    ``grow_vertices`` boundary).
+    """
+    return (prev.ecnt != new.ecnt) | (prev.alive != new.alive)
+
+
+def dirty_vertices_padded(prev: GraphState, new: GraphState) -> jax.Array:
+    """``dirty_vertices`` tolerant of vertex-table growth between commits.
+
+    Vertices that exist only in ``new`` are dirty iff alive or touched
+    (their prev-side ecnt/alive are taken as zero/False).
+    """
+    if prev.vcap == new.vcap:
+        return dirty_vertices(prev, new)
+    if prev.vcap > new.vcap:
+        raise ValueError("vertex table shrank between commits")
+    pad = new.vcap - prev.vcap
+    grown = prev._replace(
+        alive=jnp.concatenate([prev.alive, jnp.zeros((pad,), jnp.bool_)]),
+        ecnt=jnp.concatenate([prev.ecnt, jnp.zeros((pad,), jnp.int32)]),
+    )
+    return dirty_vertices(grown, new)
 
 
 # ------------------------- standalone reads -----------------------------

@@ -1,0 +1,26 @@
+"""Incremental analytics engine: version ring + delta queries + scheduler.
+
+Layers (each usable on its own):
+
+  * :mod:`repro.engine.version_ring` — MVCC ring of committed snapshots
+    with per-commit dirty-vertex sets (pin / release / dirty_between);
+  * :mod:`repro.engine.incremental` — delta-BFS / delta-SSSP that reuse a
+    prior result and re-relax only the dirty region, with full-recompute
+    fallback and cmp_tree-style validation;
+  * :mod:`repro.engine.scheduler` — op-log coalescing the update stream
+    into fixed-size committed batches;
+  * :mod:`repro.engine.service` — the ``GraphService.submit()/query()``
+    front end with PG-Icn / PG-Cn consistency modes.
+"""
+from .version_ring import PinnedSnapshot, RingEntry, VersionRing  # noqa: F401
+from .incremental import (  # noqa: F401
+    IncrementalStats,
+    delta_bfs,
+    delta_sssp,
+    incremental_bfs,
+    incremental_sssp,
+    results_equal,
+    validate_incremental,
+)
+from .scheduler import SchedulerStats, StreamScheduler  # noqa: F401
+from .service import GraphService, QueryReply, ServiceStats  # noqa: F401

@@ -1,0 +1,281 @@
+"""Delta-driven BFS / SSSP recomputation from a prior result + dirty set.
+
+Static analytics recompute the whole fixed point on every change; the
+paper's point (Figs 12/13) is that a versioned structure knows *what moved*
+and should pay only for that.  Given a prior ``BFSResult``/``SSSPResult``
+and the dirty-vertex set accumulated since it was computed (see
+``engine.version_ring``), the delta queries here:
+
+  1. **Poison** the stale region: a vertex's cached distance is invalid iff
+     some edge on its cached shortest path may have changed.  Every edge
+     mutation bumps ``ecnt`` at the edge's *source*, so the path through
+     ``v`` is suspect exactly when some ancestor of ``v`` in the prior
+     traversal tree has a dirty parent-edge source (or the vertex itself
+     died).  Poison propagates down the parent tree by pointer doubling —
+     ``ceil(log2 vcap)`` gathers, not a per-level walk.
+  2. **Re-relax** from the surviving frontier: clean distances are genuine
+     path lengths in the *new* graph (their whole parent chain is
+     untouched), i.e. admissible upper bounds, so the standard
+     label-correcting fixed point under ``lax.while_loop`` converges to the
+     exact answer in ~(affected-region diameter) passes instead of
+     ~(graph diameter).
+  3. **Fall back** to full recompute when the dirty region is too large for
+     the delta to win (``dirty_threshold``), when the cached result is
+     unusable (dead source, grown vertex table, negative cycle), or when
+     the caller has no dirty info at all.
+
+The host wrappers also expose the cheap *unchanged* test — no dirty vertex
+intersects the prior reached region — which returns the prior result with
+zero relax passes; that selectivity is where most of the paper's win lives.
+
+``validate_incremental`` is the ``cmp_tree``-style check that a delta answer
+is bit-identical to a fresh collect on the same snapshot.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.graph_state import (
+    INF,
+    NOKEY,
+    GraphState,
+    find_edge_slots,
+)
+from repro.core.queries import (
+    BFSResult,
+    SSSPResult,
+    _edge_views,
+    bfs,
+    relax_fixpoint,
+    sssp,
+)
+
+
+@dataclass
+class IncrementalStats:
+    """How one incremental query was answered."""
+
+    mode: str               # "unchanged" | "delta" | "full"
+    dirty_count: int = 0
+    dirty_fraction: float = 0.0
+
+
+def _poison(state: GraphState, prior_parent: jax.Array,
+            prior_reached: jax.Array, prior_distf: jax.Array,
+            dirty: jax.Array, check_weight: bool) -> jax.Array:
+    """bool[vcap]: vertices whose cached distance can no longer be trusted.
+
+    Seeds: reached vertices that died, and vertices whose parent edge is
+    actually gone.  A dirty parent only *suspects* the edge — ``ecnt`` says
+    the parent's out-list changed, not which edge — so we re-probe the new
+    state (one vectorized binary search): if edge ``(parent[v], v)`` is
+    still live with the same weight (``prior.dist[v] - prior.dist[parent]``;
+    weight ignored for BFS), the cached path survives and ``v`` stays
+    clean.  Poison then closes downward over the prior tree by pointer
+    doubling (after step k, a vertex is poisoned iff any of its 2^k nearest
+    ancestors, itself included, is a seed).
+    """
+    vcap = prior_parent.shape[0]
+    alive = state.alive
+    parc = jnp.clip(prior_parent, 0, vcap - 1)
+    has_par = (prior_parent != NOKEY) & prior_reached
+    suspect = has_par & dirty[parc]
+    self_id = jnp.arange(vcap, dtype=jnp.int32)
+    qu = jnp.where(suspect, parc, NOKEY)
+    qv = jnp.where(suspect, self_id, NOKEY)
+    slot, _, edge_live = find_edge_slots(state, qu, qv)
+    edge_ok = edge_live
+    if check_weight:
+        edge_ok = edge_ok & (state.ew[slot] == prior_distf - prior_distf[parc])
+    seed = (prior_reached & ~alive) | (suspect & ~edge_ok)
+    # Ancestor pointer: parent where one exists, else self (fixed point).
+    anc = jnp.where(has_par, parc, self_id)
+    steps = max(1, int(math.ceil(math.log2(max(vcap, 2)))))
+
+    def body(_, carry):
+        poison, anc = carry
+        return poison | poison[anc], anc[anc]
+
+    poison, anc_fin = lax.fori_loop(0, steps, body, (seed, anc))
+    # With zero-weight edges the tight-edge parent "tree" can contain
+    # cycles (dist does not strictly decrease along a zero-weight parent
+    # link), and poison propagated along parents never escapes a cycle —
+    # the entry edge that actually fed the cycle its distance is invisible
+    # to the chain walk.  Such chains never reach a root: after >= vcap
+    # doublings a tree vertex's ancestor is its (parentless) root, while a
+    # cycle-bound chain lands on a vertex that still has a parent.  Their
+    # cached distances are unverifiable, so poison them outright.
+    return poison | has_par[anc_fin]
+
+
+@jax.jit
+def _dirty_stats(prior_reached: jax.Array, dirty: jax.Array):
+    """(dirty count, query touched) in one device round trip.
+
+    ``touched``: any dirty vertex intersects the prior reached region.
+    Every mutation that can change the query's answer dirties a *reached*
+    vertex: edge changes dirty the edge's source (irrelevant unless the
+    source was reached), and liveness changes dirty the vertex itself
+    (irrelevant unless it was reached — a vertex entering the region needs
+    a new edge out of a reached, hence dirty, source).
+    """
+    return (jnp.sum(dirty.astype(jnp.int32)),
+            (dirty & prior_reached).any())
+
+
+# --------------------------------- BFS -----------------------------------
+
+@jax.jit
+def delta_bfs(state: GraphState, prior: BFSResult, dirty: jax.Array,
+              src) -> BFSResult:
+    """Recompute BFS on ``state`` reusing ``prior`` (computed <= dirty ago).
+
+    Bit-identical to ``queries.bfs(state, src)`` for any dirty set that
+    covers the actual changes (a too-large dirty set only costs time).
+    """
+    src = jnp.asarray(src, jnp.int32)
+    vcap = state.vcap
+    live, srcc, dstc = _edge_views(state)
+    ok = state.alive[jnp.clip(src, 0, vcap - 1)] & (src >= 0) & (src < vcap)
+
+    priorf = prior.dist.astype(jnp.float32)
+    poison = _poison(state, prior.parent, prior.reached, priorf, dirty,
+                     check_weight=False)
+    keep = prior.reached & ~poison
+    dist0 = jnp.where(keep, priorf, INF)
+    dist0 = dist0.at[src].set(jnp.where(ok, 0.0, INF), mode="drop")
+
+    unit = jnp.ones((state.ecap,), jnp.float32)
+    distf, _, _ = relax_fixpoint(dist0, live, srcc, dstc, unit, vcap)
+
+    reached = distf < INF
+    dist = jnp.where(reached, distf, -1.0).astype(jnp.int32)
+    # Parent reconstruction matches queries.bfs exactly: the frontier at
+    # level l is precisely {u : dist[u] == l}, so the per-level min-source
+    # candidate equals the min over tree edges dist[u] + 1 == dist[v].
+    tree = live & (distf[srcc] + 1.0 == distf[dstc]) & (distf[srcc] < INF)
+    parent = jnp.full((vcap,), NOKEY, jnp.int32).at[dstc].min(
+        jnp.where(tree, srcc, NOKEY), mode="drop")
+    parent = jnp.where(reached, parent, NOKEY)
+    parent = parent.at[jnp.clip(src, 0, vcap - 1)].set(NOKEY)
+    return BFSResult(ok, reached, dist, parent)
+
+
+# --------------------------------- SSSP ----------------------------------
+
+@jax.jit
+def delta_sssp(state: GraphState, prior: SSSPResult, dirty: jax.Array,
+               src) -> SSSPResult:
+    """Delta Bellman-Ford; bit-identical to ``queries.sssp`` absent negative
+    cycles (on detection the wrapper re-runs the full query, whose
+    partially-relaxed distances are iteration-order-dependent)."""
+    src = jnp.asarray(src, jnp.int32)
+    vcap = state.vcap
+    live, srcc, dstc = _edge_views(state)
+    ew = jnp.where(live, state.ew, INF)
+    ok_src = state.alive[jnp.clip(src, 0, vcap - 1)] & (src >= 0) & (src < vcap)
+
+    prior_reached = prior.dist < INF
+    poison = _poison(state, prior.parent, prior_reached, prior.dist, dirty,
+                     check_weight=True)
+    keep = prior_reached & ~poison
+    dist0 = jnp.where(keep, prior.dist, INF)
+    dist0 = dist0.at[src].set(jnp.where(ok_src, 0.0, INF), mode="drop")
+
+    dist, changed, _ = relax_fixpoint(dist0, live, srcc, dstc, ew, vcap)
+
+    # Same free CHECKNEGCYCLE as queries.sssp: from *any* admissible upper
+    # bound, Bellman-Ford converges within vcap-1 passes absent a negative
+    # cycle, so exiting the loop still-changed == negative cycle.
+    negcycle = changed
+
+    tight = live & (dist[dstc] == dist[srcc] + ew) & (dist[srcc] < INF)
+    parent = jnp.full((vcap,), NOKEY, jnp.int32).at[dstc].min(
+        jnp.where(tight, srcc, NOKEY), mode="drop")
+    parent = parent.at[jnp.clip(src, 0, vcap - 1)].set(NOKEY)
+    return SSSPResult(ok_src & ~negcycle, negcycle, dist, parent)
+
+
+# ----------------------------- host wrappers ------------------------------
+
+def _prior_usable(state: GraphState, prior, prior_ok) -> bool:
+    return (prior is not None
+            and bool(prior_ok)
+            and prior.dist.shape[0] == state.vcap)
+
+
+def incremental_bfs(state: GraphState, prior: Optional[BFSResult],
+                    dirty: Optional[jax.Array], src, *,
+                    dirty_threshold: float = 0.25):
+    """BFS on ``state`` reusing ``prior`` where possible.
+
+    Returns ``(BFSResult, IncrementalStats)``; the result is always exactly
+    what ``queries.bfs(state, src)`` would return.
+    """
+    if dirty is None or not _prior_usable(state, prior, prior.ok if prior else False):
+        return bfs(state, src), IncrementalStats("full")
+    n_dirty, touched = (int(x) for x in _dirty_stats(prior.reached, dirty))
+    frac = n_dirty / state.vcap
+    stats = IncrementalStats("delta", n_dirty, frac)
+    # Unchanged beats the threshold check: churn confined outside the
+    # query's reached region leaves the cached answer valid no matter how
+    # large the dirty set is.
+    if not touched:
+        stats.mode = "unchanged"
+        return prior, stats
+    if frac > dirty_threshold:
+        stats.mode = "full"
+        return bfs(state, src), stats
+    return delta_bfs(state, prior, dirty, src), stats
+
+
+def incremental_sssp(state: GraphState, prior: Optional[SSSPResult],
+                     dirty: Optional[jax.Array], src, *,
+                     dirty_threshold: float = 0.25):
+    """SSSP analogue of ``incremental_bfs``."""
+    if dirty is None or not _prior_usable(state, prior, prior.ok if prior else False):
+        return sssp(state, src), IncrementalStats("full")
+    n_dirty, touched = (int(x) for x in _dirty_stats(prior.dist < jnp.inf,
+                                                     dirty))
+    frac = n_dirty / state.vcap
+    stats = IncrementalStats("delta", n_dirty, frac)
+    if not touched:
+        stats.mode = "unchanged"
+        return prior, stats
+    if frac > dirty_threshold:
+        stats.mode = "full"
+        return sssp(state, src), stats
+    res = delta_sssp(state, prior, dirty, src)
+    if bool(res.negcycle):
+        # Negative cycle: the full query's non-converged distances depend on
+        # relaxation order; rerun it so callers see the canonical answer.
+        stats.mode = "full"
+        return sssp(state, src), stats
+    return res, stats
+
+
+# ------------------------------ validation --------------------------------
+
+def results_equal(a, b) -> bool:
+    """CMPTREE over result tuples: region, tree, and payload all bit-equal."""
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(a, b))
+
+
+def validate_incremental(state: GraphState, src, result, kind: str) -> bool:
+    """``cmp_tree``-style check: does ``result`` match a fresh collect?
+
+    Compares the reached region, the traversal tree, and the payload of the
+    incremental answer against ``queries.bfs``/``queries.sssp`` run from
+    scratch on the same snapshot — the engine's analogue of the paper's
+    CMPTREE validation of a SCAN.
+    """
+    fresh = bfs(state, src) if kind == "bfs" else sssp(state, src)
+    return results_equal(result, fresh)

@@ -1,0 +1,157 @@
+"""Streaming update scheduler: an op-log coalesced into fixed-size batches.
+
+The core layer's unit of mutation is the fixed-size ``OpBatch`` (one jitted
+``apply_batch`` per commit, one ``version`` bump = one linearization
+boundary).  A serving system, however, receives *individual* PutV / RemV /
+PutE / RemE requests.  The scheduler bridges the two:
+
+  * ``submit`` appends a request to the op-log and returns its sequence
+    number — the log is the total order of the stream;
+  * full chunks of ``batch_size`` ops are committed through
+    ``core.apply_ops`` (which handles compact/grow on overflow) into the
+    :class:`~repro.engine.version_ring.VersionRing`; ``flush`` drains the
+    partial tail (padded with NOPs, which ``apply_batch`` ignores).
+
+Order guarantees
+----------------
+Batches commit in log order, so ops in different batches always linearize
+in submission order.  *Within* a batch, ``apply_batch`` linearizes all
+vertex ops (in submission order) before all edge ops (in submission order).
+With ``strict_order=True`` the scheduler cuts a batch early whenever a
+vertex op arrives after an edge op in the current chunk, which makes the
+committed history equivalent to applying every op one at a time in
+submission order (at the cost of shorter batches on adversarial streams).
+
+Coalescing
+----------
+With ``coalesce=True``, consecutive edge ops on the same ``(u, v)`` key
+within a chunk collapse to the last one.  The committed *state* is
+unchanged (apply_batch already resolves intra-batch chains sequentially);
+what is lost are the intermediate per-op return values and their ``ecnt``
+bumps — safe, because no reader can observe the interior of a commit.
+Vertex ops are never coalesced: RemV has side effects beyond its key
+(incident-edge invalidation).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.updates import NOP, PUTE, PUTV, REME, REMV, apply_ops
+
+from .version_ring import RingEntry, VersionRing
+
+_VERTEX_OPS = (PUTV, REMV)
+_EDGE_OPS = (PUTE, REME)
+
+
+@dataclass
+class SchedulerStats:
+    ops_submitted: int = 0
+    ops_committed: int = 0
+    ops_coalesced: int = 0
+    batches_committed: int = 0
+    strict_cuts: int = 0
+
+
+@dataclass
+class StreamScheduler:
+    """Coalesce a stream of update requests into committed ``OpBatch``es."""
+
+    ring: VersionRing
+    batch_size: int = 32
+    strict_order: bool = False
+    coalesce: bool = False
+    auto_commit: bool = True
+    _log: List[Tuple] = field(default_factory=list)
+    stats: SchedulerStats = field(default_factory=SchedulerStats)
+
+    def __post_init__(self):
+        if self.batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
+
+    # ------------------------------ intake -------------------------------
+
+    def submit(self, op: Tuple) -> int:
+        """Append one ``(kind, u[, v[, w]])`` request; returns its seq no."""
+        if op[0] not in _VERTEX_OPS and op[0] not in _EDGE_OPS:
+            raise ValueError(f"scheduler accepts mutations only, got {op!r}")
+        seq = self.stats.ops_submitted
+        self._log.append(op)
+        self.stats.ops_submitted += 1
+        if self.auto_commit:
+            self._commit_ready()
+        return seq
+
+    def submit_many(self, ops: Sequence[Tuple]) -> List[int]:
+        return [self.submit(op) for op in ops]
+
+    def pending(self) -> int:
+        return len(self._log)
+
+    # ------------------------------ commits ------------------------------
+
+    def _next_chunk(self, limit: Optional[int]) -> List[Tuple]:
+        """Pop the next committable chunk (respecting strict-order cuts)."""
+        take = len(self._log) if limit is None else min(limit, len(self._log))
+        if self.strict_order:
+            seen_edge = False
+            for i, op in enumerate(self._log[:take]):
+                if op[0] in _EDGE_OPS:
+                    seen_edge = True
+                elif seen_edge:  # vertex op after an edge op: cut here
+                    self.stats.strict_cuts += 1
+                    take = i
+                    break
+        chunk, self._log = self._log[:take], self._log[take:]
+        return chunk
+
+    def _coalesce_chunk(self, chunk: List[Tuple]) -> List[Tuple]:
+        out: List[Tuple] = []
+        for op in chunk:
+            if (self.coalesce and out
+                    and op[0] in _EDGE_OPS and out[-1][0] in _EDGE_OPS
+                    and op[1] == out[-1][1] and op[2] == out[-1][2]):
+                out[-1] = op
+                self.stats.ops_coalesced += 1
+            else:
+                out.append(op)
+        return out
+
+    def _commit_chunk(self, chunk: List[Tuple]) -> RingEntry:
+        n_raw = len(chunk)
+        chunk = self._coalesce_chunk(chunk)
+        state, _ = apply_ops(self.ring.latest.state, chunk,
+                             batch_size=self.batch_size)
+        entry = self.ring.commit(state)
+        self.stats.ops_committed += n_raw
+        self.stats.batches_committed += 1
+        return entry
+
+    def _commit_ready(self) -> List[RingEntry]:
+        """Commit every full batch currently in the log."""
+        entries = []
+        while len(self._log) >= self.batch_size:
+            chunk = self._next_chunk(self.batch_size)
+            if not chunk:  # strict cut at position 0 cannot happen, but guard
+                break
+            entries.append(self._commit_chunk(chunk))
+        return entries
+
+    def commit_one(self) -> Optional[RingEntry]:
+        """Commit a single batch (possibly partial); None when log is empty."""
+        if not self._log:
+            return None
+        # A strict cut always lands after >= 1 op, so the chunk is non-empty.
+        chunk = self._next_chunk(self.batch_size)
+        return self._commit_chunk(chunk)
+
+    def flush(self) -> List[RingEntry]:
+        """Drain the whole log in batch-size chunks (tail is NOP-padded)."""
+        entries = []
+        while self._log:
+            entry = self.commit_one()
+            if entry is None:
+                break
+            entries.append(entry)
+        return entries

@@ -1,0 +1,218 @@
+"""GraphService: the streaming update/query front end over the engine.
+
+Ties the three engine layers together into the serving API the ROADMAP's
+north star asks for:
+
+  * updates enter through :class:`~repro.engine.scheduler.StreamScheduler`
+    (``submit``), which coalesces them into fixed-size batches and commits
+    each batch as a new version in the
+    :class:`~repro.engine.version_ring.VersionRing`;
+  * queries (``query``) are answered from the ring.  Per ``(kind, src)``
+    the service caches the last answer together with the ring version it
+    was computed at; the next query ORs the per-commit dirty sets since
+    that version (``ring.dirty_between``) and hands prior + dirty to
+    ``engine.incremental`` — most queries cost an *unchanged* check or a
+    few delta relax passes instead of a full fixed point.
+
+Consistency modes (paper section 5, at batch granularity):
+
+  * ``"icn"`` (PG-Icn): single collect against a pinned latest snapshot —
+    best-effort, maximum throughput;
+  * ``"cn"`` (PG-Cn): double collect — re-run the (incremental) query on
+    consecutive ring versions until two answers ``cmp_tree``-match, while
+    pending update batches keep committing between collects (the paper's
+    interrupting updates).  Because commits are the only writers and each
+    collect reads one committed version, a repeat on an unchanged version
+    matches trivially; under churn the loop pays exactly the paper's
+    retry cost.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.core import queries
+from repro.core.graph_state import GraphState
+from repro.core.snapshot import ScanStats
+
+from .incremental import (
+    IncrementalStats,
+    incremental_bfs,
+    incremental_sssp,
+    results_equal,
+)
+from .scheduler import StreamScheduler
+from .version_ring import PinnedSnapshot, VersionRing
+
+_INCREMENTAL = {"bfs": incremental_bfs, "sssp": incremental_sssp}
+_FULL = {"bfs": queries.bfs, "sssp": queries.sssp,
+         "bc": queries.bc_dependencies}
+
+
+@dataclass
+class ServiceStats:
+    """Per-query mode tallies: unchanged + delta + full == queries (a cn
+    query is counted once, by its final collect's mode)."""
+
+    queries: int = 0
+    unchanged: int = 0
+    delta: int = 0
+    full: int = 0
+    collects: int = 0
+    cn_retries: int = 0
+
+    def count(self, mode: str) -> None:
+        if mode == "unchanged":
+            self.unchanged += 1
+        elif mode == "delta":
+            self.delta += 1
+        else:
+            self.full += 1
+
+
+@dataclass
+class _CacheSlot:
+    version: int
+    result: object  # BFSResult | SSSPResult
+
+
+@dataclass
+class QueryReply:
+    """What ``GraphService.query`` hands back."""
+
+    result: object          # BFSResult | SSSPResult | BCResult
+    version: int            # ring version the answer is valid at
+    mode: str               # "unchanged" | "delta" | "full"
+    validated: bool         # True for cn-mode answers that double-collected
+    scan: ScanStats = field(default_factory=ScanStats)
+
+
+class GraphService:
+    """submit()/query() front end: streaming updates, incremental queries."""
+
+    def __init__(self, initial_state: GraphState, *, ring_depth: int = 8,
+                 batch_size: int = 32, dirty_threshold: float = 0.25,
+                 strict_order: bool = False, coalesce: bool = False,
+                 max_collects: int = 16, max_cached: int = 512):
+        self.ring = VersionRing(initial_state, depth=ring_depth)
+        self.scheduler = StreamScheduler(
+            self.ring, batch_size=batch_size, strict_order=strict_order,
+            coalesce=coalesce)
+        self.dirty_threshold = dirty_threshold
+        self.max_collects = max_collects
+        self.max_cached = max_cached
+        self.stats = ServiceStats()
+        self._cache: Dict[Tuple[str, int], _CacheSlot] = {}
+
+    # ------------------------------ updates ------------------------------
+
+    def submit(self, op: Tuple) -> int:
+        """Enqueue one mutation; full batches auto-commit into the ring."""
+        return self.scheduler.submit(op)
+
+    def submit_many(self, ops: Sequence[Tuple]) -> list:
+        return self.scheduler.submit_many(ops)
+
+    def flush(self):
+        """Commit every pending update (the tail batch is padded)."""
+        return self.scheduler.flush()
+
+    @property
+    def version(self) -> int:
+        return self.ring.latest.version
+
+    def pin(self, version: Optional[int] = None) -> PinnedSnapshot:
+        return self.ring.pin(version)
+
+    # ------------------------------ queries ------------------------------
+
+    def _collect(self, kind: str, src: int):
+        """One incremental collect against the current latest ring version."""
+        entry = self.ring.latest
+        if kind == "bc":  # no incremental path: every collect recomputes
+            return entry, _FULL[kind](entry.state, src), IncrementalStats("full")
+        slot = self._cache.get((kind, src))
+        prior, dirty = None, None
+        if slot is not None:
+            prior = slot.result
+            dirty = self.ring.dirty_between(slot.version, entry.version)
+        res, inc = _INCREMENTAL[kind](
+            entry.state, prior, dirty, src,
+            dirty_threshold=self.dirty_threshold)
+        # Delete-then-insert moves the key to the back of the dict so
+        # _prune_cache's front-of-dict eviction is LRU, not FIFO.
+        self._cache.pop((kind, src), None)
+        self._cache[(kind, src)] = _CacheSlot(entry.version, res)
+        self._prune_cache()
+        return entry, res, inc
+
+    def _prune_cache(self) -> None:
+        """Keep the result cache bounded: one O(vcap) slot per (kind, src).
+
+        Slots whose version fell out of the ring window can never serve an
+        unchanged/delta hit (``dirty_between`` has no span for them), so
+        they go first; if the cache is still over budget, evict in
+        insertion order (oldest queries first)."""
+        if len(self._cache) <= self.max_cached:
+            return
+        # dirty_between still has a span for slots at oldest_version - 1
+        # (the first in-window commit's dirty set covers that gap), so only
+        # versions strictly below that are unservable.
+        floor = self.ring.oldest_version - 1
+        for key in [k for k, s in self._cache.items() if s.version < floor]:
+            del self._cache[key]
+        while len(self._cache) > self.max_cached:
+            self._cache.pop(next(iter(self._cache)))
+
+    def query(self, kind: str, src: int, mode: str = "icn") -> QueryReply:
+        """Answer one analytics query.
+
+        ``kind``: ``"bfs"`` | ``"sssp"`` (incremental) or ``"bc"``
+        (every collect is a full recompute, in both modes).
+        ``mode``: ``"icn"`` or ``"cn"``.
+        """
+        if kind not in _FULL:
+            raise KeyError(f"unknown query kind {kind!r}")
+        if mode not in ("icn", "cn"):
+            raise ValueError(f"unknown mode {mode!r}")
+        self.stats.queries += 1
+        if mode == "icn":
+            entry, res, inc = self._collect(kind, src)
+            self.stats.collects += 1
+            self.stats.count(inc.mode)
+            return QueryReply(res, entry.version, inc.mode, False,
+                              ScanStats(collects=1, validated=False))
+        return self._query_cn(kind, src)
+
+    def _query_cn(self, kind: str, src: int) -> QueryReply:
+        """PG-Cn: double-collect over ring versions until answers match.
+
+        Between collects, one pending update batch commits (the stream's
+        interrupting updates).  Two collects at the same ring version are
+        equal by construction — the functional analogue of the paper's
+        CMPTREE match — so the loop terminates as soon as the collect
+        window sees no interleaved commit.
+        """
+        scan = ScanStats()
+        v0 = self.ring.latest.version
+        entry, prev_res, inc0 = self._collect(kind, src)
+        scan.collects = 1
+        mode = inc0.mode
+        while scan.collects < self.max_collects:
+            self.scheduler.commit_one()  # interrupting update, if any pending
+            cur_entry, cur_res, inc = self._collect(kind, src)
+            scan.collects += 1
+            if cur_entry.version == entry.version or results_equal(
+                    prev_res, cur_res):
+                self.stats.collects += scan.collects
+                self.stats.count(inc.mode)
+                scan.interrupting_updates = cur_entry.version - v0
+                return QueryReply(cur_res, cur_entry.version, inc.mode,
+                                  True, scan)
+            self.stats.cn_retries += 1
+            entry, prev_res, mode = cur_entry, cur_res, inc.mode
+        scan.validated = False
+        scan.interrupting_updates = self.ring.latest.version - v0
+        self.stats.collects += scan.collects
+        self.stats.count(mode)
+        return QueryReply(prev_res, entry.version, mode, False, scan)

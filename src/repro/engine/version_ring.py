@@ -1,0 +1,180 @@
+"""Fixed-depth MVCC version ring with per-commit dirty-vertex sets.
+
+The core layer already gives every committed batch a new immutable
+``GraphState`` (a value commit is the functional analogue of the paper's
+CAS-committed heap mutation).  The ring makes that history *addressable*:
+
+  * the last ``depth`` commits stay resident, so a reader can pin any of
+    them and keep querying a stable snapshot while writers race ahead
+    (the wait-free-snapshot idea of Bhardwaj et al., at batch granularity);
+  * every commit records the **dirty-vertex set** it disturbed, derived
+    from the ``ecnt``/``alive`` deltas (``core.updates.dirty_vertices``).
+    ``dirty_between(a, b)`` ORs the per-commit sets into the exact region
+    a delta query must re-examine — the paper's SNode/ecnt selectivity
+    turned into a first-class index that ``engine.incremental`` consumes.
+
+Pinning semantics: ``pin`` holds a version beyond ring rotation (the entry
+moves to a side table instead of being evicted); ``release`` drops it once
+the last pin is gone.  Dirty-set history, however, lives only in the ring
+window — ``dirty_between`` returns ``None`` when the window no longer
+covers the span, which callers treat as "fall back to full recompute".
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph_state import GraphState
+from repro.core.updates import dirty_vertices_padded
+
+
+class RingEntry(NamedTuple):
+    """One committed version: ring-assigned id, state, dirty set vs parent."""
+
+    version: int
+    state: GraphState
+    dirty: jax.Array  # bool[vcap] — vertices disturbed by THIS commit
+
+
+@dataclass
+class PinnedSnapshot:
+    """A pin handle; use as a context manager or call ``release()``."""
+
+    ring: "VersionRing"
+    version: int
+    _released: bool = False
+
+    @property
+    def state(self) -> GraphState:
+        entry = self.ring.get_entry(self.version)
+        if entry is None:
+            raise RuntimeError(f"pinned version {self.version} vanished")
+        return entry.state
+
+    def release(self) -> None:
+        if not self._released:
+            self._released = True
+            self.ring.release(self.version)
+
+    def __enter__(self) -> "PinnedSnapshot":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+class VersionRing:
+    """Ring of the last ``depth`` committed ``GraphState`` versions."""
+
+    def __init__(self, initial_state: GraphState, depth: int = 8):
+        if depth < 1:
+            raise ValueError("ring depth must be >= 1")
+        self.depth = depth
+        first = RingEntry(
+            version=0,
+            state=initial_state,
+            dirty=jnp.zeros((initial_state.vcap,), jnp.bool_),
+        )
+        self._window: deque[RingEntry] = deque([first])
+        self._pins: dict[int, int] = {}          # version -> pin count
+        self._parked: dict[int, RingEntry] = {}  # pinned but rotated out
+        self.evictions = 0
+
+    # ------------------------------ commits ------------------------------
+
+    @property
+    def latest(self) -> RingEntry:
+        return self._window[-1]
+
+    @property
+    def oldest_version(self) -> int:
+        return self._window[0].version
+
+    def commit(self, state: GraphState) -> RingEntry:
+        """Append a new version; dirty set is derived vs the previous latest."""
+        prev = self._window[-1]
+        entry = RingEntry(
+            version=prev.version + 1,
+            state=state,
+            dirty=dirty_vertices_padded(prev.state, state),
+        )
+        self._window.append(entry)
+        while len(self._window) > self.depth:
+            old = self._window.popleft()
+            if self._pins.get(old.version, 0) > 0:
+                self._parked[old.version] = old
+            else:
+                self.evictions += 1
+        return entry
+
+    # ------------------------------ reads --------------------------------
+
+    def get_entry(self, version: int) -> Optional[RingEntry]:
+        for e in self._window:
+            if e.version == version:
+                return e
+        return self._parked.get(version)
+
+    def get(self, version: int) -> Optional[GraphState]:
+        e = self.get_entry(version)
+        return None if e is None else e.state
+
+    def dirty_between(self, v_from: int, v_to: int) -> Optional[jax.Array]:
+        """OR of dirty sets over commits ``v_from+1 .. v_to`` (inclusive).
+
+        ``None`` when the ring window no longer covers the whole span (the
+        caller must recompute from scratch).  ``v_from == v_to`` yields the
+        all-False mask (nothing moved), sized to that version's ``vcap`` —
+        like the general path sizes to ``v_to``'s — so it requires the
+        version to still be resident.
+        """
+        if v_from > v_to:
+            raise ValueError(f"dirty_between({v_from}, {v_to}): reversed span")
+        if v_to > self.latest.version:
+            return None
+        if v_from == v_to:
+            entry = self.get_entry(v_to)
+            if entry is None:
+                return None
+            return jnp.zeros((entry.state.vcap,), jnp.bool_)
+        if v_from + 1 < self.oldest_version:
+            return None  # span starts before the window: dirty info evicted
+        masks = [e.dirty for e in self._window
+                 if v_from < e.version <= v_to]
+        if len(masks) != v_to - v_from:
+            return None
+        vcap = masks[-1].shape[0]
+        acc = jnp.zeros((vcap,), jnp.bool_)
+        for m in masks:
+            if m.shape[0] != vcap:  # vertex table grew inside the span
+                m = jnp.concatenate(
+                    [m, jnp.zeros((vcap - m.shape[0],), jnp.bool_)])
+            acc = acc | m
+        return acc
+
+    # ------------------------------ pinning ------------------------------
+
+    def pin(self, version: Optional[int] = None) -> PinnedSnapshot:
+        """Pin a resident version (default: latest) against eviction."""
+        if version is None:
+            version = self.latest.version
+        if self.get_entry(version) is None:
+            raise KeyError(f"version {version} is not resident in the ring")
+        self._pins[version] = self._pins.get(version, 0) + 1
+        return PinnedSnapshot(self, version)
+
+    def release(self, version: int) -> None:
+        count = self._pins.get(version, 0)
+        if count <= 1:
+            self._pins.pop(version, None)
+            if self._parked.pop(version, None) is not None:
+                self.evictions += 1
+        else:
+            self._pins[version] = count - 1
+
+    def pinned_versions(self) -> list[int]:
+        return sorted(self._pins)

@@ -1,0 +1,355 @@
+"""Engine subsystem: delta-query equivalence, version-ring semantics,
+scheduler order/coalescing guarantees, and the GraphService front end."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    PUTE, PUTV, REME, REMV,
+    apply_ops, dirty_vertices, make_graph, queries,
+)
+from repro.core.graph_state import NOKEY, live_edge_mask
+from repro.engine import (
+    GraphService,
+    StreamScheduler,
+    VersionRing,
+    incremental_bfs,
+    incremental_sssp,
+    validate_incremental,
+)
+
+VCAP, ECAP = 96, 512
+
+
+def _seed_graph(rng, n=VCAP, m=4 * VCAP):
+    g = make_graph(VCAP, ECAP)
+    ops = [(PUTV, i) for i in range(n)]
+    for _ in range(m):
+        u, v = int(rng.integers(0, n)), int(rng.integers(0, n))
+        ops.append((PUTE, u, v, float(rng.integers(1, 9))))
+    g, _ = apply_ops(g, ops)
+    return g
+
+
+def _random_commit(rng, n=VCAP, n_ops=8, vertex_churn=True):
+    """One commit's worth of randomized inserts/deletes."""
+    ops = []
+    for _ in range(n_ops):
+        r = rng.random()
+        u, v = int(rng.integers(0, n)), int(rng.integers(0, n))
+        if vertex_churn and r < 0.06:
+            ops.append((REMV, u))
+        elif vertex_churn and r < 0.12:
+            ops.append((PUTV, u))
+        elif r < 0.6:
+            ops.append((PUTE, u, v, float(rng.integers(1, 9))))
+        else:
+            ops.append((REME, u, v))
+    return ops
+
+
+def _edge_set(state):
+    live = np.asarray(live_edge_mask(state))
+    src = np.asarray(state.esrc)[live]
+    dst = np.asarray(state.edst)[live]
+    w = np.asarray(state.ew)[live]
+    return {(int(u), int(v), float(x)) for u, v, x in zip(src, dst, w)}
+
+
+def _assert_bit_identical(res, fresh):
+    for a, b in zip(res, fresh):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------- incremental equivalence -------------------------
+
+@pytest.mark.parametrize("kind,incr,full", [
+    ("bfs", incremental_bfs, queries.bfs),
+    ("sssp", incremental_sssp, queries.sssp),
+])
+def test_incremental_matches_fresh_over_randomized_stream(kind, incr, full):
+    """>= 20 randomized update/query interleavings, bit-identical results."""
+    rng = np.random.default_rng(7)
+    state = _seed_graph(rng)
+    src = 0
+    prior, stats = incr(state, None, None, src)
+    assert stats.mode == "full"
+    _assert_bit_identical(prior, full(state, src))
+    modes = {"unchanged": 0, "delta": 0, "full": 0}
+    for _ in range(24):
+        new_state, _ = apply_ops(state, _random_commit(rng))
+        dirty = dirty_vertices(state, new_state)
+        res, stats = incr(new_state, prior, dirty, src)
+        modes[stats.mode] += 1
+        _assert_bit_identical(res, full(new_state, src))
+        assert validate_incremental(new_state, src, res, kind)
+        state, prior = new_state, res
+    assert modes["delta"] > 0  # the delta path actually exercised
+
+
+def test_incremental_unchanged_shortcut():
+    rng = np.random.default_rng(1)
+    state = _seed_graph(rng)
+    prior, _ = incremental_bfs(state, None, None, 0)
+    res, stats = incremental_bfs(
+        state, prior, np.zeros(state.vcap, bool), 0)
+    assert stats.mode == "unchanged" and res is prior
+
+
+def test_incremental_threshold_falls_back_to_full():
+    rng = np.random.default_rng(2)
+    state = _seed_graph(rng)
+    prior, _ = incremental_bfs(state, None, None, 0)
+    all_dirty = np.ones(state.vcap, bool)
+    res, stats = incremental_bfs(state, prior, all_dirty, 0,
+                                 dirty_threshold=0.25)
+    assert stats.mode == "full"
+    _assert_bit_identical(res, queries.bfs(state, 0))
+
+
+def test_incremental_unchanged_beats_threshold():
+    """Heavy churn entirely outside the reached region: the cached answer
+    is still valid, however large the dirty set."""
+    g = make_graph(64, 64)
+    g, _ = apply_ops(g, [(PUTV, i) for i in range(64)] + [(PUTE, 0, 1, 1.0)])
+    prior, _ = incremental_bfs(g, None, None, 0)  # reaches only {0, 1}
+    dirty = np.arange(64) >= 2  # 97% dirty, none of it reached
+    res, stats = incremental_bfs(g, prior, dirty, 0, dirty_threshold=0.25)
+    assert stats.mode == "unchanged" and res is prior
+
+
+def test_incremental_sssp_zero_weight_parent_cycle():
+    """Zero-weight tight edges can make the prior parent 'tree' cyclic;
+    poison must still reach the cycle when its feeding edge is removed."""
+    g = make_graph(8, 16)
+    g, _ = apply_ops(g, [(PUTV, 0), (PUTV, 1), (PUTV, 2),
+                         (PUTE, 2, 0, 1.0),
+                         (PUTE, 0, 1, 0.0), (PUTE, 1, 0, 0.0)])
+    prior, _ = incremental_sssp(g, None, None, 2)
+    par = np.asarray(prior.parent)
+    assert par[0] == 1 and par[1] == 0  # the parent cycle actually formed
+    g2, _ = apply_ops(g, [(REME, 2, 0)])  # cut the cycle's only feed
+    res, stats = incremental_sssp(g2, prior, dirty_vertices(g, g2), 2)
+    assert stats.mode == "delta"
+    _assert_bit_identical(res, queries.sssp(g2, 2))  # 0 and 1 unreachable
+
+
+def test_incremental_sssp_negative_cycle_matches_full():
+    g = make_graph(8, 16)
+    g, _ = apply_ops(g, [(PUTV, 0), (PUTV, 1), (PUTV, 2),
+                         (PUTE, 0, 1, 1.0), (PUTE, 1, 2, 1.0)])
+    prior, _ = incremental_sssp(g, None, None, 0)
+    ops = [(PUTE, 2, 1, -5.0)]  # closes a negative cycle 1->2->1
+    g2, _ = apply_ops(g, ops)
+    res, stats = incremental_sssp(g2, prior, dirty_vertices(g, g2), 0)
+    assert stats.mode == "full"  # negcycle forces the canonical full answer
+    _assert_bit_identical(res, queries.sssp(g2, 0))
+    assert bool(res.negcycle)
+
+
+# ------------------------------ version ring ------------------------------
+
+def test_ring_rotation_and_eviction():
+    rng = np.random.default_rng(3)
+    state = _seed_graph(rng)
+    ring = VersionRing(state, depth=3)
+    for _ in range(4):
+        state, _ = apply_ops(state, _random_commit(rng))
+        ring.commit(state)
+    assert ring.latest.version == 4
+    assert ring.oldest_version == 2
+    assert ring.get(1) is None  # rotated out
+    assert ring.get(3) is not None
+    assert ring.evictions == 2  # versions 0 and 1
+
+
+def test_ring_pin_survives_rotation():
+    rng = np.random.default_rng(4)
+    state = _seed_graph(rng)
+    ring = VersionRing(state, depth=2)
+    pin = ring.pin()  # pins version 0
+    pinned_edges = _edge_set(pin.state)
+    for _ in range(3):
+        state, _ = apply_ops(state, _random_commit(rng))
+        ring.commit(state)
+    assert ring.get(0) is not None  # parked, not evicted
+    assert _edge_set(pin.state) == pinned_edges  # snapshot is immutable
+    pin.release()
+    assert ring.get(0) is None
+    with pytest.raises(KeyError):
+        ring.pin(0)
+
+
+def test_ring_dirty_between():
+    rng = np.random.default_rng(5)
+    state = _seed_graph(rng)
+    ring = VersionRing(state, depth=8)
+    states = [state]
+    for _ in range(3):
+        state, _ = apply_ops(state, _random_commit(rng))
+        ring.commit(state)
+        states.append(state)
+    span = np.asarray(ring.dirty_between(0, 3))
+    direct = np.asarray(dirty_vertices(states[0], states[3]))
+    # the ORed span covers every actual change (it may be a superset:
+    # a vertex touched then reverted is dirty per-commit but not end-to-end)
+    assert not np.any(direct & ~span)
+    assert not np.any(np.asarray(ring.dirty_between(3, 3)))
+    assert ring.dirty_between(0, 99) is None  # future version unknown
+    with pytest.raises(ValueError):
+        ring.dirty_between(3, 0)
+
+
+def test_ring_dirty_between_evicted_span_is_none():
+    rng = np.random.default_rng(6)
+    state = _seed_graph(rng)
+    ring = VersionRing(state, depth=2)
+    for _ in range(4):
+        state, _ = apply_ops(state, _random_commit(rng))
+        ring.commit(state)
+    assert ring.dirty_between(0, ring.latest.version) is None
+    assert ring.dirty_between(0, 0) is None  # empty span, evicted version
+    assert ring.dirty_between(ring.latest.version - 1,
+                              ring.latest.version) is not None
+
+
+# ------------------------------- scheduler --------------------------------
+
+def test_scheduler_auto_commits_full_batches():
+    rng = np.random.default_rng(8)
+    ring = VersionRing(_seed_graph(rng), depth=8)
+    sched = StreamScheduler(ring, batch_size=4)
+    for op in [(PUTE, 0, i, 1.0) for i in range(3)]:
+        sched.submit(op)
+    assert ring.latest.version == 0 and sched.pending() == 3
+    sched.submit((PUTE, 0, 3, 1.0))  # fills the batch
+    assert ring.latest.version == 1 and sched.pending() == 0
+    assert sched.stats.batches_committed == 1
+    sched.submit((REME, 0, 1))
+    entries = sched.flush()  # drains the partial tail
+    assert len(entries) == 1 and ring.latest.version == 2
+    assert sched.stats.ops_committed == 5
+
+
+def test_scheduler_rejects_reads():
+    rng = np.random.default_rng(8)
+    sched = StreamScheduler(VersionRing(_seed_graph(rng)), batch_size=4)
+    with pytest.raises(ValueError):
+        sched.submit(("GETV", 0))
+
+
+def _committed_state(ops, **kw):
+    ring = VersionRing(make_graph(16, 64), depth=64)
+    sched = StreamScheduler(ring, **kw)
+    sched.submit_many(ops)
+    sched.flush()
+    return ring.latest.state, sched
+
+
+def test_scheduler_strict_order_equals_sequential():
+    """strict_order history == applying every op one at a time, in order."""
+    rng = np.random.default_rng(9)
+    ops = [(PUTV, i) for i in range(8)]
+    for _ in range(40):
+        r = rng.random()
+        u, v = int(rng.integers(0, 8)), int(rng.integers(0, 8))
+        if r < 0.15:
+            ops.append((REMV, u))
+        elif r < 0.3:
+            ops.append((PUTV, u))
+        elif r < 0.7:
+            ops.append((PUTE, u, v, float(rng.integers(1, 5))))
+        else:
+            ops.append((REME, u, v))
+    strict, sched = _committed_state(ops, batch_size=8, strict_order=True)
+    assert sched.stats.strict_cuts > 0  # the guarantee was actually needed
+    seq = make_graph(16, 64)
+    for op in ops:
+        seq, _ = apply_ops(seq, [op])
+    assert _edge_set(strict) == _edge_set(seq)
+    assert np.array_equal(np.asarray(strict.alive), np.asarray(seq.alive))
+
+
+def test_scheduler_coalesce_preserves_state():
+    ops = [(PUTV, 0), (PUTV, 1), (PUTV, 2)]
+    ops += [(PUTE, 0, 1, float(w)) for w in (1, 2, 3)]  # same key x3
+    ops += [(PUTE, 1, 2, 9.0), (REME, 1, 2)]            # put then rem
+    plain, _ = _committed_state(list(ops), batch_size=32)
+    coal, sched = _committed_state(list(ops), batch_size=32, coalesce=True)
+    assert sched.stats.ops_coalesced == 3
+    assert _edge_set(plain) == _edge_set(coal) == {(0, 1, 3.0)}
+
+
+# ------------------------------ GraphService ------------------------------
+
+def _service(rng, **kw):
+    return GraphService(_seed_graph(rng), batch_size=8, ring_depth=8, **kw)
+
+
+def test_service_icn_incremental_path_matches_fresh():
+    rng = np.random.default_rng(10)
+    svc = _service(rng)
+    r0 = svc.query("bfs", 0)
+    assert r0.mode == "full" and r0.version == 0
+    r1 = svc.query("bfs", 0)  # nothing committed since: cached answer
+    assert r1.mode == "unchanged"
+    for _ in range(3):
+        svc.submit_many(_random_commit(rng, vertex_churn=False))
+        svc.flush()
+        r = svc.query("bfs", 0)
+        assert r.version == svc.version
+        _assert_bit_identical(r.result, queries.bfs(svc.ring.latest.state, 0))
+    assert svc.stats.delta > 0
+
+
+def test_service_cn_double_collect_validates():
+    rng = np.random.default_rng(11)
+    svc = _service(rng)
+    svc.submit_many(_random_commit(rng))
+    svc.flush()
+    r = svc.query("sssp", 0, mode="cn")
+    assert r.validated and r.scan.collects >= 2
+    _assert_bit_identical(r.result,
+                          queries.sssp(svc.ring.latest.state, 0))
+
+
+def test_service_cn_consumes_pending_updates_between_collects():
+    rng = np.random.default_rng(12)
+    svc = _service(rng)
+    svc.query("bfs", 0)
+    # leave updates pending (no flush): cn's interrupting commit_one drains
+    # one batch between collects, so the answer lands on a newer version
+    svc.submit_many([(PUTE, 0, i, 1.0) for i in range(1, 6)])
+    assert svc.scheduler.pending() > 0
+    r = svc.query("bfs", 0, mode="cn")
+    assert r.validated
+    assert r.version > 0
+    _assert_bit_identical(r.result, queries.bfs(svc.ring.latest.state, 0))
+
+
+def test_service_cache_eviction_is_lru():
+    rng = np.random.default_rng(14)
+    svc = _service(rng, max_cached=2)
+    svc.query("bfs", 0)
+    svc.query("bfs", 1)
+    svc.query("bfs", 0)  # refresh 0: it is now the most recent
+    svc.query("bfs", 2)  # evicts 1, not 0
+    assert ("bfs", 0) in svc._cache and ("bfs", 1) not in svc._cache
+    r = svc.query("bfs", 0)
+    assert r.mode == "unchanged"  # the hot key survived eviction
+
+
+def test_service_rejects_unknown_kind_and_mode():
+    rng = np.random.default_rng(13)
+    svc = _service(rng)
+    with pytest.raises(KeyError):
+        svc.query("pagerank", 0)
+    for kind in ("bfs", "bc"):
+        with pytest.raises(ValueError):
+            svc.query(kind, 0, mode="maybe")
+
+
+def test_service_bc_supports_cn_double_collect():
+    rng = np.random.default_rng(15)
+    svc = _service(rng)
+    r = svc.query("bc", 0, mode="cn")
+    assert r.validated and r.mode == "full" and r.scan.collects >= 2

@@ -2,6 +2,9 @@
 semiring-query invariants on random graphs."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dep: pip install -r requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
