@@ -11,14 +11,21 @@ from a fixed source.  We compare:
                    driven by the version ring's per-commit dirty sets.
 
 plus the end-to-end ``GraphService`` streaming path (update ops/sec with
-queries riding along), and query latency as the update rate per query
-grows.  Prints ``name,us_per_call,derived`` CSV rows like the other
-benchmarks, then a speedup summary.
+queries riding along), query latency as the update rate per query grows,
+and the tile-view maintenance path (full ``build_tile_view`` vs
+dirty-set-driven ``refresh_tile_view``, with the occupancy the tile-skipping
+kernels consume).  Prints ``name,us_per_call,derived`` CSV rows like the
+other benchmarks, then a speedup summary, and always writes the whole run
+as machine-readable JSON (default ``BENCH_engine.json``) so the perf
+trajectory is tracked across PRs.
 
-    PYTHONPATH=src python benchmarks/bench_engine.py [--verify]
+    PYTHONPATH=src python benchmarks/bench_engine.py [--verify] \
+        [--n 2048] [--commits 32] [--ops 24] [--json BENCH_engine.json]
 """
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import sys
 import time
@@ -29,6 +36,7 @@ import numpy as np
 import jax
 
 from repro.core import PUTE, REME, queries
+from repro.core.tiles import build_tile_view, occupancy_stats, refresh_tile_view
 from repro.data import load_rmat_graph
 from repro.engine import (
     GraphService,
@@ -41,9 +49,13 @@ from repro.engine import (
 _INCR = {"bfs": incremental_bfs, "sssp": incremental_sssp}
 _FULL = {"bfs": queries.bfs, "sssp": queries.sssp}
 
+ROWS: list[dict] = []
+
 
 def _row(name, us, derived=""):
     print(f"{name},{us:.1f},{derived}", flush=True)
+    ROWS.append({"name": name, "us_per_call": round(us, 1),
+                 "derived": derived})
 
 
 def _block(res):
@@ -52,8 +64,16 @@ def _block(res):
 
 
 def make_commit_stream(rng, n, n_commits, ops_per_commit, hot_frac):
-    """Edge churn confined to a hot vertex set of ``hot_frac * n`` sources."""
-    hot = rng.choice(n, size=max(2, int(n * hot_frac)), replace=False)
+    """Edge churn confined to a hot vertex set of ``hot_frac * n`` sources.
+
+    The hot set is a *contiguous* id range: localized churn (recently
+    inserted vertices, one shard's id block) is the regime the paper's
+    dynamic workloads model, and it keeps the dirty tile rows few — which
+    is what the tile-view refresh path exploits.
+    """
+    size = max(2, int(n * hot_frac))
+    base = int(rng.integers(0, max(1, n - size)))
+    hot = np.arange(base, base + size)
     stream = []
     for _ in range(n_commits):
         ops = []
@@ -95,7 +115,6 @@ def bench_query_paths(graph, versions, src, kind, verify=False):
 
     t0 = time.perf_counter()
     prior = None
-    dirty = None
     modes = {"unchanged": 0, "delta": 0, "full": 0}
     for state, d in versions:
         res, stats = incr_fn(state, prior, d if prior is not None else None,
@@ -138,11 +157,13 @@ def bench_service_stream(graph, stream, src, batch_size=32):
         n_ops += len(ops)
         _block(svc.query("bfs", src).result)
     dt = time.perf_counter() - t0
+    ops_per_s = n_ops / dt
     _row("engine_service_stream", dt / max(len(stream), 1) * 1e6,
-         f"update_ops_per_s={n_ops / dt:.0f};"
+         f"update_ops_per_s={ops_per_s:.0f};"
          f"queries_per_s={len(stream) / dt:.1f};"
          f"unchanged={svc.stats.unchanged};delta={svc.stats.delta};"
          f"full={svc.stats.full}")
+    return ops_per_s
 
 
 def bench_latency_vs_update_rate(graph, rng, n, src, hot_frac,
@@ -172,8 +193,41 @@ def bench_latency_vs_update_rate(graph, rng, n, src, hot_frac,
                  f"speedup={t_full / t_incr:.2f}x")
 
 
+def bench_tile_view(graph, versions):
+    """Tile-view maintenance: full rebuild vs dirty-driven refresh."""
+    _block(build_tile_view(graph))  # warm
+    t0 = time.perf_counter()
+    for state, _ in versions:
+        _block(build_tile_view(state))
+    t_full = time.perf_counter() - t0
+
+    # Warm the refresh traces on a throwaway chain — refresh compiles one
+    # program per row-window width bucket, so every commit must run once
+    # untimed (and refresh *consumes* its input: the row updates donate the
+    # buffers, hence the fresh build for the timed chain).
+    warm = _block(build_tile_view(graph))
+    for state, d in versions:
+        warm = _block(refresh_tile_view(state, warm, d))
+    view = _block(build_tile_view(graph))
+    t0 = time.perf_counter()
+    for state, d in versions:
+        view = _block(refresh_tile_view(state, view, d))
+    t_incr = time.perf_counter() - t0
+
+    n = len(versions)
+    stats = occupancy_stats(view)
+    speedup = t_full / t_incr
+    _row("engine_tileview_full", t_full / n * 1e6, f"commits={n}")
+    _row("engine_tileview_refresh", t_incr / n * 1e6,
+         f"speedup={speedup:.2f}x;"
+         f"tile_skip_rate={stats['tile_skip_rate']:.4f};"
+         f"tiles_active={stats['tiles_active']}/{stats['tiles_total']}")
+    return speedup, stats
+
+
 def main(n=2048, edge_factor=8, n_commits=32, ops_per_commit=24,
-         hot_frac=0.05, seed=0, verify=False):
+         hot_frac=0.05, seed=0, verify=False, json_path="BENCH_engine.json"):
+    ROWS.clear()
     rng = np.random.default_rng(seed)
     graph = load_rmat_graph(n, n * edge_factor, slack=2.0, seed=seed)
     deg = np.bincount(np.asarray(graph.esrc)[np.asarray(graph.esrc) < n],
@@ -188,14 +242,54 @@ def main(n=2048, edge_factor=8, n_commits=32, ops_per_commit=24,
     for kind in ("bfs", "sssp"):
         speedups[kind] = bench_query_paths(graph, versions, src, kind,
                                            verify=verify)
-    bench_service_stream(graph, stream, src)
+    ops_per_s = bench_service_stream(graph, stream, src)
     bench_latency_vs_update_rate(graph, rng, n, src, hot_frac)
+    tile_speedup, tile_stats = bench_tile_view(graph, versions)
 
     print(f"\nIncremental speedup at <={hot_frac * 100:.0f}% dirty/commit: "
           f"BFS {speedups['bfs']:.2f}x, SSSP {speedups['sssp']:.2f}x "
-          f"over full recompute", flush=True)
-    return speedups
+          f"over full recompute; tile refresh {tile_speedup:.2f}x over "
+          f"rebuild", flush=True)
+
+    payload = {
+        "bench": "engine",
+        "backend": jax.default_backend(),
+        "params": {"n": n, "edge_factor": edge_factor,
+                   "n_commits": n_commits, "ops_per_commit": ops_per_commit,
+                   "hot_frac": hot_frac, "seed": seed},
+        "rows": ROWS,
+        "speedups": {"bfs_incr_vs_full": round(speedups["bfs"], 3),
+                     "sssp_incr_vs_full": round(speedups["sssp"], 3),
+                     "tileview_refresh_vs_rebuild": round(tile_speedup, 3)},
+        "service": {"update_ops_per_s": round(ops_per_s, 1)},
+        "tile_occupancy": tile_stats,
+        "verified": bool(verify),
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {json_path}", flush=True)
+    return payload
+
+
+def _parse_args(argv):
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--n", type=int, default=2048,
+                   help="vertex count (power of two for R-MAT)")
+    p.add_argument("--edge-factor", type=int, default=8)
+    p.add_argument("--commits", type=int, default=32)
+    p.add_argument("--ops", type=int, default=24,
+                   help="update ops per commit")
+    p.add_argument("--hot-frac", type=float, default=0.05)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--verify", action="store_true")
+    p.add_argument("--json", default="BENCH_engine.json",
+                   help="output path for the machine-readable results")
+    return p.parse_args(argv)
 
 
 if __name__ == "__main__":
-    main(verify="--verify" in sys.argv)
+    a = _parse_args(sys.argv[1:])
+    main(n=a.n, edge_factor=a.edge_factor, n_commits=a.commits,
+         ops_per_commit=a.ops, hot_frac=a.hot_frac, seed=a.seed,
+         verify=a.verify, json_path=a.json)

@@ -208,22 +208,54 @@ def bc_dependencies(state: GraphState, src) -> BCResult:
     return BCResult(ok, delta, sigma, level)
 
 
-def bc(state: GraphState, v, sources=None) -> jax.Array:
-    """Betweenness centrality of ``v``: sum_s delta(s|v).
+def bc_map(state: GraphState, v, sources) -> jax.Array:
+    """Per-source Brandes baseline: ``lax.map`` of ``bc_dependencies``.
 
-    ``sources`` defaults to every alive vertex (exact Brandes).  Batched via
-    ``lax.map`` -- on the dense path this becomes semiring matmuls.
+    Kept as the oracle/benchmark baseline for ``bc``'s batched path.
     """
     v = jnp.asarray(v, jnp.int32)
-    if sources is None:
-        sources = jnp.arange(state.vcap, dtype=jnp.int32)
 
     def one(s):
         r = bc_dependencies(state, s)
         return jnp.where(r.ok, r.delta[jnp.clip(v, 0, state.vcap - 1)], 0.0)
 
-    vals = lax.map(one, jnp.asarray(sources, jnp.int32))
+    return jnp.sum(lax.map(one, jnp.asarray(sources, jnp.int32)))
+
+
+def bc(state: GraphState, v, sources=None, *, method: str = "batched",
+       use_kernel: bool = False, tile_view=None) -> jax.Array:
+    """Betweenness centrality of ``v``: sum_s delta(s|v).
+
+    ``sources`` defaults to every vertex slot (dead sources contribute 0 —
+    exact Brandes over the alive set).  The default ``method="batched"``
+    runs every source at once as level-synchronous semiring matmuls
+    (``bc_batched_dense``); ``method="map"`` is the per-source ``lax.map``
+    baseline.  ``tile_view`` (see ``repro.core.tiles``) supplies the dense
+    weights plus the tile-occupancy mask so the semiring products skip
+    empty tiles.
+    """
+    v = jnp.asarray(v, jnp.int32)
+    if sources is None:
+        sources = jnp.arange(state.vcap, dtype=jnp.int32)
+    sources = jnp.asarray(sources, jnp.int32)
     ok = state.alive[jnp.clip(v, 0, state.vcap - 1)]
+    if method == "map":
+        total = bc_map(state, v, sources)
+        return jnp.where(ok, total, jnp.nan)
+    if method != "batched":
+        raise ValueError(f"unknown bc method {method!r}")
+    tile = 128
+    if tile_view is not None:
+        from .tiles import dense_views_from_tiles
+        adj_mask, _, alive = dense_views_from_tiles(state, tile_view)
+        amask, tile = tile_view.occ, tile_view.tile
+    else:
+        adj_mask, _, alive = dense_views(state)
+        amask = None
+    delta, _, _, src_ok = bc_batched_dense(
+        adj_mask, sources, alive, use_kernel=use_kernel, amask=amask,
+        tile=tile)
+    vals = jnp.where(src_ok, delta[:, jnp.clip(v, 0, state.vcap - 1)], 0.0)
     return jnp.where(ok, jnp.sum(vals), jnp.nan)
 
 
@@ -231,12 +263,16 @@ def bc(state: GraphState, v, sources=None) -> jax.Array:
 # vmap-over-sources == semiring matmuls: the MXU path (and the "static
 # parallel analytics" baseline corresponding to Ligra in the paper's study).
 
-@partial(jax.jit, static_argnames=("use_kernel",))
+@partial(jax.jit, static_argnames=("use_kernel", "tile"))
 def bfs_batched_dense(adj_mask: jax.Array, srcs: jax.Array,
-                      alive: jax.Array, use_kernel: bool = False):
-    """Multi-source BFS over a dense adjacency mask.  Returns dist[S, V]."""
+                      alive: jax.Array, use_kernel: bool = False,
+                      amask: jax.Array | None = None, tile: int = 128):
+    """Multi-source BFS over a dense adjacency mask.  Returns dist[S, V].
+
+    ``amask``: optional tile-occupancy grid of the adjacency (see
+    ``repro.core.tiles``) — empty tiles are skipped by the semiring product.
+    """
     V = adj_mask.shape[0]
-    S = srcs.shape[0]
     a = (adj_mask & alive[:, None] & alive[None, :]).astype(jnp.float32)
     ok = alive[jnp.clip(srcs, 0, V - 1)]
     front0 = jax.nn.one_hot(srcs, V, dtype=jnp.float32) * ok[:, None]
@@ -248,7 +284,8 @@ def bfs_batched_dense(adj_mask: jax.Array, srcs: jax.Array,
 
     def body(c):
         dist, front, lvl = c
-        nxt = semiring.bool_mm(front, a, use_kernel=use_kernel)
+        nxt = semiring.bool_mm(front, a, use_kernel=use_kernel,
+                               amask=amask, tile=tile)
         newly = (nxt > 0) & (dist < 0)
         dist = jnp.where(newly, lvl + 1, dist)
         return dist, newly.astype(jnp.float32), lvl + 1
@@ -257,11 +294,13 @@ def bfs_batched_dense(adj_mask: jax.Array, srcs: jax.Array,
     return dist
 
 
-@partial(jax.jit, static_argnames=("use_kernel",))
+@partial(jax.jit, static_argnames=("use_kernel", "tile"))
 def sssp_batched_dense(w_dense: jax.Array, srcs: jax.Array,
-                       alive: jax.Array, use_kernel: bool = False):
+                       alive: jax.Array, use_kernel: bool = False,
+                       amask: jax.Array | None = None, tile: int = 128):
     """Multi-source Bellman-Ford over dense weights.  Returns (dist[S,V], negcycle[S])."""
     V = w_dense.shape[0]
+    S = srcs.shape[0]
     big = jnp.where(alive[:, None] & alive[None, :], w_dense, INF)
     ok = alive[jnp.clip(srcs, 0, V - 1)]
     dist0 = jnp.where(
@@ -269,20 +308,104 @@ def sssp_batched_dense(w_dense: jax.Array, srcs: jax.Array,
 
     def cond(c):
         _, changed, it = c
-        return changed & (it < V)
+        return changed.any() & (it < V)
 
     def body(c):
         dist, _, it = c
-        nd = jnp.minimum(dist, semiring.minplus_mm(dist, big, use_kernel=use_kernel))
-        return nd, (nd < dist).any(), it + 1
+        nd = jnp.minimum(dist, semiring.minplus_mm(dist, big,
+                                                   use_kernel=use_kernel,
+                                                   amask=amask, tile=tile))
+        return nd, (nd < dist).any(axis=1), it + 1
 
-    dist, _, _ = lax.while_loop(cond, body, (dist0, jnp.bool_(True), jnp.int32(0)))
-    extra = jnp.minimum(dist, semiring.minplus_mm(dist, big, use_kernel=use_kernel))
-    negcycle = ((extra < dist) & (extra < INF)).any(axis=1)
-    return dist, negcycle
+    # The paper's CHECKNEGCYCLE from the loop's own exit state (PR 1 applied
+    # this to the COO path): row s of the per-source changed vector is still
+    # True at exit only when the V-th relax pass improved that source's
+    # distances, which — shortest simple paths having < V edges — happens
+    # iff a negative cycle is reachable from s.  No extra relax pass needed.
+    dist, changed, _ = lax.while_loop(
+        cond, body, (dist0, jnp.ones((S,), jnp.bool_), jnp.int32(0)))
+    return dist, changed
 
 
 def dense_views(state: GraphState):
     """Snapshot -> (adjacency mask, dense weights, alive) for batched queries."""
     w = densify(state)
     return w < INF, w, state.alive
+
+
+# ------------------------- batched Brandes (BC) ---------------------------
+
+@partial(jax.jit, static_argnames=("use_kernel", "tile"))
+def bc_batched_dense(adj_mask: jax.Array, srcs: jax.Array, alive: jax.Array,
+                     use_kernel: bool = False,
+                     amask: jax.Array | None = None, tile: int = 128):
+    """Multi-source Brandes as level-synchronous semiring matmuls.
+
+    Forward sweep: bool_mm expands the per-source frontier (levels) while
+    count_mm accumulates sigma, the number of shortest paths (integers in
+    f32 — exact below 2^24).  Backward sweep: per level ``l`` (deepest
+    first) the dependency flow  delta[u] += sigma[u] * sum_w A[u,w] *
+    [level[w] = l+1] * (1 + delta[w]) / sigma[w]  is one count_mm against
+    the transposed adjacency.  Levels and sigma match per-source
+    ``bc_dependencies`` bit-exactly; delta agrees up to float summation
+    order (the scatter-add vs MXU-dot reassociation).
+
+    Returns ``(delta[S,V], sigma[S,V], level[S,V], ok[S])``.
+
+    ``amask``: optional tile-occupancy grid of the adjacency — both sweeps
+    skip empty tiles (the transposed sweep uses the transposed grid).
+    """
+    V = adj_mask.shape[0]
+    a = (adj_mask & alive[:, None] & alive[None, :]).astype(jnp.float32)
+    at = a.T
+    amask_t = None if amask is None else amask.T
+    ok = alive[jnp.clip(srcs, 0, V - 1)] & (srcs >= 0) & (srcs < V)
+    front0 = jax.nn.one_hot(srcs, V, dtype=jnp.float32) * ok[:, None]
+    level0 = jnp.where(front0 > 0, 0, -1).astype(jnp.int32)
+    sigma0 = front0
+
+    # Forward phase: levels + shortest-path counts.
+    def fcond(c):
+        _, _, front, lvl = c
+        return (front > 0).any() & (lvl < V)
+
+    def fbody(c):
+        level, sigma, front, lvl = c
+        # One counting product per level does both jobs: frontier sigma is
+        # >= 1 on every frontier vertex and counts are exact integers in
+        # f32 (below 2^24), so adds > 0 is precisely the bool_mm frontier
+        # hit — no separate boolean product needed.
+        adds = semiring.count_mm(jnp.where(front > 0, sigma, 0.0), a,
+                                 use_kernel=use_kernel, amask=amask,
+                                 tile=tile)
+        newly = (adds > 0) & (level < 0)
+        sigma = jnp.where(newly, adds, sigma)
+        level = jnp.where(newly, lvl + 1, level)
+        return level, sigma, newly.astype(jnp.float32), lvl + 1
+
+    level, sigma, _, maxl = lax.while_loop(
+        fcond, fbody, (level0, sigma0, front0, jnp.int32(0)))
+
+    # Backward phase, deepest level first.  g carries the per-vertex
+    # dependency flow of the level below; pulling it across edges is a
+    # counting product against A^T.
+    sig_safe = jnp.where(sigma > 0, sigma, 1.0)
+
+    def bcond(c):
+        _, l = c
+        return l >= 0
+
+    def bbody(c):
+        delta, l = c
+        g = jnp.where(level == l + 1, (1.0 + delta) / sig_safe, 0.0)
+        pulled = semiring.count_mm(g, at, use_kernel=use_kernel,
+                                   amask=amask_t, tile=tile)
+        delta = delta + jnp.where(level == l, sigma * pulled, 0.0)
+        return delta, l - 1
+
+    # maxl is deepest-level + 1 (the forward loop's last pass consumes an
+    # empty frontier), so the deepest *edge* layer is maxl-2 -> maxl-1.
+    delta, _ = lax.while_loop(
+        bcond, bbody, (jnp.zeros_like(sigma), maxl - 2))
+    delta = jnp.where(level == 0, 0.0, delta)  # sources contribute nothing
+    return delta, sigma, level, ok

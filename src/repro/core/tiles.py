@@ -1,0 +1,207 @@
+"""Blocked adjacency view of a snapshot: dense tiles + live-edge occupancy.
+
+The batched semiring queries operate on the dense ``vcap x vcap`` weight
+matrix, but sparse real-world graphs leave most of its ``T x T`` tiles with
+no live edge at all — every one of those tiles is pure semiring identity
+(+inf / 0) and the MXU/VPU sweep over it is wasted work.  A :class:`TileView`
+makes that sparsity first-class:
+
+  * ``w``   — the dense weight matrix padded up to a whole number of tiles
+    (+inf = no edge), the operand the Pallas kernels consume;
+  * ``occ`` — the ``(Vp/T) x (Vp/T)`` int32 grid of live-edge counts per
+    tile.  ``occ[i, j] == 0`` iff tile ``(i, j)`` is all-identity, which is
+    exactly the contract the tile-skipping kernels
+    (``repro.kernels.*_mm_masked``) and the blocked jnp fallbacks
+    (``repro.core.semiring``) require of their ``amask``.
+
+``build_tile_view`` derives both from scratch in O(vcap^2 + ecap).
+``refresh_tile_view`` is the incremental path the engine uses: a committed
+update batch reports the vertices it disturbed (the version ring's
+dirty-vertex set), and only those vertices' *rows* of ``w`` — and the tile
+rows containing them — are re-derived.  This is sound because every change
+to the dense matrix lives in a dirty row: an edge mutation bumps ``ecnt`` at
+the edge's source (dirtying it), and RemV tombstones every incident edge
+while bumping each *source's* ``ecnt`` — so column-side liveness changes are
+always mirrored by a dirty source row (see ``core.updates``).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .graph_state import INF, NOKEY, GraphState, live_edge_mask
+
+TILE = 128  # default tile edge; matches the MXU-aligned kernel blocks
+
+
+class TileView(NamedTuple):
+    """Blocked adjacency snapshot: padded dense weights + tile occupancy."""
+
+    w: jax.Array    # f32[Vp, Vp]   dense weights, +inf = no edge, Vp % T == 0
+    occ: jax.Array  # int32[nt, nt] live-edge count per (src-tile, dst-tile)
+
+    @property
+    def vp(self) -> int:
+        return self.w.shape[0]
+
+    @property
+    def n_tiles(self) -> int:
+        return self.occ.shape[0]
+
+    @property
+    def tile(self) -> int:
+        return self.vp // self.occ.shape[0]
+
+
+def _padded_dim(vcap: int, tile: int) -> int:
+    return -(-vcap // tile) * tile
+
+
+def active_tile_mask(view: TileView) -> jax.Array:
+    """bool[nt, nt]: tiles holding at least one live edge."""
+    return view.occ > 0
+
+
+def occupancy_stats(view: TileView) -> dict:
+    """Host-side summary: how much of the tile grid the kernels can skip."""
+    occ = jax.device_get(view.occ)
+    total = int(occ.size)
+    active = int((occ > 0).sum())
+    return {
+        "tile": view.tile,
+        "grid": [view.n_tiles, view.n_tiles],
+        "tiles_total": total,
+        "tiles_active": active,
+        "tile_skip_rate": (total - active) / total if total else 0.0,
+        "live_edges": int(occ.sum()),
+    }
+
+
+@partial(jax.jit, static_argnames=("tile",))
+def build_tile_view(state: GraphState, tile: int = TILE) -> TileView:
+    """Full O(vcap^2 + ecap) derivation of the blocked view from a snapshot."""
+    vcap = state.vcap
+    vp = _padded_dim(vcap, tile)
+    nt = vp // tile
+    live = live_edge_mask(state)
+    srcc = jnp.where(live, state.esrc, 0)
+    dstc = jnp.where(live, state.edst, 0)
+    w = jnp.full((vp, vp), INF, jnp.float32)
+    w = w.at[srcc, dstc].min(jnp.where(live, state.ew, INF), mode="drop")
+    occ = jnp.zeros((nt, nt), jnp.int32).at[srcc // tile, dstc // tile].add(
+        live.astype(jnp.int32), mode="drop")
+    return TileView(w, occ)
+
+
+@partial(jax.jit, static_argnames=("tile", "width"), donate_argnums=(1, 2))
+def _refresh_row(state: GraphState, w: jax.Array, occ: jax.Array,
+                 r, lo, tile: int, width: int):
+    """Recompute tile row ``r``: scatter-min the row's live edges into a
+    fresh identity ``tile x Vp`` slab (bit-identical to the full build —
+    min is order-free) plus its occupancy counts, and write both back with
+    ``dynamic_update_slice``.
+
+    Two things make this O(row) instead of O(graph):
+
+      * the edge table is sorted by ``(src, dst)``, so row ``r``'s edges
+        are the contiguous segment starting at ``lo`` (host-computed via
+        searchsorted); only a static ``width``-wide window around it is
+        scanned, masked down to exactly the row's live edges;
+      * ``w``/``occ`` are *donated*: the row writes happen in place
+        instead of copying the O(Vp^2) matrix per row.
+
+    ``r``/``lo`` are traced, so every dirty row with the same window width
+    reuses one compiled program.
+    """
+    vp = w.shape[0]
+    nt = occ.shape[0]
+    vcap = state.vcap
+    r = jnp.asarray(r, jnp.int32)
+    start = jnp.clip(jnp.asarray(lo, jnp.int32), 0, state.ecap - width)
+    esrc = lax.dynamic_slice_in_dim(state.esrc, start, width)
+    edst = lax.dynamic_slice_in_dim(state.edst, start, width)
+    ew = lax.dynamic_slice_in_dim(state.ew, start, width)
+    live = ((esrc != NOKEY) & (ew < INF)
+            & state.alive[jnp.clip(esrc, 0, vcap - 1)]
+            & state.alive[jnp.clip(edst, 0, vcap - 1)])
+    in_row = live & (esrc // tile == r)
+    srcc = jnp.where(in_row, esrc, 0)
+    dstc = jnp.where(in_row, edst, 0)
+    slab = jnp.full((tile, vp), INF, jnp.float32).at[
+        jnp.where(in_row, srcc - r * tile, 0), dstc,
+    ].min(jnp.where(in_row, ew, INF), mode="drop")
+    occ_row = jnp.zeros((1, nt), jnp.int32).at[
+        0, jnp.where(in_row, dstc // tile, 0)
+    ].add(in_row.astype(jnp.int32), mode="drop")
+    return (lax.dynamic_update_slice(w, slab, (r * tile, jnp.int32(0))),
+            lax.dynamic_update_slice(occ, occ_row, (r, jnp.int32(0))))
+
+
+@partial(jax.jit, static_argnames=("nt", "tile"))
+def _dirty_tile_rows(dirty: jax.Array, nt: int, tile: int) -> jax.Array:
+    ids = jnp.arange(dirty.shape[0], dtype=jnp.int32)
+    return jnp.zeros((nt,), jnp.bool_).at[ids // tile].max(dirty, mode="drop")
+
+
+def refresh_tile_view(state: GraphState, prev: TileView, dirty: jax.Array,
+                      tile: int = TILE) -> TileView:
+    """Incremental rebuild from a dirty-vertex set (full rebuild fallback).
+
+    ``dirty`` must cover every vertex whose out-edge list or liveness
+    changed since ``prev`` was derived (a superset only costs time) — the
+    version ring's ``dirty_between`` provides exactly that.  Host-side
+    strategy pick per call: no dirty tile row returns ``prev`` as-is; a
+    few dirty rows re-derive only those rows (one jitted ``_refresh_row``
+    each — a whole-row recompute, not just dirty-vertex cells, because
+    clean sources share the tile row); and when more than half the rows
+    moved — or the vertex table was resized, or there is no dirty info —
+    the full build is cheaper and exact by construction.
+
+    When the row path runs, ``prev``'s buffers are DONATED to the in-place
+    row updates: treat the call as *consuming* ``prev`` (hold only the
+    returned view afterwards), exactly how ``GraphService.tile_view``
+    rotates it.  Without donation every refreshed row would copy the whole
+    O(Vp^2) matrix and the incremental path could never beat the rebuild.
+    """
+    if (prev is None or dirty is None
+            or prev.vp != _padded_dim(state.vcap, tile)
+            or prev.tile != tile  # same vp, different grid: occ would corrupt
+            or dirty.shape[0] != state.vcap):
+        return build_tile_view(state, tile)
+    nt = prev.n_tiles
+    import numpy as np
+    rows = np.flatnonzero(
+        np.asarray(jax.device_get(_dirty_tile_rows(dirty, nt, tile))))
+    if rows.size == 0:
+        return prev
+    if rows.size > nt // 2:
+        return build_tile_view(state, tile)
+    # Row segments off the sorted edge table: [lo, hi) per dirty tile row.
+    esrc_host = np.asarray(jax.device_get(state.esrc))
+    los = np.searchsorted(esrc_host, rows * tile, side="left")
+    his = np.searchsorted(esrc_host, (rows + 1) * tile - 1, side="right")
+    w, occ = prev.w, prev.occ
+    for r, lo, hi in zip(rows, los, his):
+        # Static window width (few power-of-two variants -> few compiles).
+        width = 64
+        while width < hi - lo:
+            width *= 2
+        width = min(width, state.ecap)
+        w, occ = _refresh_row(state, w, occ, jnp.int32(r), jnp.int32(lo),
+                              tile=tile, width=width)
+    return TileView(w, occ)
+
+
+def dense_views_from_tiles(state: GraphState, view: TileView):
+    """TileView -> (adj mask, weights, alive) shaped like ``dense_views``.
+
+    Slices the padding back off; the batched queries re-pad internally and
+    the occupancy grid stays aligned because padding always restores the
+    same ``Vp``.
+    """
+    w = view.w[:state.vcap, :state.vcap]
+    return w < INF, w, state.alive

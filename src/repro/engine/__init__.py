@@ -17,6 +17,7 @@ from .incremental import (  # noqa: F401
     IncrementalStats,
     delta_bfs,
     delta_sssp,
+    incremental_bc,
     incremental_bfs,
     incremental_sssp,
     results_equal,

@@ -49,9 +49,11 @@ from repro.core.graph_state import (
     find_edge_slots,
 )
 from repro.core.queries import (
+    BCResult,
     BFSResult,
     SSSPResult,
     _edge_views,
+    bc_dependencies,
     bfs,
     relax_fixpoint,
     sssp,
@@ -261,6 +263,30 @@ def incremental_sssp(state: GraphState, prior: Optional[SSSPResult],
     return res, stats
 
 
+def incremental_bc(state: GraphState, prior: Optional[BCResult],
+                   dirty: Optional[jax.Array], src, *,
+                   dirty_threshold: float = 0.25):
+    """BC dependencies with the engine's snapshot/cache semantics.
+
+    Same *unchanged* shortcut as BFS/SSSP — churn that never touches the
+    prior forward-traversal region (``level >= 0``) cannot move any
+    shortest path from ``src``, so the cached dependencies stand.  There is
+    no delta path yet (dependency deltas are non-local along the backward
+    sweep; see ROADMAP open items), so a touched region means a full
+    recompute.  ``dirty_threshold`` is accepted for signature parity.
+    """
+    del dirty_threshold  # no delta path to gate yet
+    usable = (prior is not None and bool(prior.ok)
+              and prior.level.shape[0] == state.vcap)
+    if dirty is None or not usable:
+        return bc_dependencies(state, src), IncrementalStats("full")
+    n_dirty, touched = (int(x) for x in _dirty_stats(prior.level >= 0, dirty))
+    frac = n_dirty / state.vcap
+    if not touched:
+        return prior, IncrementalStats("unchanged", n_dirty, frac)
+    return bc_dependencies(state, src), IncrementalStats("full", n_dirty, frac)
+
+
 # ------------------------------ validation --------------------------------
 
 def results_equal(a, b) -> bool:
@@ -273,9 +299,9 @@ def validate_incremental(state: GraphState, src, result, kind: str) -> bool:
     """``cmp_tree``-style check: does ``result`` match a fresh collect?
 
     Compares the reached region, the traversal tree, and the payload of the
-    incremental answer against ``queries.bfs``/``queries.sssp`` run from
-    scratch on the same snapshot — the engine's analogue of the paper's
-    CMPTREE validation of a SCAN.
+    incremental answer against ``queries.bfs``/``sssp``/``bc_dependencies``
+    run from scratch on the same snapshot — the engine's analogue of the
+    paper's CMPTREE validation of a SCAN.
     """
-    fresh = bfs(state, src) if kind == "bfs" else sssp(state, src)
+    fresh = {"bfs": bfs, "sssp": sssp, "bc": bc_dependencies}[kind](state, src)
     return results_equal(result, fresh)

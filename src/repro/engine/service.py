@@ -31,12 +31,15 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Sequence, Tuple
 
+import jax.numpy as jnp
+
 from repro.core import queries
 from repro.core.graph_state import GraphState
 from repro.core.snapshot import ScanStats
+from repro.core.tiles import TileView, refresh_tile_view
 
 from .incremental import (
-    IncrementalStats,
+    incremental_bc,
     incremental_bfs,
     incremental_sssp,
     results_equal,
@@ -44,7 +47,8 @@ from .incremental import (
 from .scheduler import StreamScheduler
 from .version_ring import PinnedSnapshot, VersionRing
 
-_INCREMENTAL = {"bfs": incremental_bfs, "sssp": incremental_sssp}
+_INCREMENTAL = {"bfs": incremental_bfs, "sssp": incremental_sssp,
+                "bc": incremental_bc}
 _FULL = {"bfs": queries.bfs, "sssp": queries.sssp,
          "bc": queries.bc_dependencies}
 
@@ -103,6 +107,9 @@ class GraphService:
         self.max_cached = max_cached
         self.stats = ServiceStats()
         self._cache: Dict[Tuple[str, int], _CacheSlot] = {}
+        self._tiles: Optional[TileView] = None
+        self._tiles_version: int = -1
+        self._bc_scores = None  # ((version, use_kernel), scores)
 
     # ------------------------------ updates ------------------------------
 
@@ -129,8 +136,6 @@ class GraphService:
     def _collect(self, kind: str, src: int):
         """One incremental collect against the current latest ring version."""
         entry = self.ring.latest
-        if kind == "bc":  # no incremental path: every collect recomputes
-            return entry, _FULL[kind](entry.state, src), IncrementalStats("full")
         slot = self._cache.get((kind, src))
         prior, dirty = None, None
         if slot is not None:
@@ -167,8 +172,9 @@ class GraphService:
     def query(self, kind: str, src: int, mode: str = "icn") -> QueryReply:
         """Answer one analytics query.
 
-        ``kind``: ``"bfs"`` | ``"sssp"`` (incremental) or ``"bc"``
-        (every collect is a full recompute, in both modes).
+        ``kind``: ``"bfs"`` | ``"sssp"`` (unchanged/delta/full) or ``"bc"``
+        (unchanged/full — BC has no delta path yet, but caches per
+        ``(kind, src)`` with the same snapshot semantics).
         ``mode``: ``"icn"`` or ``"cn"``.
         """
         if kind not in _FULL:
@@ -216,3 +222,41 @@ class GraphService:
         self.stats.collects += scan.collects
         self.stats.count(mode)
         return QueryReply(prev_res, entry.version, mode, False, scan)
+
+    # --------------------------- batched analytics ------------------------
+
+    def tile_view(self) -> TileView:
+        """Blocked adjacency view of the latest version, kept fresh
+        incrementally: each call re-derives only the tile rows the ring's
+        dirty sets say moved since the last call (full rebuild when the
+        span left the ring window or the vertex table grew)."""
+        entry = self.ring.latest
+        if self._tiles is not None and self._tiles_version == entry.version:
+            return self._tiles
+        dirty = None
+        if self._tiles is not None:
+            dirty = self.ring.dirty_between(self._tiles_version, entry.version)
+        self._tiles = refresh_tile_view(entry.state, self._tiles, dirty)
+        self._tiles_version = entry.version
+        return self._tiles
+
+    def bc_scores(self, use_kernel: bool = False):
+        """Exact betweenness centrality of every vertex at the latest
+        version, via the tile-sparse batched Brandes path (all sources at
+        once as semiring matmuls; empty tiles skipped).  Returns
+        ``(scores f32[vcap], version)``; cached per ring version."""
+        entry = self.ring.latest
+        key = (entry.version, use_kernel)
+        if self._bc_scores is not None and self._bc_scores[0] == key:
+            return self._bc_scores[1], entry.version
+        state = entry.state
+        view = self.tile_view()
+        from repro.core.tiles import dense_views_from_tiles
+        adj_mask, _, alive = dense_views_from_tiles(state, view)
+        srcs = jnp.arange(state.vcap, dtype=jnp.int32)
+        delta, _, _, ok = queries.bc_batched_dense(
+            adj_mask, srcs, alive, use_kernel=use_kernel, amask=view.occ)
+        scores = jnp.sum(jnp.where(ok[:, None], delta, 0.0), axis=0)
+        scores = jnp.where(alive, scores, jnp.nan)
+        self._bc_scores = (key, scores)
+        return scores, entry.version

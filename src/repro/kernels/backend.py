@@ -1,0 +1,47 @@
+"""Backend detection + shared guards for the kernel modules.
+
+Lives in its own module (rather than ``ops.py``) so the raw kernel modules
+can default to the detected mode without importing ``ops`` back — ``ops``
+imports the kernel modules, and a reverse import would be a cycle.
+"""
+from __future__ import annotations
+
+import jax
+
+# Pallas kernels compile only on TPU; everywhere else (this CPU container
+# included) they run the kernel body in interpret mode, which is what the
+# oracle tests validate against.
+INTERPRET: bool = jax.default_backend() != "tpu"
+
+
+def check_blocks(name: str, s: int, kdim: int, n: int,
+                 bm: int, bk: int, bn: int) -> None:
+    """Refuse shapes the kernel grid would silently truncate.
+
+    ``grid = (s // bm, n // bn, kdim // bk)`` drops trailing rows/columns
+    when a dimension is not a block multiple; every raw kernel entry point
+    calls this so a direct call can't return wrong-shaped results (the
+    ``ops`` wrappers pad first and never trip it).
+    """
+    if s % bm or kdim % bk or n % bn:
+        raise ValueError(
+            f"{name}: shapes ({s}, {kdim}) x ({kdim}, {n}) are not "
+            f"multiples of blocks (bm={bm}, bk={bk}, bn={bn}); grid "
+            "truncation would drop trailing rows/columns — pad the operands "
+            f"(repro.kernels.ops.{name} does) or pass dividing blocks")
+
+
+def check_amask(name: str, amask_shape, kdim: int, n: int, tile: int) -> None:
+    """The tile-occupancy grid must tile the right operand exactly.
+
+    A mismatched grid (e.g. a ``TileView`` built at a different ``tile``)
+    would be silently clipped by the block-mask coarsening and skip live
+    slabs; shared by the ``ops`` wrappers and the jnp fallbacks in
+    ``repro.core.semiring`` so both paths raise identically.
+    """
+    expect = (-(-kdim // tile), -(-n // tile))
+    if tuple(amask_shape) != expect:
+        raise ValueError(
+            f"{name}: amask shape {tuple(amask_shape)} does not tile the "
+            f"({kdim}, {n}) operand at tile={tile} (expected {expect}); "
+            "was the tile view built with a different tile size?")

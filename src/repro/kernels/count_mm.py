@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: counting-semiring blocked matmul (Brandes sigma).
+
+out[s, j] = sum_k s[s, k] * a[k, j] — a plain f32 matmul on the MXU, but over
+shortest-path *counts* flowing along adjacency masks, which is the third
+semiring the batched Brandes sweep needs (bool for levels, count for sigma
+and the backward dependency accumulation).  Counts are integers carried in
+f32: exact as long as they stay below 2^24, which holds for the graph sizes
+this reproduction targets.
+
+Grid = (S/bm, V/bn, V/bk), k innermost with VMEM accumulation, identical to
+``bool_mm`` minus the threshold epilogue.  ``count_mm_masked`` skips the MXU
+dot for (slab, tile) pairs whose occupancy masks say the contribution is
+all-zero (the (+, x) semiring identity), driven by the same SMEM occupancy
+grids as the other masked kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .backend import INTERPRET, check_blocks
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 512
+
+
+def _kernel(s_ref, a_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(s_ref[...], a_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+def _masked_kernel(sm_ref, am_ref, s_ref, a_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when((sm_ref[0, 0] > 0) & (am_ref[0, 0] > 0))
+    def _compute():
+        o_ref[...] += jnp.dot(s_ref[...], a_ref[...],
+                              preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def count_mm(s: jax.Array, a: jax.Array, *, bm: int = DEFAULT_BM,
+             bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+             interpret: bool = INTERPRET) -> jax.Array:
+    """s: [S, V] f32 counts; a: [V, V'] f32 -> [S, V'] f32 (plain matmul)."""
+    m, kdim = s.shape
+    _, n = a.shape
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, kdim)
+    check_blocks("count_mm", m, kdim, n, bm, bk, bn)
+    grid = (m // bm, n // bn, kdim // bk)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(s, a)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def count_mm_masked(s: jax.Array, a: jax.Array, smask: jax.Array,
+                    amask: jax.Array, *, bm: int = DEFAULT_BM,
+                    bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+                    interpret: bool = INTERPRET) -> jax.Array:
+    """Tile-skipping counting product.
+
+    ``smask``: int32 [S/bm, K/bk] — nonzero iff the count slab has any
+    nonzero entry; ``amask``: int32 [K/bk, N/bn] — nonzero iff the
+    adjacency tile has any live edge.  A zero mask MUST imply an all-zero
+    block.
+    """
+    m, kdim = s.shape
+    _, n = a.shape
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, kdim)
+    check_blocks("count_mm", m, kdim, n, bm, bk, bn)
+    grid = (m // bm, n // bn, kdim // bk)
+    if smask.shape != (grid[0], grid[2]) or amask.shape != (grid[2], grid[1]):
+        raise ValueError(
+            f"count_mm_masked: mask shapes {smask.shape}/{amask.shape} do "
+            f"not match the block grid ({grid[0]}, {grid[2]})/"
+            f"({grid[2]}, {grid[1]})")
+    return pl.pallas_call(
+        _masked_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, k: (i, k),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda i, j, k: (k, j),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(smask.astype(jnp.int32), amask.astype(jnp.int32), s, a)

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .backend import INTERPRET
+
 
 DEFAULT_BQ = 128
 DEFAULT_BK = 128
@@ -87,7 +89,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, sm_scale: float | None = None,
                     window: int | None = None,
                     bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool = INTERPRET) -> jax.Array:
     """q: [B, Hq, Sq, D]; k, v: [B, Hkv, Skv, D] -> [B, Hq, Sq, D].
 
     Causal alignment matches the oracle: query i sees kv j iff

@@ -8,6 +8,14 @@ output-tile accumulation (running elementwise min) across the k sweep.
 
 +inf entries (absent edges / unreached sources) flow through min() untouched,
 so the tombstone encoding of the graph state needs no special-casing.
+
+``minplus_mm_masked`` is the tile-skipping variant: two scalar occupancy
+grids ride along in SMEM — ``dmask[S/bm, K/bk]`` (frontier slab holds any
+finite distance) and ``wmask[K/bk, N/bn]`` (weight tile holds any live
+edge) — and a ``pl.when`` guard skips the broadcast-min for (slab, tile)
+pairs whose product is all-+inf, i.e. the semiring identity.  Output-tile
+init still runs at k == 0, so a fully skipped output tile is +inf, exactly
+what the dense kernel computes for it.
 """
 from __future__ import annotations
 
@@ -16,7 +24,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
+from .backend import INTERPRET, check_blocks
 
 DEFAULT_BM = 128
 DEFAULT_BN = 128
@@ -36,14 +46,30 @@ def _kernel(d_ref, w_ref, o_ref):
     o_ref[...] = jnp.minimum(o_ref[...], cand)
 
 
+def _masked_kernel(dm_ref, wm_ref, d_ref, w_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, jnp.inf)
+
+    @pl.when((dm_ref[0, 0] > 0) & (wm_ref[0, 0] > 0))
+    def _compute():
+        d = d_ref[...]
+        w = w_ref[...]
+        cand = jnp.min(d[:, :, None] + w[None, :, :], axis=1)
+        o_ref[...] = jnp.minimum(o_ref[...], cand)
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def minplus_mm(d: jax.Array, w: jax.Array, *, bm: int = DEFAULT_BM,
                bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
-               interpret: bool = True) -> jax.Array:
+               interpret: bool = INTERPRET) -> jax.Array:
     """d: [S, V] f32; w: [V, V'] f32 -> [S, V'] f32 (min-plus product)."""
     s, kdim = d.shape
     _, n = w.shape
     bm, bn, bk = min(bm, s), min(bn, n), min(bk, kdim)
+    check_blocks("minplus_mm", s, kdim, n, bm, bk, bn)
     grid = (s // bm, n // bn, kdim // bk)
     return pl.pallas_call(
         _kernel,
@@ -56,3 +82,43 @@ def minplus_mm(d: jax.Array, w: jax.Array, *, bm: int = DEFAULT_BM,
         out_shape=jax.ShapeDtypeStruct((s, n), jnp.float32),
         interpret=interpret,
     )(d, w)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def minplus_mm_masked(d: jax.Array, w: jax.Array, dmask: jax.Array,
+                      wmask: jax.Array, *, bm: int = DEFAULT_BM,
+                      bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+                      interpret: bool = INTERPRET) -> jax.Array:
+    """Tile-skipping min-plus product.
+
+    ``dmask``: int32 [S/bm, K/bk] — nonzero iff the d slab has a finite
+    entry; ``wmask``: int32 [K/bk, N/bn] — nonzero iff the w tile has a
+    finite entry.  A zero mask MUST imply the block is all-+inf (the
+    semiring identity); callers derive both from the tile occupancy index
+    (``repro.core.tiles``) or directly from the operands.
+    """
+    s, kdim = d.shape
+    _, n = w.shape
+    bm, bn, bk = min(bm, s), min(bn, n), min(bk, kdim)
+    check_blocks("minplus_mm", s, kdim, n, bm, bk, bn)
+    grid = (s // bm, n // bn, kdim // bk)
+    if dmask.shape != (grid[0], grid[2]) or wmask.shape != (grid[2], grid[1]):
+        raise ValueError(
+            f"minplus_mm_masked: mask shapes {dmask.shape}/{wmask.shape} do "
+            f"not match the block grid ({grid[0]}, {grid[2]})/"
+            f"({grid[2]}, {grid[1]})")
+    return pl.pallas_call(
+        _masked_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, k: (i, k),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda i, j, k: (k, j),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((s, n), jnp.float32),
+        interpret=interpret,
+    )(dmask.astype(jnp.int32), wmask.astype(jnp.int32), d, w)

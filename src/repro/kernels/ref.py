@@ -16,6 +16,12 @@ def minplus_mm_ref(d: jax.Array, w: jax.Array) -> jax.Array:
     return jnp.min(d[:, :, None] + w[None, :, :], axis=1)
 
 
+def count_mm_ref(s: jax.Array, a: jax.Array) -> jax.Array:
+    """Counting matmul (Brandes sigma): plain f32 product of path counts."""
+    return jnp.dot(s.astype(jnp.float32), a.astype(jnp.float32),
+                   precision=jax.lax.Precision.HIGHEST)
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                         causal: bool = True,
                         sm_scale: float | None = None) -> jax.Array:

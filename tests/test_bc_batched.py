@@ -1,0 +1,113 @@
+"""Batched Brandes vs per-source bc_dependencies: RMAT graphs, tombstoned
+edges, dead vertices, dead sources, and the tile-skipping kernel path."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    PUTE, PUTV, REME, REMV,
+    apply_ops, bc, bc_batched_dense, bc_dependencies, bc_map,
+    build_tile_view, dense_views, make_graph,
+)
+from repro.core.tiles import dense_views_from_tiles
+from repro.data import load_rmat_graph
+
+
+def _check_against_per_source(state, srcs, **kw):
+    am, _, alive = dense_views(state)
+    delta, sigma, level, ok = bc_batched_dense(
+        am, jnp.asarray(srcs, jnp.int32), alive, **kw)
+    for i, s in enumerate(srcs):
+        r = bc_dependencies(state, s)
+        assert bool(ok[i]) == bool(r.ok), s
+        # levels and sigma are integer-valued: bit-exact
+        assert np.array_equal(np.asarray(level[i]), np.asarray(r.level)), s
+        assert np.array_equal(np.asarray(sigma[i]), np.asarray(r.sigma)), s
+        # delta agrees up to float summation order (scatter-add vs MXU dot)
+        assert np.allclose(np.asarray(delta[i]), np.asarray(r.delta),
+                           rtol=1e-5, atol=1e-5), s
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_bc_batched_matches_per_source_rmat(seed):
+    g = load_rmat_graph(64, 400, seed=seed, weighted=False)
+    _check_against_per_source(g, [0, 3, 17, 40, 63])
+
+
+def test_bc_batched_with_tombstones_and_dead_vertices():
+    rng = np.random.default_rng(11)
+    n = 40
+    g = make_graph(64, 512)
+    ops = [(PUTV, i) for i in range(n)]
+    ops += [(PUTE, int(rng.integers(0, n)), int(rng.integers(0, n)), 1.0)
+            for _ in range(160)]
+    g, _ = apply_ops(g, ops)
+    # tombstone some edges, kill some vertices (their incident edges die too)
+    from repro.core.graph_state import live_edge_mask
+    live = np.flatnonzero(np.asarray(live_edge_mask(g)))[:3]
+    rems = [(REME, int(np.asarray(g.esrc)[i]), int(np.asarray(g.edst)[i]))
+            for i in live]
+    g, _ = apply_ops(g, rems + [(REMV, 7), (REMV, 23)])
+    from repro.core.graph_state import NOKEY
+    occupied = np.asarray(g.esrc) != NOKEY
+    assert (occupied & np.isinf(np.asarray(g.ew))).sum() > 0  # real tombstones
+    srcs = [0, 5, 7, 23, 39]  # includes the two dead sources
+    _check_against_per_source(g, srcs)
+    am, _, alive = dense_views(g)
+    _, _, _, ok = bc_batched_dense(am, jnp.asarray(srcs, jnp.int32), alive)
+    assert not bool(ok[2]) and not bool(ok[3])  # dead sources report !ok
+
+
+def test_bc_batched_out_of_range_sources():
+    g = make_graph(16, 32)
+    g, _ = apply_ops(g, [(PUTV, 0), (PUTV, 1), (PUTE, 0, 1, 1.0)])
+    am, _, alive = dense_views(g)
+    delta, _, _, ok = bc_batched_dense(
+        am, jnp.asarray([-1, 0, 99], jnp.int32), alive)
+    assert not bool(ok[0]) and bool(ok[1]) and not bool(ok[2])
+    assert np.all(np.asarray(delta[0]) == 0)
+
+
+def test_bc_batched_kernel_and_tile_mask_match_jnp():
+    g = load_rmat_graph(64, 300, seed=4, weighted=False)
+    view = build_tile_view(g, tile=16)
+    am, _, alive = dense_views_from_tiles(g, view)
+    srcs = jnp.arange(64, dtype=jnp.int32)
+    base = bc_batched_dense(am, srcs, alive)
+    masked = bc_batched_dense(am, srcs, alive, amask=view.occ, tile=16)
+    kernel = bc_batched_dense(am, srcs, alive, use_kernel=True,
+                              amask=view.occ, tile=16)
+    for got in (masked, kernel):
+        assert np.array_equal(np.asarray(base[2]), np.asarray(got[2]))  # level
+        assert np.array_equal(np.asarray(base[1]), np.asarray(got[1]))  # sigma
+        assert np.allclose(np.asarray(base[0]), np.asarray(got[0]),
+                           rtol=1e-5, atol=1e-5)                        # delta
+        assert np.array_equal(np.asarray(base[3]), np.asarray(got[3]))  # ok
+
+
+def test_bc_wrapper_batched_equals_map():
+    g = load_rmat_graph(32, 160, seed=6, weighted=False)
+    for v in (0, 9, 31):
+        ref = float(bc(g, v, method="map"))
+        got = float(bc(g, v))
+        if np.isnan(ref):
+            assert np.isnan(got)
+        else:
+            assert got == pytest.approx(ref, rel=1e-4, abs=1e-4)
+    with pytest.raises(ValueError):
+        bc(g, 0, method="nope")
+
+
+def test_bc_wrapper_dead_target_is_nan():
+    g = make_graph(8, 16)
+    g, _ = apply_ops(g, [(PUTV, 0), (PUTV, 1), (PUTE, 0, 1, 1.0), (REMV, 1)])
+    assert np.isnan(float(bc(g, 1)))
+    assert np.isnan(float(bc(g, 1, method="map")))
+
+
+def test_bc_map_is_the_old_lax_map_baseline():
+    g = make_graph(8, 16)
+    g, _ = apply_ops(g, [(PUTV, 0), (PUTV, 1), (PUTV, 2),
+                         (PUTE, 0, 1, 1.0), (PUTE, 1, 2, 1.0)])
+    val = bc_map(g, 1, jnp.arange(3, dtype=jnp.int32))
+    assert float(val) == pytest.approx(1.0)

@@ -352,4 +352,64 @@ def test_service_bc_supports_cn_double_collect():
     rng = np.random.default_rng(15)
     svc = _service(rng)
     r = svc.query("bc", 0, mode="cn")
-    assert r.validated and r.mode == "full" and r.scan.collects >= 2
+    # The first collect recomputes; the second lands on the same version and
+    # the (kind, src) cache answers it as "unchanged" — BC now shares the
+    # BFS/SSSP snapshot/cache semantics.
+    assert r.validated and r.scan.collects >= 2
+    _assert_bit_identical(r.result,
+                          queries.bc_dependencies(svc.ring.latest.state, 0))
+
+
+def test_service_bc_cache_semantics_match_bfs():
+    """BC is a cached query kind: unchanged on untouched commits, full
+    recompute (bit-identical to fresh) once the reached region moves."""
+    rng = np.random.default_rng(16)
+    svc = _service(rng)
+    r0 = svc.query("bc", 0)
+    assert r0.mode == "full"
+    r1 = svc.query("bc", 0)  # nothing committed since
+    assert r1.mode == "unchanged" and r1.result is r0.result
+    for _ in range(3):
+        svc.submit_many(_random_commit(rng, vertex_churn=False))
+        svc.flush()
+        r = svc.query("bc", 0)
+        assert r.mode in ("unchanged", "full")
+        assert r.version == svc.version
+        _assert_bit_identical(
+            r.result, queries.bc_dependencies(svc.ring.latest.state, 0))
+
+
+def test_service_bc_unchanged_outside_reached_region():
+    g = make_graph(64, 256)
+    g, _ = apply_ops(g, [(PUTV, i) for i in range(64)] + [(PUTE, 0, 1, 1.0)])
+    svc = GraphService(g, batch_size=4, ring_depth=8)
+    r0 = svc.query("bc", 0)  # reaches only {0, 1}
+    svc.submit_many([(PUTE, 10, i, 1.0) for i in range(20, 24)])
+    svc.flush()
+    r1 = svc.query("bc", 0)
+    assert r1.mode == "unchanged" and r1.result is r0.result
+
+
+def test_service_bc_scores_incremental_tile_view():
+    """bc_scores runs the batched Brandes over an incrementally refreshed
+    tile view and matches the per-source map baseline."""
+    from repro.core import build_tile_view
+    rng = np.random.default_rng(17)
+    svc = _service(rng)
+    scores0, v0 = svc.bc_scores()
+    svc.submit_many(_random_commit(rng))
+    svc.flush()
+    scores1, v1 = svc.bc_scores()
+    assert v1 > v0
+    state = svc.ring.latest.state
+    # the incrementally refreshed view is identical to a fresh build
+    fresh = build_tile_view(state)
+    assert np.array_equal(np.asarray(svc._tiles.w), np.asarray(fresh.w))
+    assert np.array_equal(np.asarray(svc._tiles.occ), np.asarray(fresh.occ))
+    for v in (0, 7, 33):
+        ref = float(queries.bc(state, v, method="map"))
+        got = float(np.asarray(scores1)[v])
+        if np.isnan(ref):
+            assert np.isnan(got)
+        else:
+            assert got == pytest.approx(ref, rel=1e-4, abs=1e-4)

@@ -1,4 +1,6 @@
-"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode,
+tile-skipping (masked) variants on adversarial occupancy patterns, and the
+block-divisibility guard on the raw kernel entry points."""
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -6,9 +8,42 @@ import pytest
 
 from repro.kernels import ops, ref
 from repro.kernels.bool_mm import bool_mm as raw_bool_mm
+from repro.kernels.count_mm import count_mm as raw_count_mm
 from repro.kernels.minplus_mm import minplus_mm as raw_minplus_mm
 
 RNG = np.random.default_rng(0)
+
+
+def _tile_occ(mat, tile, identity_inf):
+    """Tile-occupancy grid of a matrix: nonzero iff tile has non-identity."""
+    k, n = mat.shape
+    ntr, ntc = -(-k // tile), -(-n // tile)
+    pad = np.full((ntr * tile, ntc * tile),
+                  np.inf if identity_inf else 0.0, np.float32)
+    pad[:k, :n] = mat
+    blocks = pad.reshape(ntr, tile, ntc, tile)
+    nonid = np.isfinite(blocks) if identity_inf else blocks != 0
+    return jnp.asarray(nonid.any(axis=(1, 3)).astype(np.int32))
+
+
+def _sparse_tiled(k, n, tile, density, identity_inf, rng=RNG):
+    """Matrix whose non-identity entries live in a random subset of tiles —
+    the adversarial occupancy patterns the skipping must survive."""
+    ident = np.inf if identity_inf else 0.0
+    mat = np.full((k, n), ident, np.float32)
+    ntr, ntc = -(-k // tile), -(-n // tile)
+    for i in range(ntr):
+        for j in range(ntc):
+            if rng.random() < density:
+                r0, c0 = i * tile, j * tile
+                blk = rng.random((min(tile, k - r0), min(tile, n - c0)))
+                vals = np.where(blk < 0.3, blk.astype(np.float32), ident)
+                if identity_inf:
+                    mat[r0:r0 + blk.shape[0], c0:c0 + blk.shape[1]] = vals
+                else:
+                    mat[r0:r0 + blk.shape[0], c0:c0 + blk.shape[1]] = (
+                        vals != ident).astype(np.float32)
+    return mat
 
 
 @pytest.mark.parametrize("s,k,n", [(128, 128, 128), (70, 200, 130),
@@ -47,6 +82,122 @@ def test_minplus_all_inf():
     w = RNG.random((32, 16)).astype(np.float32)
     out = np.asarray(ops.minplus_mm(jnp.asarray(d), jnp.asarray(w)))
     assert np.isinf(out).all()
+
+
+@pytest.mark.parametrize("s,k,n", [(128, 128, 128), (70, 200, 130),
+                                   (1, 512, 64)])
+def test_count_mm_shapes(s, k, n):
+    f = (RNG.random((s, k)) * 4).astype(np.int32).astype(np.float32)
+    a = (RNG.random((k, n)) < 0.1).astype(np.float32)
+    out = np.asarray(ops.count_mm(jnp.asarray(f), jnp.asarray(a)))
+    exp = np.asarray(ref.count_mm_ref(jnp.asarray(f), jnp.asarray(a)))
+    assert np.array_equal(out, exp)  # integer counts: exact
+
+
+# ----------------------- tile-skipping (masked) path -----------------------
+
+@pytest.mark.parametrize("s,k,n,tile,density", [
+    (64, 256, 192, 64, 0.3),    # block-multiple shapes
+    (70, 200, 130, 64, 0.25),   # non-128-multiple everything
+    (33, 513, 129, 128, 0.2),   # off-by-one shapes, coarse tiles
+    (16, 96, 96, 16, 0.0),      # fully empty adjacency
+    (16, 96, 96, 16, 1.0),      # fully dense occupancy (no skipping wins)
+])
+def test_masked_kernels_match_dense_oracles(s, k, n, tile, density):
+    rng = np.random.default_rng(hash((s, k, n, tile)) % 2**32)
+    # min-plus: identity is +inf
+    w = _sparse_tiled(k, n, tile, density, identity_inf=True, rng=rng)
+    d = rng.random((s, k)).astype(np.float32)
+    d[rng.random((s, k)) < 0.5] = np.inf
+    wmask = _tile_occ(w, tile, identity_inf=True)
+    exp = np.asarray(ref.minplus_mm_ref(jnp.asarray(d), jnp.asarray(w)))
+    got = np.asarray(ops.minplus_mm(jnp.asarray(d), jnp.asarray(w),
+                                    amask=wmask, tile=tile))
+    assert np.allclose(got, exp, equal_nan=True)
+    # bool / count: identity is 0
+    a = _sparse_tiled(k, n, tile, density, identity_inf=False, rng=rng)
+    f = (rng.random((s, k)) < 0.15).astype(np.float32)
+    amask = _tile_occ(a, tile, identity_inf=False)
+    exp_b = np.asarray(ref.bool_mm_ref(jnp.asarray(f), jnp.asarray(a)))
+    got_b = np.asarray(ops.bool_mm(jnp.asarray(f), jnp.asarray(a),
+                                   amask=amask, tile=tile))
+    assert np.array_equal(got_b, exp_b)
+    exp_c = np.asarray(ref.count_mm_ref(jnp.asarray(f), jnp.asarray(a)))
+    got_c = np.asarray(ops.count_mm(jnp.asarray(f), jnp.asarray(a),
+                                    amask=amask, tile=tile))
+    assert np.array_equal(got_c, exp_c)
+
+
+def test_masked_kernels_adversarial_single_tile():
+    """One live tile in a far corner: everything else must be skipped yet
+    the corner's contribution must survive."""
+    tile, k, n, s = 32, 160, 160, 48
+    w = np.full((k, n), np.inf, np.float32)
+    w[128:160, 128:160] = 1.0  # bottom-right tile only
+    d = np.full((s, k), np.inf, np.float32)
+    d[:, 130] = 2.0  # reaches into the live k range
+    wmask = _tile_occ(w, tile, identity_inf=True)
+    assert int(np.asarray(wmask).sum()) == 1
+    exp = np.asarray(ref.minplus_mm_ref(jnp.asarray(d), jnp.asarray(w)))
+    got = np.asarray(ops.minplus_mm(jnp.asarray(d), jnp.asarray(w),
+                                    amask=wmask, tile=tile))
+    assert np.allclose(got, exp, equal_nan=True)
+    assert np.isfinite(got[:, 128:160]).all()
+
+
+def test_masked_jnp_fallback_matches_kernel():
+    """semiring.* masked fallbacks == masked kernels == dense oracles."""
+    from repro.core import semiring
+    rng = np.random.default_rng(9)
+    tile, k, n, s = 16, 96, 80, 24
+    w = _sparse_tiled(k, n, tile, 0.3, identity_inf=True, rng=rng)
+    d = rng.random((s, k)).astype(np.float32)
+    wmask = _tile_occ(w, tile, identity_inf=True)
+    exp = np.asarray(ref.minplus_mm_ref(jnp.asarray(d), jnp.asarray(w)))
+    for uk in (False, True):
+        got = np.asarray(semiring.minplus_mm(
+            jnp.asarray(d), jnp.asarray(w), use_kernel=uk, amask=wmask,
+            tile=tile))
+        assert np.allclose(got, exp, equal_nan=True), uk
+    a = _sparse_tiled(k, n, tile, 0.3, identity_inf=False, rng=rng)
+    f = (rng.random((s, k)) < 0.2).astype(np.float32)
+    amask = _tile_occ(a, tile, identity_inf=False)
+    exp_b = np.asarray(ref.bool_mm_ref(jnp.asarray(f), jnp.asarray(a)))
+    exp_c = np.asarray(ref.count_mm_ref(jnp.asarray(f), jnp.asarray(a)))
+    for uk in (False, True):
+        got_b = np.asarray(semiring.bool_mm(
+            jnp.asarray(f), jnp.asarray(a), use_kernel=uk, amask=amask,
+            tile=tile))
+        got_c = np.asarray(semiring.count_mm(
+            jnp.asarray(f), jnp.asarray(a), use_kernel=uk, amask=amask,
+            tile=tile))
+        assert np.array_equal(got_b, exp_b), uk
+        assert np.array_equal(got_c, exp_c), uk
+
+
+# ---------------------- raw-kernel truncation guard ------------------------
+
+@pytest.mark.parametrize("raw", [raw_bool_mm, raw_minplus_mm, raw_count_mm])
+def test_raw_kernels_reject_truncating_shapes(raw):
+    """grid = shape // block used to silently drop trailing rows/columns;
+    now a direct call with non-dividing shapes raises."""
+    x = jnp.asarray(np.full((130, 64), 1.0, np.float32))
+    y = jnp.asarray(np.full((64, 64), 1.0, np.float32))
+    with pytest.raises(ValueError, match="truncation"):
+        raw(x, y, bm=128, bn=64, bk=64)
+    # dividing shapes still work
+    out = raw(x[:128], y, bm=128, bn=64, bk=64)
+    assert out.shape == (128, 64)
+
+
+def test_raw_kernels_default_interpret_from_backend():
+    """The raw kernels must not hardcode interpret=True: the default comes
+    from backend detection (interpret off on real TPU)."""
+    import inspect
+    from repro.kernels import backend
+    for fn in (raw_bool_mm, raw_minplus_mm, raw_count_mm):
+        sig = inspect.signature(fn.__wrapped__)
+        assert sig.parameters["interpret"].default == backend.INTERPRET
 
 
 @pytest.mark.parametrize("b,hq,hkv,sq,skv,d", [

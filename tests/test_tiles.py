@@ -1,0 +1,164 @@
+"""Tile view correctness: occupancy vs live_edge_mask, incremental refresh
+under randomized update streams, compact/grow boundaries, and mask
+consistency with the tile-skipping semiring contract."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    PUTE, PUTV, REME, REMV,
+    apply_ops, build_tile_view, compact, dense_views, dirty_vertices,
+    grow_edges, grow_vertices, make_graph, occupancy_stats,
+    refresh_tile_view,
+)
+from repro.core.graph_state import densify, live_edge_mask
+from repro.core.tiles import active_tile_mask, dense_views_from_tiles
+from repro.data import load_rmat_graph
+
+
+def _occ_ref(state, tile):
+    """Host-side oracle: per-tile live-edge counts straight off the mask."""
+    live = np.asarray(live_edge_mask(state))
+    src = np.asarray(state.esrc)[live]
+    dst = np.asarray(state.edst)[live]
+    nt = -(-state.vcap // tile)
+    occ = np.zeros((nt, nt), np.int64)
+    np.add.at(occ, (src // tile, dst // tile), 1)
+    return occ
+
+
+def _assert_view_matches(state, view, tile):
+    vcap = state.vcap
+    w = np.asarray(view.w)
+    assert w.shape[0] % tile == 0 and w.shape[0] >= vcap
+    assert np.array_equal(w[:vcap, :vcap], np.asarray(densify(state)))
+    assert np.isinf(w[vcap:, :]).all() and np.isinf(w[:, vcap:]).all()
+    assert np.array_equal(np.asarray(view.occ), _occ_ref(state, tile))
+
+
+def _random_ops(rng, n, k=12):
+    ops = []
+    for _ in range(k):
+        r = rng.random()
+        u, v = int(rng.integers(0, n)), int(rng.integers(0, n))
+        if r < 0.08:
+            ops.append((REMV, u))
+        elif r < 0.16:
+            ops.append((PUTV, u))
+        elif r < 0.6:
+            ops.append((PUTE, u, v, float(rng.integers(1, 9))))
+        else:
+            ops.append((REME, u, v))
+    return ops
+
+
+@pytest.mark.parametrize("tile", [16, 128])
+def test_build_tile_view_matches_oracle(tile):
+    g = load_rmat_graph(64, 400, seed=2)
+    view = build_tile_view(g, tile=tile)
+    _assert_view_matches(g, view, tile)
+    stats = occupancy_stats(view)
+    assert stats["tiles_active"] == int((_occ_ref(g, tile) > 0).sum())
+    assert stats["live_edges"] == int(_occ_ref(g, tile).sum())
+    assert 0.0 <= stats["tile_skip_rate"] <= 1.0
+    assert np.array_equal(np.asarray(active_tile_mask(view)),
+                          _occ_ref(g, tile) > 0)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_refresh_equals_full_rebuild_over_stream(seed):
+    """Randomized update/refresh interleavings: the incrementally refreshed
+    view is bit-identical to a from-scratch build at every commit."""
+    rng = np.random.default_rng(seed)
+    n, tile = 48, 16
+    g = make_graph(n, 512)
+    g, _ = apply_ops(g, [(PUTV, i) for i in range(n)]
+                     + [(PUTE, int(rng.integers(0, n)), int(rng.integers(0, n)),
+                         float(rng.integers(1, 9))) for _ in range(150)])
+    view = build_tile_view(g, tile=tile)
+    for _ in range(12):
+        g2, _ = apply_ops(g, _random_ops(rng, n))
+        dirty = dirty_vertices(g, g2)
+        view = refresh_tile_view(g2, view, dirty, tile=tile)
+        _assert_view_matches(g2, view, tile)
+        g = g2
+
+
+def test_refresh_after_compact_is_noop():
+    """compact() rearranges slots but moves no vertices: an empty dirty set
+    must leave the refreshed view correct (and unchanged)."""
+    g = make_graph(32, 128)
+    g, _ = apply_ops(g, [(PUTV, i) for i in range(32)]
+                     + [(PUTE, i, (i + 1) % 32, 1.0) for i in range(32)]
+                     + [(REME, 0, 1), (REME, 5, 6)])
+    view = build_tile_view(g, tile=16)
+    g2 = compact(g)
+    view2 = refresh_tile_view(g2, view, jnp.zeros((32,), jnp.bool_), tile=16)
+    _assert_view_matches(g2, view2, 16)
+    assert np.array_equal(np.asarray(view.w), np.asarray(view2.w))
+
+
+def test_refresh_survives_grow_edges():
+    """grow_edges changes ecap only; the refresh path recompiles but the
+    tile grid carries over."""
+    g = make_graph(32, 64)
+    g, _ = apply_ops(g, [(PUTV, i) for i in range(32)]
+                     + [(PUTE, 0, i, 1.0) for i in range(1, 20)])
+    view = build_tile_view(g, tile=16)
+    g2 = grow_edges(g)
+    g3, _ = apply_ops(g2, [(PUTE, 1, 2, 4.0)])
+    view3 = refresh_tile_view(g3, view, dirty_vertices(g2, g3), tile=16)
+    _assert_view_matches(g3, view3, 16)
+
+
+def test_refresh_falls_back_on_vertex_growth():
+    """grow_vertices resizes the tile grid: refresh must detect the shape
+    change and rebuild from scratch."""
+    g = make_graph(16, 64)
+    g, _ = apply_ops(g, [(PUTV, i) for i in range(16)]
+                     + [(PUTE, 0, 1, 1.0)])
+    view = build_tile_view(g, tile=16)
+    g2 = grow_vertices(g)
+    g3, _ = apply_ops(g2, [(PUTV, 20), (PUTE, 1, 20, 2.0)])
+    dirty = jnp.ones((g3.vcap,), jnp.bool_)
+    view3 = refresh_tile_view(g3, view, dirty, tile=16)
+    _assert_view_matches(g3, view3, 16)
+
+
+def test_refresh_handles_remv_column_kills():
+    """RemV tombstones edges *into* the removed vertex; the dirty sources
+    must be enough for the refresh to drop those columns' cells."""
+    g = make_graph(48, 256)
+    ops = [(PUTV, i) for i in range(48)]
+    ops += [(PUTE, i, 40, 1.0) for i in range(10)]  # fan-in to 40
+    ops += [(PUTE, 40, i, 2.0) for i in range(10, 20)]
+    g, _ = apply_ops(g, ops)
+    view = build_tile_view(g, tile=16)
+    g2, _ = apply_ops(g, [(REMV, 40)])
+    view2 = refresh_tile_view(g2, view, dirty_vertices(g, g2), tile=16)
+    _assert_view_matches(g2, view2, 16)
+    # every cell of column 40 and row 40 went back to identity
+    assert np.isinf(np.asarray(view2.w)[:, 40]).all()
+    assert np.isinf(np.asarray(view2.w)[40, :]).all()
+
+
+def test_refresh_falls_back_on_tile_size_mismatch():
+    """Same padded dims, different grid: refreshing a tile=16 view at
+    tile=128 must rebuild, not pile occupancy into the wrong rows."""
+    g = make_graph(128, 256)
+    g, _ = apply_ops(g, [(PUTV, i) for i in range(128)]
+                     + [(PUTE, i, (i + 31) % 128, 1.0) for i in range(100)])
+    view16 = build_tile_view(g, tile=16)
+    g2, _ = apply_ops(g, [(PUTE, 5, 77, 2.0)])
+    view = refresh_tile_view(g2, view16, dirty_vertices(g, g2), tile=128)
+    _assert_view_matches(g2, view, 128)
+
+
+def test_dense_views_from_tiles_matches_dense_views():
+    g = load_rmat_graph(64, 300, seed=5)
+    view = build_tile_view(g, tile=16)
+    am, wd, alive = dense_views(g)
+    am2, wd2, alive2 = dense_views_from_tiles(g, view)
+    assert np.array_equal(np.asarray(am), np.asarray(am2))
+    assert np.array_equal(np.asarray(wd), np.asarray(wd2))
+    assert np.array_equal(np.asarray(alive), np.asarray(alive2))
