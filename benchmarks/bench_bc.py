@@ -22,7 +22,7 @@ results against per-source Brandes on a subsample, and always writes
 ``BENCH_bc.json``.
 
     PYTHONPATH=src python benchmarks/bench_bc.py [--n 1024] \
-        [--baseline-sources 64] [--json BENCH_bc.json]
+        [--baseline-sources 64] [--bc-chunk 256] [--json BENCH_bc.json]
 """
 from __future__ import annotations
 
@@ -92,7 +92,8 @@ def frontier_slab_occupancy(adj, alive, srcs, bm=128, bk=512):
     return rates
 
 
-def bench_compact(n, edge_factor, seed, baseline_sources, verify):
+def bench_compact(n, edge_factor, seed, baseline_sources, verify,
+                  bc_chunk=None):
     """vcap == n: batched semiring BC vs the per-source lax.map baseline."""
     src, dst, w = rmat_edges(n, n * edge_factor, seed=seed, weighted=False)
     g = from_edge_list(n, int(len(src) * 1.5), src, dst, w)
@@ -104,6 +105,21 @@ def bench_compact(n, edge_factor, seed, baseline_sources, verify):
     t_batched, out = _time(queries.bc_batched_dense, am, srcs, alive)
     _row("bc_batched_all_sources", t_batched * 1e6,
          f"n={n};sources={n};tile_skip_rate={occ['tile_skip_rate']:.4f}")
+
+    t_chunked = None
+    if bc_chunk:
+        # Source-axis chunking: 4 x chunk x V scratch instead of 4 x S x V
+        # (the vcap ~ 16k ceiling), one forward+backward sweep per chunk.
+        t_chunked, out_c = _time(queries.bc_batched_dense, am, srcs, alive,
+                                 src_chunk=bc_chunk)
+        _row("bc_batched_chunked", t_chunked * 1e6,
+             f"src_chunk={bc_chunk};vs_unchunked="
+             f"{t_batched / t_chunked:.2f}x")
+        if verify:
+            for a, b in zip(out, out_c):
+                assert np.allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+            print("verify: chunked == unchunked batched BC", flush=True)
 
     sub = jnp.arange(min(baseline_sources, n), dtype=jnp.int32)
     t_map, _ = _time(queries.bc_map, g, 0, sub)
@@ -128,6 +144,8 @@ def bench_compact(n, edge_factor, seed, baseline_sources, verify):
     slabs = frontier_slab_occupancy(am, alive, srcs)
     return {
         "t_batched_s": round(t_batched, 4),
+        "src_chunk": bc_chunk,
+        "t_chunked_s": round(t_chunked, 4) if t_chunked else None,
         "laxmap_us_per_source": round(us_map_per_src, 1),
         "laxmap_est_full_s": round(t_map_full_est, 3),
         "speedup_vs_laxmap": round(speedup, 2),
@@ -165,10 +183,11 @@ def bench_slack(n, edge_factor, slack_factor, seed):
 
 
 def main(n=1024, edge_factor=8, slack_factor=4, seed=0, baseline_sources=64,
-         verify=False, json_path="BENCH_bc.json"):
+         verify=False, json_path="BENCH_bc.json", bc_chunk=None):
     ROWS.clear()
     print("name,us_per_call,derived", flush=True)
-    compact = bench_compact(n, edge_factor, seed, baseline_sources, verify)
+    compact = bench_compact(n, edge_factor, seed, baseline_sources, verify,
+                            bc_chunk=bc_chunk)
     slack = bench_slack(n, edge_factor, slack_factor, seed)
 
     print(f"\nBatched BC at n={n}: {compact['speedup_vs_laxmap']:.1f}x over "
@@ -182,7 +201,8 @@ def main(n=1024, edge_factor=8, slack_factor=4, seed=0, baseline_sources=64,
         "backend": jax.default_backend(),
         "params": {"n": n, "edge_factor": edge_factor,
                    "slack_factor": slack_factor, "seed": seed,
-                   "baseline_sources": baseline_sources},
+                   "baseline_sources": baseline_sources,
+                   "bc_chunk": bc_chunk},
         "rows": ROWS,
         "compact": compact,
         "slack": slack,
@@ -205,6 +225,9 @@ def _parse_args(argv):
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--baseline-sources", type=int, default=64,
                    help="lax.map baseline sample size (extrapolated)")
+    p.add_argument("--bc-chunk", type=int, default=None,
+                   help="source-axis chunk for the batched path (bounds "
+                        "the S x V scratch; see bc_batched_dense)")
     p.add_argument("--verify", action="store_true")
     p.add_argument("--json", default="BENCH_bc.json",
                    help="output path for the machine-readable results")
@@ -215,4 +238,4 @@ if __name__ == "__main__":
     a = _parse_args(sys.argv[1:])
     main(n=a.n, edge_factor=a.edge_factor, slack_factor=a.slack_factor,
          seed=a.seed, baseline_sources=a.baseline_sources, verify=a.verify,
-         json_path=a.json)
+         json_path=a.json, bc_chunk=a.bc_chunk)

@@ -223,7 +223,8 @@ def bc_map(state: GraphState, v, sources) -> jax.Array:
 
 
 def bc(state: GraphState, v, sources=None, *, method: str = "batched",
-       use_kernel: bool = False, tile_view=None) -> jax.Array:
+       use_kernel: bool = False, tile_view=None,
+       src_chunk: int | None = None) -> jax.Array:
     """Betweenness centrality of ``v``: sum_s delta(s|v).
 
     ``sources`` defaults to every vertex slot (dead sources contribute 0 —
@@ -232,7 +233,8 @@ def bc(state: GraphState, v, sources=None, *, method: str = "batched",
     (``bc_batched_dense``); ``method="map"`` is the per-source ``lax.map``
     baseline.  ``tile_view`` (see ``repro.core.tiles``) supplies the dense
     weights plus the tile-occupancy mask so the semiring products skip
-    empty tiles.
+    empty tiles.  ``src_chunk`` bounds the batched path's S x V scratch
+    (see ``bc_batched_dense``).
     """
     v = jnp.asarray(v, jnp.int32)
     if sources is None:
@@ -254,7 +256,7 @@ def bc(state: GraphState, v, sources=None, *, method: str = "batched",
         amask = None
     delta, _, _, src_ok = bc_batched_dense(
         adj_mask, sources, alive, use_kernel=use_kernel, amask=amask,
-        tile=tile)
+        tile=tile, src_chunk=src_chunk)
     vals = jnp.where(src_ok, delta[:, jnp.clip(v, 0, state.vcap - 1)], 0.0)
     return jnp.where(ok, jnp.sum(vals), jnp.nan)
 
@@ -335,30 +337,15 @@ def dense_views(state: GraphState):
 
 # ------------------------- batched Brandes (BC) ---------------------------
 
-@partial(jax.jit, static_argnames=("use_kernel", "tile"))
-def bc_batched_dense(adj_mask: jax.Array, srcs: jax.Array, alive: jax.Array,
-                     use_kernel: bool = False,
-                     amask: jax.Array | None = None, tile: int = 128):
-    """Multi-source Brandes as level-synchronous semiring matmuls.
+def _bc_sweep(a: jax.Array, at: jax.Array, srcs: jax.Array, alive: jax.Array,
+              use_kernel: bool, amask, amask_t, tile: int):
+    """One forward+backward Brandes sweep over a batch of sources.
 
-    Forward sweep: bool_mm expands the per-source frontier (levels) while
-    count_mm accumulates sigma, the number of shortest paths (integers in
-    f32 — exact below 2^24).  Backward sweep: per level ``l`` (deepest
-    first) the dependency flow  delta[u] += sigma[u] * sum_w A[u,w] *
-    [level[w] = l+1] * (1 + delta[w]) / sigma[w]  is one count_mm against
-    the transposed adjacency.  Levels and sigma match per-source
-    ``bc_dependencies`` bit-exactly; delta agrees up to float summation
-    order (the scatter-add vs MXU-dot reassociation).
-
-    Returns ``(delta[S,V], sigma[S,V], level[S,V], ok[S])``.
-
-    ``amask``: optional tile-occupancy grid of the adjacency — both sweeps
-    skip empty tiles (the transposed sweep uses the transposed grid).
+    Operands are already prepared (``a`` = alive-masked f32 adjacency,
+    ``at`` its transpose); this is the per-chunk building block both
+    ``bc_batched_dense`` and the sharded BC (``repro.shard.queries``) call.
     """
-    V = adj_mask.shape[0]
-    a = (adj_mask & alive[:, None] & alive[None, :]).astype(jnp.float32)
-    at = a.T
-    amask_t = None if amask is None else amask.T
+    V = a.shape[0]
     ok = alive[jnp.clip(srcs, 0, V - 1)] & (srcs >= 0) & (srcs < V)
     front0 = jax.nn.one_hot(srcs, V, dtype=jnp.float32) * ok[:, None]
     level0 = jnp.where(front0 > 0, 0, -1).astype(jnp.int32)
@@ -409,3 +396,48 @@ def bc_batched_dense(adj_mask: jax.Array, srcs: jax.Array, alive: jax.Array,
         bcond, bbody, (jnp.zeros_like(sigma), maxl - 2))
     delta = jnp.where(level == 0, 0.0, delta)  # sources contribute nothing
     return delta, sigma, level, ok
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "tile", "src_chunk"))
+def bc_batched_dense(adj_mask: jax.Array, srcs: jax.Array, alive: jax.Array,
+                     use_kernel: bool = False,
+                     amask: jax.Array | None = None, tile: int = 128,
+                     src_chunk: int | None = None):
+    """Multi-source Brandes as level-synchronous semiring matmuls.
+
+    Forward sweep: bool_mm expands the per-source frontier (levels) while
+    count_mm accumulates sigma, the number of shortest paths (integers in
+    f32 — exact below 2^24).  Backward sweep: per level ``l`` (deepest
+    first) the dependency flow  delta[u] += sigma[u] * sum_w A[u,w] *
+    [level[w] = l+1] * (1 + delta[w]) / sigma[w]  is one count_mm against
+    the transposed adjacency.  Levels and sigma match per-source
+    ``bc_dependencies`` bit-exactly; delta agrees up to float summation
+    order (the scatter-add vs MXU-dot reassociation).
+
+    Returns ``(delta[S,V], sigma[S,V], level[S,V], ok[S])``.
+
+    ``amask``: optional tile-occupancy grid of the adjacency — both sweeps
+    skip empty tiles (the transposed sweep uses the transposed grid).
+
+    ``src_chunk``: process the source axis in chunks of this size (the
+    tail chunk may be ragged), one full forward+backward sweep per chunk
+    with the chunk's forward levels reused by its backward sweep.  Peak
+    scratch drops from 4 x S x V to 4 x src_chunk x V f32, which is what
+    lets all-source BC run past vcap ~ 16k; per-source results are
+    independent of the chunking (levels/sigma bit-exact; the matmul k
+    reduction is unchanged, so delta only sees the padding's exact +0.0
+    terms).
+    """
+    a = (adj_mask & alive[:, None] & alive[None, :]).astype(jnp.float32)
+    at = a.T
+    amask_t = None if amask is None else amask.T
+    S = srcs.shape[0]
+    if src_chunk is None or src_chunk >= S:
+        return _bc_sweep(a, at, srcs, alive, use_kernel, amask, amask_t, tile)
+    if src_chunk < 1:
+        raise ValueError(f"src_chunk must be >= 1, got {src_chunk}")
+    parts = [_bc_sweep(a, at, srcs[lo:lo + src_chunk], alive, use_kernel,
+                       amask, amask_t, tile)
+             for lo in range(0, S, src_chunk)]
+    return tuple(jnp.concatenate([p[i] for p in parts], axis=0)
+                 for i in range(4))

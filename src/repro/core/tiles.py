@@ -31,6 +31,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from .graph_state import INF, NOKEY, GraphState, live_edge_mask
@@ -97,46 +98,56 @@ def build_tile_view(state: GraphState, tile: int = TILE) -> TileView:
     return TileView(w, occ)
 
 
-@partial(jax.jit, static_argnames=("tile", "width"), donate_argnums=(1, 2))
-def _refresh_row(state: GraphState, w: jax.Array, occ: jax.Array,
-                 r, lo, tile: int, width: int):
-    """Recompute tile row ``r``: scatter-min the row's live edges into a
-    fresh identity ``tile x Vp`` slab (bit-identical to the full build —
-    min is order-free) plus its occupancy counts, and write both back with
-    ``dynamic_update_slice``.
+def row_window_slab(esrc: jax.Array, edst: jax.Array, ew: jax.Array,
+                    alive: jax.Array, r, lo, *, tile: int, width: int,
+                    vp: int, nt: int):
+    """Re-derive global tile row ``r``: scatter-min its live edges into a
+    fresh identity ``tile x vp`` slab (bit-identical to the full build —
+    min is order-free) plus the matching ``1 x nt`` occupancy row.
 
-    Two things make this O(row) instead of O(graph):
-
-      * the edge table is sorted by ``(src, dst)``, so row ``r``'s edges
-        are the contiguous segment starting at ``lo`` (host-computed via
-        searchsorted); only a static ``width``-wide window around it is
-        scanned, masked down to exactly the row's live edges;
-      * ``w``/``occ`` are *donated*: the row writes happen in place
-        instead of copying the O(Vp^2) matrix per row.
-
-    ``r``/``lo`` are traced, so every dirty row with the same window width
-    reuses one compiled program.
+    O(row) instead of O(graph) because the edge table is sorted by
+    ``(src, dst)``: row ``r``'s edges are the contiguous segment starting
+    at ``lo`` (host-computed via searchsorted), and only a static
+    ``width``-wide window around it is scanned, masked down to exactly the
+    row's live edges.  Shared by the single-device ``_refresh_row`` and
+    the sharded row refresh (``repro.shard.tile_shard``) so the two views
+    cannot drift apart.
     """
-    vp = w.shape[0]
-    nt = occ.shape[0]
-    vcap = state.vcap
+    vcap = alive.shape[0]
+    ecap = esrc.shape[0]
     r = jnp.asarray(r, jnp.int32)
-    start = jnp.clip(jnp.asarray(lo, jnp.int32), 0, state.ecap - width)
-    esrc = lax.dynamic_slice_in_dim(state.esrc, start, width)
-    edst = lax.dynamic_slice_in_dim(state.edst, start, width)
-    ew = lax.dynamic_slice_in_dim(state.ew, start, width)
-    live = ((esrc != NOKEY) & (ew < INF)
-            & state.alive[jnp.clip(esrc, 0, vcap - 1)]
-            & state.alive[jnp.clip(edst, 0, vcap - 1)])
-    in_row = live & (esrc // tile == r)
-    srcc = jnp.where(in_row, esrc, 0)
-    dstc = jnp.where(in_row, edst, 0)
+    start = jnp.clip(jnp.asarray(lo, jnp.int32), 0, ecap - width)
+    es = lax.dynamic_slice_in_dim(esrc, start, width)
+    ed = lax.dynamic_slice_in_dim(edst, start, width)
+    ws = lax.dynamic_slice_in_dim(ew, start, width)
+    live = ((es != NOKEY) & (ws < INF)
+            & alive[jnp.clip(es, 0, vcap - 1)]
+            & alive[jnp.clip(ed, 0, vcap - 1)])
+    in_row = live & (es // tile == r)
+    srcc = jnp.where(in_row, es, 0)
+    dstc = jnp.where(in_row, ed, 0)
     slab = jnp.full((tile, vp), INF, jnp.float32).at[
         jnp.where(in_row, srcc - r * tile, 0), dstc,
-    ].min(jnp.where(in_row, ew, INF), mode="drop")
+    ].min(jnp.where(in_row, ws, INF), mode="drop")
     occ_row = jnp.zeros((1, nt), jnp.int32).at[
         0, jnp.where(in_row, dstc // tile, 0)
     ].add(in_row.astype(jnp.int32), mode="drop")
+    return slab, occ_row
+
+
+@partial(jax.jit, static_argnames=("tile", "width"), donate_argnums=(1, 2))
+def _refresh_row(state: GraphState, w: jax.Array, occ: jax.Array,
+                 r, lo, tile: int, width: int):
+    """Recompute tile row ``r`` in place: the shared ``row_window_slab``
+    derivation, written back with ``dynamic_update_slice``.  ``w``/``occ``
+    are *donated*, so the row writes happen in place instead of copying
+    the O(Vp^2) matrix per row; ``r``/``lo`` are traced, so every dirty
+    row with the same window width reuses one compiled program.
+    """
+    r = jnp.asarray(r, jnp.int32)
+    slab, occ_row = row_window_slab(
+        state.esrc, state.edst, state.ew, state.alive, r, lo,
+        tile=tile, width=width, vp=w.shape[0], nt=occ.shape[0])
     return (lax.dynamic_update_slice(w, slab, (r * tile, jnp.int32(0))),
             lax.dynamic_update_slice(occ, occ_row, (r, jnp.int32(0))))
 
@@ -145,6 +156,36 @@ def _refresh_row(state: GraphState, w: jax.Array, occ: jax.Array,
 def _dirty_tile_rows(dirty: jax.Array, nt: int, tile: int) -> jax.Array:
     ids = jnp.arange(dirty.shape[0], dtype=jnp.int32)
     return jnp.zeros((nt,), jnp.bool_).at[ids // tile].max(dirty, mode="drop")
+
+
+def dirty_row_windows(state: GraphState, dirty: jax.Array, nt: int,
+                      tile: int):
+    """Host-side refresh plan from a dirty-vertex set.
+
+    ``None`` means more than half the tile rows moved — a full rebuild is
+    cheaper; otherwise the (possibly empty) list of ``(row, lo, width)``
+    windows to re-derive: each dirty tile row's contiguous segment of the
+    sorted edge table (searchsorted bounds, widened to the next power of
+    two so a handful of widths cover every row with few compiles).  Shared
+    by ``refresh_tile_view`` and the sharded refresh so both sides pick
+    strategies — and windows — identically.
+    """
+    rows = np.flatnonzero(
+        np.asarray(jax.device_get(_dirty_tile_rows(dirty, nt, tile))))
+    if rows.size > nt // 2:
+        return None
+    if rows.size == 0:
+        return []
+    esrc_host = np.asarray(jax.device_get(state.esrc))
+    los = np.searchsorted(esrc_host, rows * tile, side="left")
+    his = np.searchsorted(esrc_host, (rows + 1) * tile - 1, side="right")
+    plan = []
+    for r, lo, hi in zip(rows, los, his):
+        width = 64
+        while width < hi - lo:
+            width *= 2
+        plan.append((int(r), int(lo), min(width, state.ecap)))
+    return plan
 
 
 def refresh_tile_view(state: GraphState, prev: TileView, dirty: jax.Array,
@@ -172,25 +213,13 @@ def refresh_tile_view(state: GraphState, prev: TileView, dirty: jax.Array,
             or prev.tile != tile  # same vp, different grid: occ would corrupt
             or dirty.shape[0] != state.vcap):
         return build_tile_view(state, tile)
-    nt = prev.n_tiles
-    import numpy as np
-    rows = np.flatnonzero(
-        np.asarray(jax.device_get(_dirty_tile_rows(dirty, nt, tile))))
-    if rows.size == 0:
-        return prev
-    if rows.size > nt // 2:
+    plan = dirty_row_windows(state, dirty, prev.n_tiles, tile)
+    if plan is None:
         return build_tile_view(state, tile)
-    # Row segments off the sorted edge table: [lo, hi) per dirty tile row.
-    esrc_host = np.asarray(jax.device_get(state.esrc))
-    los = np.searchsorted(esrc_host, rows * tile, side="left")
-    his = np.searchsorted(esrc_host, (rows + 1) * tile - 1, side="right")
+    if not plan:
+        return prev
     w, occ = prev.w, prev.occ
-    for r, lo, hi in zip(rows, los, his):
-        # Static window width (few power-of-two variants -> few compiles).
-        width = 64
-        while width < hi - lo:
-            width *= 2
-        width = min(width, state.ecap)
+    for r, lo, width in plan:
         w, occ = _refresh_row(state, w, occ, jnp.int32(r), jnp.int32(lo),
                               tile=tile, width=width)
     return TileView(w, occ)

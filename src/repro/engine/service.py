@@ -80,6 +80,24 @@ class _CacheSlot:
     result: object  # BFSResult | SSSPResult
 
 
+def prune_result_cache(cache: Dict, max_cached: int, floor: int) -> None:
+    """Keep a per-``(kind, src)`` result cache bounded.
+
+    Slots whose version fell below ``floor`` (out of the ring window) can
+    never serve an unchanged/delta hit, so they go first; if the cache is
+    still over budget, evict in insertion order — callers keep insertion
+    order LRU by delete-then-insert on every hit.  Shared by
+    :class:`GraphService` and the sharded service
+    (``repro.shard.service``) so eviction semantics cannot drift.
+    """
+    if len(cache) <= max_cached:
+        return
+    for key in [k for k, s in cache.items() if s.version < floor]:
+        del cache[key]
+    while len(cache) > max_cached:
+        cache.pop(next(iter(cache)))
+
+
 @dataclass
 class QueryReply:
     """What ``GraphService.query`` hands back."""
@@ -152,22 +170,11 @@ class GraphService:
         return entry, res, inc
 
     def _prune_cache(self) -> None:
-        """Keep the result cache bounded: one O(vcap) slot per (kind, src).
-
-        Slots whose version fell out of the ring window can never serve an
-        unchanged/delta hit (``dirty_between`` has no span for them), so
-        they go first; if the cache is still over budget, evict in
-        insertion order (oldest queries first)."""
-        if len(self._cache) <= self.max_cached:
-            return
         # dirty_between still has a span for slots at oldest_version - 1
         # (the first in-window commit's dirty set covers that gap), so only
         # versions strictly below that are unservable.
-        floor = self.ring.oldest_version - 1
-        for key in [k for k, s in self._cache.items() if s.version < floor]:
-            del self._cache[key]
-        while len(self._cache) > self.max_cached:
-            self._cache.pop(next(iter(self._cache)))
+        prune_result_cache(self._cache, self.max_cached,
+                           self.ring.oldest_version - 1)
 
     def query(self, kind: str, src: int, mode: str = "icn") -> QueryReply:
         """Answer one analytics query.
@@ -240,13 +247,16 @@ class GraphService:
         self._tiles_version = entry.version
         return self._tiles
 
-    def bc_scores(self, use_kernel: bool = False):
+    def bc_scores(self, use_kernel: bool = False,
+                  src_chunk: Optional[int] = None):
         """Exact betweenness centrality of every vertex at the latest
         version, via the tile-sparse batched Brandes path (all sources at
-        once as semiring matmuls; empty tiles skipped).  Returns
+        once as semiring matmuls; empty tiles skipped).  ``src_chunk``
+        bounds the S x V scratch (chunked source axis — the vcap ~16k
+        ceiling lifter, see ``bc_batched_dense``).  Returns
         ``(scores f32[vcap], version)``; cached per ring version."""
         entry = self.ring.latest
-        key = (entry.version, use_kernel)
+        key = (entry.version, use_kernel, src_chunk)
         if self._bc_scores is not None and self._bc_scores[0] == key:
             return self._bc_scores[1], entry.version
         state = entry.state
@@ -255,7 +265,8 @@ class GraphService:
         adj_mask, _, alive = dense_views_from_tiles(state, view)
         srcs = jnp.arange(state.vcap, dtype=jnp.int32)
         delta, _, _, ok = queries.bc_batched_dense(
-            adj_mask, srcs, alive, use_kernel=use_kernel, amask=view.occ)
+            adj_mask, srcs, alive, use_kernel=use_kernel, amask=view.occ,
+            src_chunk=src_chunk)
         scores = jnp.sum(jnp.where(ok[:, None], delta, 0.0), axis=0)
         scores = jnp.where(alive, scores, jnp.nan)
         self._bc_scores = (key, scores)

@@ -202,21 +202,35 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
 
 def run_graph_cell(multi_pod: bool, out_dir: str = OUT_DIR,
-                   vcap: int = 131072, ecap: int = 2_000_000) -> dict:
-    """The paper's own workload on the production mesh: distributed BFS/SSSP
-    over a Table-1-scale graph (131072 vertices, ~1M edges + slack)."""
+                   vcap: int = 131072, bc_vcap: int = 16384,
+                   n_sources: int = 512) -> dict:
+    """The paper's own workload on the production mesh: the sharded
+    tile-grid engine's distributed BFS/SSSP/BC over a Table-1-scale graph
+    (131072 vertices; the tile grid shards 512 rows of the 64 GiB padded
+    weight matrix per chip).  BC all-gathers the row bands per shard, so
+    its cell compiles at a smaller vcap — note the grid pads vcap up to a
+    multiple of tile x n_devices (8 MiB-row granularity at 256+ devices),
+    so each cell records the ``vp`` it actually compiled at and the
+    per-device numbers must be read against vp, not vcap.  Collective
+    bytes per level (the O(S x vcap) frontier merges) land in the
+    ``collectives`` section via the HLO parser."""
     from repro.core.partition import (
         make_distributed_query, distributed_query_specs)
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
-    mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+    mesh = meshlib.make_graph_mesh(meshlib.make_production_mesh(
+        multi_pod=multi_pod))
     rec = {"arch": "graph_engine", "mesh": mesh_name,
-           "vcap": vcap, "ecap": ecap, "n_devices": int(mesh.devices.size)}
-    for query in ("bfs", "sssp"):
+           "vcap": vcap, "bc_vcap": bc_vcap, "n_sources": n_sources,
+           "n_devices": int(mesh.devices.size)}
+    for query in ("bfs", "sssp", "bc"):
+        v = bc_vcap if query == "bc" else vcap
         fn, in_sh, _ = make_distributed_query(mesh, query)
-        sds = distributed_query_specs(vcap, ecap, mesh)
+        sds = distributed_query_specs(v, mesh, n_sources=n_sources)
         t0 = time.time()
         compiled = jax.jit(fn, in_shardings=in_sh).lower(*sds).compile()
         rec[query] = analyze(compiled)
+        rec[query]["vcap"] = v
+        rec[query]["vp"] = int(sds[0].shape[0])  # padding included
         rec[query]["compile_s"] = round(time.time() - t0, 1)
         del compiled
     os.makedirs(out_dir, exist_ok=True)

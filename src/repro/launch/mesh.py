@@ -26,6 +26,15 @@ def dp_axes(mesh: Mesh) -> tuple:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
+def make_graph_mesh(mesh: Optional[Mesh] = None) -> Mesh:
+    """The 1-D logical ``graph`` axis the sharded tile-grid engine
+    (``repro.shard``) partitions over: every device of ``mesh`` flattened
+    (all local devices when ``None``).  The graph engine always sees one
+    axis regardless of the production mesh's (pod, data, model) shape."""
+    from repro.shard.tile_shard import as_graph_mesh
+    return as_graph_mesh(mesh)
+
+
 def sanitize_spec(spec: P, shape: tuple, mesh: Mesh) -> P:
     """Drop axes that are absent from the mesh or don't divide the dim."""
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -1,0 +1,28 @@
+"""Sharded tile-grid engine: multi-device tile-sparse graph analytics.
+
+The tile-sparse semiring path (``repro.core.tiles`` + ``repro.kernels``)
+partitioned over a 1-D logical graph mesh axis: tile *rows* -> shards, so
+each device owns a contiguous band of source vertices plus that band's
+occupancy grid, and BFS/SSSP/BC run as ``shard_map`` programs — local
+tile-skipping semiring work, one vcap-sized collective per level.
+"""
+from .tile_shard import (  # noqa: F401
+    GRAPH_AXIS,
+    ShardedTileView,
+    as_graph_mesh,
+    build_sharded_view,
+    gather_view,
+    refresh_sharded_view,
+    sharded_occupancy_stats,
+)
+from .queries import (  # noqa: F401
+    ShardedBCResult,
+    ShardedBFSResult,
+    ShardedSSSPResult,
+    bc_batched,
+    bfs,
+    query_fn,
+    query_shardings,
+    sssp,
+)
+from .service import ShardedGraphService  # noqa: F401

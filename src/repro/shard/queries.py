@@ -1,0 +1,302 @@
+"""Distributed tile-sparse queries: BFS / SSSP / BC over the sharded grid.
+
+Each query is one ``shard_map`` program over the 1-D graph mesh axis.  Per
+level a shard does **local** tile-skipping semiring work against its band
+of the :class:`~repro.shard.tile_shard.ShardedTileView` — the very same
+``bool_mm`` / ``minplus_mm`` / ``count_mm`` products (Pallas kernels or
+jnp fallbacks) the single-device path runs, with the band's occupancy grid
+as ``amask`` — followed by ONE vcap-sized collective merging the partial
+frontiers:
+
+  * BFS   — int8 ``pmax`` of the per-band frontier hits
+            (S x Vp bytes per level);
+  * SSSP  — f32 min-merge (``-pmax(-x)``) of the per-band relax candidates
+            (4 x S x Vp bytes per level);
+  * BC    — the **source axis** is sharded instead: one ``all_gather`` of
+            the row bands rebuilds the full grid per shard (Vp^2/n x 4
+            bytes, once per query, not per level), then each shard runs the
+            chunked batched-Brandes building block
+            (``core.queries.bc_batched_dense``) over its own S/n sources,
+            holding only its sources' S/n x Vp level/sigma/delta state —
+            the "BC at larger scale" decomposition.  One final psum merges
+            the per-vertex scores.
+
+Collective bytes per level are O(S x vcap), independent of E — exactly the
+paper's property that queries validate against vertex metadata, not edges.
+Cross-shard snapshot agreement is psum-validated the same way: every query
+returns ``agree``, true iff all shards computed from the same committed
+``version`` (the double-collect version check of ``ShardedGraphService``
+then spans commits).
+
+Results are bit-identical to the single-device ``core.queries`` batched
+path on the same snapshot: BFS levels are exact integers; the SSSP min-plus
+merge is order-free; BC runs the identical per-chunk sweep on the gathered
+operands (levels/sigma exact, delta exact per source — only the final
+score sum reassociates across shards).
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import semiring
+from repro.core.graph_state import INF, GraphState
+from repro.core.queries import bc_batched_dense
+
+from .tile_shard import ShardedTileView, _axis
+
+
+class ShardedBFSResult(NamedTuple):
+    ok: jax.Array        # bool[S]      source was alive
+    dist: jax.Array      # int32[S, V]  (-1 = unreached)
+    val_ecnt: jax.Array  # int32[V]     validation vector (reached ecnt)
+    agree: jax.Array     # bool[]       all shards saw the same version
+
+
+class ShardedSSSPResult(NamedTuple):
+    ok: jax.Array        # bool[S]  source alive and no negative cycle
+    negcycle: jax.Array  # bool[S]
+    dist: jax.Array      # f32[S, V]  (+inf = unreachable)
+    val_ecnt: jax.Array  # int32[V]
+    agree: jax.Array     # bool[]
+
+
+class ShardedBCResult(NamedTuple):
+    ok: jax.Array        # bool[S]
+    delta: jax.Array     # f32[S, V]   dependencies, sharded over sources
+    sigma: jax.Array     # f32[S, V]
+    level: jax.Array     # int32[S, V]
+    scores: jax.Array    # f32[V]      sum_s delta[s, v] over ok sources
+    val_ecnt: jax.Array  # int32[V]
+    agree: jax.Array     # bool[]
+
+
+def _version_agree(version, ax):
+    v = jnp.asarray(version, jnp.int32)
+    same = (v == lax.pmax(v, ax)).astype(jnp.int32)
+    return lax.psum(same, ax) == lax.psum(1, ax)
+
+
+def _band_views(w_local, alive, ax):
+    """Per-shard operand prep: padded alive, the band's row slice, and the
+    band's alive-masked adjacency/weights."""
+    band, vp = w_local.shape
+    alivep = jnp.pad(alive, (0, vp - alive.shape[0]))
+    lo = lax.axis_index(ax) * band
+    alive_rows = lax.dynamic_slice_in_dim(alivep, lo, band)
+    edge = (w_local < INF) & alive_rows[:, None] & alivep[None, :]
+    return alivep, lo, edge
+
+
+# ------------------------------ BFS / SSSP ---------------------------------
+
+def _bfs_body(w_local, occ_local, alive, ecnt, srcs, version, *,
+              ax, tile, use_kernel):
+    vp = w_local.shape[1]
+    band = w_local.shape[0]
+    vcap = alive.shape[0]
+    alivep, lo, edge = _band_views(w_local, alive, ax)
+    a_local = edge.astype(jnp.float32)
+
+    ok = alivep[jnp.clip(srcs, 0, vp - 1)] & (srcs >= 0) & (srcs < vcap)
+    front0 = jax.nn.one_hot(srcs, vp, dtype=jnp.float32) * ok[:, None]
+    dist0 = jnp.where(front0 > 0, 0, -1).astype(jnp.int32)
+
+    def cond(c):
+        _, front, lvl = c
+        return (front > 0).any() & (lvl < vcap)
+
+    def body(c):
+        dist, front, lvl = c
+        fk = lax.dynamic_slice_in_dim(front, lo, band, axis=1)
+        part = semiring.bool_mm(fk, a_local, use_kernel=use_kernel,
+                                amask=occ_local, tile=tile)
+        hit = lax.pmax(part.astype(jnp.int8), ax) > 0  # one int8 pmax / level
+        newly = hit & (dist < 0)
+        dist = jnp.where(newly, lvl + 1, dist)
+        return dist, newly.astype(jnp.float32), lvl + 1
+
+    dist, _, _ = lax.while_loop(cond, body, (dist0, front0, jnp.int32(0)))
+    reached_any = (dist[:, :vcap] >= 0).any(axis=0)
+    val_ecnt = jnp.where(reached_any, ecnt, 0)
+    return ok, dist, val_ecnt, _version_agree(version, ax)
+
+
+def _sssp_body(w_local, occ_local, alive, ecnt, srcs, version, *,
+               ax, tile, use_kernel):
+    vp = w_local.shape[1]
+    band = w_local.shape[0]
+    vcap = alive.shape[0]
+    S = srcs.shape[0]
+    alivep, lo, edge = _band_views(w_local, alive, ax)
+    big_local = jnp.where(edge, w_local, INF)
+
+    ok = alivep[jnp.clip(srcs, 0, vp - 1)] & (srcs >= 0) & (srcs < vcap)
+    dist0 = jnp.where(
+        jax.nn.one_hot(srcs, vp, dtype=jnp.float32) * ok[:, None] > 0,
+        0.0, INF)
+
+    def cond(c):
+        _, changed, it = c
+        return changed.any() & (it < vcap)
+
+    def body(c):
+        dist, _, it = c
+        dk = lax.dynamic_slice_in_dim(dist, lo, band, axis=1)
+        cand = semiring.minplus_mm(dk, big_local, use_kernel=use_kernel,
+                                   amask=occ_local, tile=tile)
+        cand = -lax.pmax(-cand, ax)  # one f32 min-merge / level
+        nd = jnp.minimum(dist, cand)
+        return nd, (nd < dist).any(axis=1), it + 1
+
+    # Same free CHECKNEGCYCLE as sssp_batched_dense: still-changed at loop
+    # exit == the vcap-th pass improved something == negative cycle.
+    dist, changed, _ = lax.while_loop(
+        cond, body, (dist0, jnp.ones((S,), jnp.bool_), jnp.int32(0)))
+    reached_any = (dist[:, :vcap] < INF).any(axis=0)
+    val_ecnt = jnp.where(reached_any, ecnt, 0)
+    return ok & ~changed, changed, dist, val_ecnt, _version_agree(version, ax)
+
+
+# ---------------------------------- BC -------------------------------------
+
+def _bc_body(w_local, occ_local, alive, ecnt, srcs_local, version, *,
+             ax, tile, use_kernel, src_chunk):
+    vp = w_local.shape[1]
+    vcap = alive.shape[0]
+    alivep = jnp.pad(alive, (0, vp - vcap))
+    # One gather of the row bands per query: O(Vp^2/n x 4B) per shard, vs
+    # O(levels x S x Vp) had the adjacency stayed sharded through both
+    # sweeps — and it keeps the per-chunk sweep bit-identical to the
+    # single-device path.
+    w_full = lax.all_gather(w_local, ax, axis=0, tiled=True)
+    occ_full = lax.all_gather(occ_local, ax, axis=0, tiled=True)
+    delta, sigma, level, ok = bc_batched_dense(
+        w_full < INF, srcs_local, alivep, use_kernel=use_kernel,
+        amask=occ_full, tile=tile, src_chunk=src_chunk)
+    part = jnp.sum(jnp.where(ok[:, None], delta, 0.0), axis=0)
+    scores = lax.psum(part, ax)[:vcap]
+    reached_any = lax.psum((level[:, :vcap] >= 0).any(axis=0)
+                           .astype(jnp.int32), ax) > 0
+    val_ecnt = jnp.where(reached_any, ecnt, 0)
+    return ok, delta, sigma, level, scores, val_ecnt, _version_agree(version, ax)
+
+
+# ------------------------------ entry points -------------------------------
+
+@lru_cache(maxsize=None)
+def query_fn(mesh: Mesh, kind: str, tile: int, use_kernel: bool = False,
+             src_chunk: int | None = None):
+    """The jitted shard_map program for ``kind`` on ``mesh``.
+
+    Signature: ``fn(w, occ, alive, ecnt, srcs, version)`` over GLOBAL
+    arrays — ``w``/``occ`` sharded ``P(axis, None)`` (a ``ShardedTileView``),
+    vertex arrays replicated, ``srcs`` replicated for bfs/sssp and sharded
+    ``P(axis)`` for bc (length must divide the axis size; the host wrappers
+    pad with -1).  Cached per (mesh, kind, tile, use_kernel, src_chunk).
+    """
+    ax = _axis(mesh)
+    vspec, rspec = P(ax, None), P()
+    if kind == "bfs":
+        def body(w, occ, alive, ecnt, srcs, version):
+            return _bfs_body(w, occ, alive, ecnt, srcs, version, ax=ax,
+                             tile=tile, use_kernel=use_kernel)
+        src_spec = rspec
+        out_specs = (rspec, rspec, rspec, rspec)
+    elif kind == "sssp":
+        def body(w, occ, alive, ecnt, srcs, version):
+            return _sssp_body(w, occ, alive, ecnt, srcs, version, ax=ax,
+                              tile=tile, use_kernel=use_kernel)
+        src_spec = rspec
+        out_specs = (rspec, rspec, rspec, rspec, rspec)
+    elif kind == "bc":
+        def body(w, occ, alive, ecnt, srcs, version):
+            return _bc_body(w, occ, alive, ecnt, srcs, version, ax=ax,
+                            tile=tile, use_kernel=use_kernel,
+                            src_chunk=src_chunk)
+        src_spec = P(ax)
+        out_specs = (P(ax), vspec, vspec, vspec, rspec, rspec, rspec)
+    else:
+        raise ValueError(f"unknown query kind {kind!r}; "
+                         "supported kinds: bfs, sssp, bc")
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(vspec, vspec, rspec, rspec, src_spec, rspec),
+        out_specs=out_specs,
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+def query_shardings(mesh: Mesh, kind: str):
+    """(in_shardings, out_shardings) matching ``query_fn`` — what an AOT
+    ``jit(fn, in_shardings=...).lower`` (``launch/dryrun.py``) needs."""
+    ax = _axis(mesh)
+    v = NamedSharding(mesh, P(ax, None))
+    r = NamedSharding(mesh, P())
+    s = NamedSharding(mesh, P(ax))
+    if kind == "bc":
+        return (v, v, r, r, s, r), (s, v, v, v, r, r, r)
+    if kind not in ("bfs", "sssp"):
+        raise ValueError(f"unknown query kind {kind!r}; "
+                         "supported kinds: bfs, sssp, bc")
+    return (v, v, r, r, r, r), (r,) * (4 if kind == "bfs" else 5)
+
+
+def _srcs_array(srcs, n_shards: int = 1, pad_to_shards: bool = False):
+    srcs = jnp.atleast_1d(jnp.asarray(srcs, jnp.int32))
+    if pad_to_shards:
+        rem = (-srcs.shape[0]) % n_shards
+        if rem:
+            srcs = jnp.concatenate(
+                [srcs, jnp.full((rem,), -1, jnp.int32)])
+    return srcs
+
+
+def bfs(view: ShardedTileView, state: GraphState, srcs, *,
+        use_kernel: bool = False) -> ShardedBFSResult:
+    """Distributed multi-source BFS; ``dist`` is sliced back to ``vcap``."""
+    srcs = _srcs_array(srcs)
+    fn = query_fn(view.mesh, "bfs", view.tile, use_kernel)
+    ok, dist, val_ecnt, agree = fn(view.w, view.occ, state.alive, state.ecnt,
+                                   srcs, state.version)
+    return ShardedBFSResult(ok, dist[:, :state.vcap], val_ecnt, agree)
+
+
+def sssp(view: ShardedTileView, state: GraphState, srcs, *,
+         use_kernel: bool = False) -> ShardedSSSPResult:
+    """Distributed multi-source Bellman-Ford with negative-cycle flags."""
+    srcs = _srcs_array(srcs)
+    fn = query_fn(view.mesh, "sssp", view.tile, use_kernel)
+    ok, neg, dist, val_ecnt, agree = fn(view.w, view.occ, state.alive,
+                                        state.ecnt, srcs, state.version)
+    return ShardedSSSPResult(ok, neg, dist[:, :state.vcap], val_ecnt, agree)
+
+
+def bc_batched(view: ShardedTileView, state: GraphState, srcs=None, *,
+               use_kernel: bool = False,
+               src_chunk: int | None = None) -> ShardedBCResult:
+    """Distributed batched Brandes, source axis sharded over the mesh.
+
+    ``srcs`` defaults to every vertex slot (exact all-sources BC); it is
+    padded with -1 up to a multiple of the shard count (dead padding
+    contributes nothing) and the padding is sliced back off the returned
+    per-source arrays, which stay sharded ``P(axis, None)``.
+    """
+    if srcs is None:
+        srcs = jnp.arange(state.vcap, dtype=jnp.int32)
+    n_srcs = jnp.atleast_1d(jnp.asarray(srcs)).shape[0]
+    srcs = _srcs_array(srcs, view.n_shards, pad_to_shards=True)
+    fn = query_fn(view.mesh, "bc", view.tile, use_kernel, src_chunk)
+    ok, delta, sigma, level, scores, val_ecnt, agree = fn(
+        view.w, view.occ, state.alive, state.ecnt, srcs, state.version)
+    vcap = state.vcap
+    return ShardedBCResult(ok[:n_srcs], delta[:n_srcs, :vcap],
+                           sigma[:n_srcs, :vcap], level[:n_srcs, :vcap],
+                           scores, val_ecnt, agree)

@@ -58,6 +58,33 @@ def test_bc_batched_with_tombstones_and_dead_vertices():
     assert not bool(ok[2]) and not bool(ok[3])  # dead sources report !ok
 
 
+@pytest.mark.parametrize("chunk", [1, 24, 64, 200])
+def test_bc_batched_src_chunk_matches_unchunked(chunk):
+    """Source-axis chunking (ragged tail included) changes peak scratch,
+    not results: levels/sigma/ok bit-exact, delta to summation order."""
+    g = load_rmat_graph(64, 400, seed=7, weighted=False)
+    g, _ = apply_ops(g, [(REMV, 9)])
+    am, _, alive = dense_views(g)
+    srcs = jnp.arange(64, dtype=jnp.int32)
+    base = bc_batched_dense(am, srcs, alive)
+    got = bc_batched_dense(am, srcs, alive, src_chunk=chunk)
+    assert np.array_equal(np.asarray(base[2]), np.asarray(got[2]))  # level
+    assert np.array_equal(np.asarray(base[1]), np.asarray(got[1]))  # sigma
+    assert np.array_equal(np.asarray(base[3]), np.asarray(got[3]))  # ok
+    assert np.allclose(np.asarray(base[0]), np.asarray(got[0]),
+                       rtol=1e-5, atol=1e-5)                        # delta
+
+
+def test_bc_wrapper_src_chunk():
+    g = load_rmat_graph(32, 160, seed=6, weighted=False)
+    ref = float(bc(g, 9))
+    assert float(bc(g, 9, src_chunk=10)) == pytest.approx(ref, rel=1e-4)
+    am, _, alive = dense_views(g)
+    with pytest.raises(ValueError):
+        bc_batched_dense(am, jnp.arange(32, dtype=jnp.int32), alive,
+                         src_chunk=0)
+
+
 def test_bc_batched_out_of_range_sources():
     g = make_graph(16, 32)
     g, _ = apply_ops(g, [(PUTV, 0), (PUTV, 1), (PUTE, 0, 1, 1.0)])

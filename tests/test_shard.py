@@ -1,0 +1,327 @@
+"""Sharded tile-grid engine: sharded-vs-local equivalence.
+
+The multi-device tests follow the ``test_checkpoint.py`` elastic-rescale
+pattern: a subprocess sets ``--xla_force_host_platform_device_count=4``
+BEFORE importing jax, so the placeholder devices never leak into other
+tests.  Equivalence bar (the PR's acceptance): distributed bfs/sssp dist
+and bc level/sigma are BIT-identical to the single-device ``core.queries``
+batched path on the same snapshot — including tombstones and dead vertices
+— while bc delta/scores match to f32 summation order (the same caveat
+``bc_batched_dense`` documents vs per-source Brandes).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    PUTE, REME, REMV, apply_ops, dense_views, queries,
+)
+from repro.core.partition import (
+    SUPPORTED_KINDS, build_query_inputs, make_distributed_query,
+)
+from repro.core.updates import dirty_vertices
+from repro.data import load_rmat_graph
+from repro.shard import (
+    as_graph_mesh,
+    bc_batched,
+    bfs,
+    build_sharded_view,
+    gather_view,
+    refresh_sharded_view,
+    sharded_occupancy_stats,
+    sssp,
+)
+
+
+def _run_multidevice(script: str, n_devices: int = 4) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    prelude = (
+        "import os\n"
+        f'os.environ["XLA_FLAGS"] = '
+        f'"--xla_force_host_platform_device_count={n_devices}"\n')
+    r = subprocess.run([sys.executable, "-c", prelude + script], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    return r.stdout
+
+
+def _tombstoned_graph(n=64, edges=400, seed=3):
+    g = load_rmat_graph(n, edges, seed=seed)
+    return apply_ops(g, [(REME, int(g.esrc[5]), int(g.edst[5])),
+                         (REME, int(g.esrc[40]), int(g.edst[40])),
+                         (REMV, 7), (REMV, 33)])[0]
+
+
+# ------------------------ in-process (1-device mesh) -----------------------
+
+def test_make_distributed_query_rejects_unknown_kind():
+    mesh = as_graph_mesh()
+    with pytest.raises(ValueError) as ei:
+        make_distributed_query(mesh, "pagerank")
+    msg = str(ei.value)
+    assert "pagerank" in msg
+    for kind in SUPPORTED_KINDS:
+        assert kind in msg
+
+
+def test_sharded_matches_local_single_device():
+    """The shard_map programs are mesh-size-agnostic: on a 1-device mesh
+    they must already be bit-identical to the local batched path."""
+    g = _tombstoned_graph()
+    mesh = as_graph_mesh()
+    view = build_sharded_view(g, mesh, tile=16)
+    am, wd, alive = dense_views(g)
+    srcs = jnp.asarray([0, 1, 7, 33, 63], jnp.int32)  # incl. dead sources
+
+    r = bfs(view, g, srcs)
+    assert np.array_equal(np.asarray(r.dist),
+                          np.asarray(queries.bfs_batched_dense(am, srcs,
+                                                               alive)))
+    assert bool(r.agree)
+    r2 = sssp(view, g, srcs)
+    dref, negref = queries.sssp_batched_dense(wd, srcs, alive)
+    assert np.array_equal(np.asarray(r2.dist), np.asarray(dref))
+    assert np.array_equal(np.asarray(r2.negcycle), np.asarray(negref))
+
+    r3 = bc_batched(view, g, srcs, src_chunk=2)
+    d, s, lv, ok = queries.bc_batched_dense(am, srcs, alive, src_chunk=2)
+    assert np.array_equal(np.asarray(r3.level), np.asarray(lv))
+    assert np.array_equal(np.asarray(r3.sigma), np.asarray(s))
+    assert np.array_equal(np.asarray(r3.ok), np.asarray(ok))
+    assert np.allclose(np.asarray(r3.delta), np.asarray(d),
+                       rtol=1e-5, atol=1e-5)
+
+
+def test_bc_source_padding_and_default_sources():
+    """Source counts that don't divide the mesh are padded with -1 and the
+    padding sliced back off; ``srcs=None`` means every vertex slot."""
+    g = _tombstoned_graph(n=32, edges=120)
+    mesh = as_graph_mesh()
+    view = build_sharded_view(g, mesh, tile=16)
+    r = bc_batched(view, g, jnp.asarray([0, 5, 9], jnp.int32))
+    assert r.delta.shape == (3, 32) and r.ok.shape == (3,)
+    r_all = bc_batched(view, g, None)
+    am, _, alive = dense_views(g)
+    d, s, lv, ok = queries.bc_batched_dense(
+        am, jnp.arange(32, dtype=jnp.int32), alive)
+    scores = jnp.sum(jnp.where(ok[:, None], d, 0.0), axis=0)
+    assert np.allclose(np.asarray(r_all.scores), np.asarray(scores),
+                       rtol=1e-5, atol=1e-5)
+
+
+def test_refresh_sharded_view_strategies():
+    g = _tombstoned_graph()
+    mesh = as_graph_mesh()
+    view = build_sharded_view(g, mesh, tile=16)
+    # empty dirty set: the very same view comes back
+    same = refresh_sharded_view(g, view, jnp.zeros((64,), jnp.bool_))
+    assert same is view
+    # tile-size mismatch: falls back to a rebuild at the new grid
+    g2, _ = apply_ops(g, [(PUTE, 3, 9, 2.0)])
+    view2 = refresh_sharded_view(g2, view, dirty_vertices(g, g2), tile=32)
+    assert view2.tile == 32
+    full = gather_view(view2)
+    ref = gather_view(build_sharded_view(g2, mesh, tile=32))
+    assert np.array_equal(np.asarray(full.w), np.asarray(ref.w))
+    assert np.array_equal(np.asarray(full.occ), np.asarray(ref.occ))
+    # no prev and no mesh: explicit error
+    with pytest.raises(ValueError):
+        refresh_sharded_view(g2, None, None)
+
+
+def test_build_query_inputs_roundtrip():
+    g = _tombstoned_graph(n=32, edges=120)
+    mesh = as_graph_mesh()
+    fn, _, _ = make_distributed_query(mesh, "bfs", tile=16)
+    args = build_query_inputs(g, mesh, [0, 2], tile=16)
+    ok, dist, val_ecnt, agree = fn(*args)
+    am, _, alive = dense_views(g)
+    ref = queries.bfs_batched_dense(am, jnp.asarray([0, 2], jnp.int32), alive)
+    assert np.array_equal(np.asarray(dist)[:, :32], np.asarray(ref))
+    assert bool(agree)
+
+
+# ------------------------- multi-device subprocess -------------------------
+
+def test_sharded_view_refresh_multidevice():
+    """Build + per-shard dirty-row refresh under an update stream, compact,
+    and both grows: always bit-identical to a from-scratch sharded build."""
+    out = _run_multidevice(r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import PUTE, PUTV, REME, REMV, apply_ops, compact, grow_edges, grow_vertices
+from repro.core.graph_state import densify
+from repro.core.updates import dirty_vertices
+from repro.data import load_rmat_graph
+from repro.shard import (as_graph_mesh, build_sharded_view, refresh_sharded_view,
+                         gather_view, sharded_occupancy_stats)
+
+mesh = as_graph_mesh()
+assert mesh.devices.size == 4
+g = load_rmat_graph(64, 400, seed=2)
+view = build_sharded_view(g, mesh, tile=16)
+assert view.vp % (4 * 16) == 0 and view.band == view.vp // 4
+stats = sharded_occupancy_stats(view)
+assert len(stats["per_shard_tile_skip_rate"]) == 4
+
+def check(state, v):
+    full = gather_view(v)
+    vcap = state.vcap
+    w = np.asarray(full.w)
+    assert np.array_equal(w[:vcap, :vcap], np.asarray(densify(state)))
+    assert np.isinf(w[vcap:, :]).all() and np.isinf(w[:, vcap:]).all()
+    ref = gather_view(build_sharded_view(state, mesh, tile=16))
+    assert np.array_equal(w, np.asarray(ref.w))
+    assert np.array_equal(np.asarray(full.occ), np.asarray(ref.occ))
+
+check(g, view)
+rng = np.random.default_rng(0)
+for i in range(6):
+    ops = [(PUTE, int(rng.integers(0, 64)), int(rng.integers(0, 64)),
+            float(rng.integers(1, 9))) for _ in range(5)]
+    ops += [(REME, int(rng.integers(0, 64)), int(rng.integers(0, 64))),
+            (REMV, int(rng.integers(0, 64))) if i == 3 else
+            (PUTV, int(rng.integers(0, 64)))]
+    g2, _ = apply_ops(g, ops)
+    view = refresh_sharded_view(g2, view, dirty_vertices(g, g2))
+    check(g2, view)
+    g = g2
+g2 = compact(g)
+view = refresh_sharded_view(g2, view, jnp.zeros((64,), jnp.bool_))
+check(g2, view)
+g = g2
+g2 = grow_edges(g)
+g3, _ = apply_ops(g2, [(PUTE, 1, 2, 4.0)])
+view = refresh_sharded_view(g3, view, dirty_vertices(g2, g3))
+check(g3, view)
+g4 = grow_vertices(g3)
+g5, _ = apply_ops(g4, [(PUTV, 100), (PUTE, 1, 100, 2.0)])
+view = refresh_sharded_view(g5, view, jnp.ones((g5.vcap,), jnp.bool_))
+check(g5, view)
+print("VIEW OK")
+""")
+    assert "VIEW OK" in out
+
+
+def test_sharded_queries_equal_local_multidevice():
+    """Distributed bfs/sssp/bc on a 4-way mesh vs the single-device path on
+    an R-MAT graph with tombstones and dead vertices, plus the legacy
+    edge-sharded oracle cross-check on BFS."""
+    out = _run_multidevice(r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import REME, REMV, apply_ops, dense_views, queries
+from repro.core.partition import build_query_inputs, make_distributed_query
+from repro.data import load_rmat_graph
+from repro.shard import as_graph_mesh, build_sharded_view, bc_batched, bfs, sssp
+
+mesh = as_graph_mesh()
+assert mesh.devices.size == 4
+g = load_rmat_graph(64, 400, seed=3)
+g, _ = apply_ops(g, [(REME, int(g.esrc[5]), int(g.edst[5])),
+                     (REME, int(g.esrc[40]), int(g.edst[40])),
+                     (REMV, 7), (REMV, 33)])
+view = build_sharded_view(g, mesh, tile=16)
+am, wd, alive = dense_views(g)
+srcs = jnp.asarray([0, 1, 7, 33, 12, 63, 5, 2], jnp.int32)
+
+r = bfs(view, g, srcs)
+ref = queries.bfs_batched_dense(am, srcs, alive)
+assert np.array_equal(np.asarray(r.dist), np.asarray(ref))
+assert bool(r.agree)
+# per-source COO oracle too
+one = queries.bfs(g, 0)
+assert np.array_equal(np.asarray(r.dist[0]), np.asarray(one.dist))
+
+r2 = sssp(view, g, srcs)
+dref, negref = queries.sssp_batched_dense(wd, srcs, alive)
+assert np.array_equal(np.asarray(r2.dist), np.asarray(dref))
+assert np.array_equal(np.asarray(r2.negcycle), np.asarray(negref))
+ones = queries.sssp(g, 0)
+assert np.array_equal(np.asarray(r2.dist[0]), np.asarray(ones.dist))
+
+r3 = bc_batched(view, g, srcs, src_chunk=2)
+d, s, lv, ok = queries.bc_batched_dense(am, srcs, alive, src_chunk=2)
+assert np.array_equal(np.asarray(r3.level), np.asarray(lv))
+assert np.array_equal(np.asarray(r3.sigma), np.asarray(s))
+assert np.array_equal(np.asarray(r3.ok), np.asarray(ok))
+assert np.allclose(np.asarray(r3.delta), np.asarray(d), rtol=1e-5, atol=1e-5)
+
+# the partition front end over the same mesh
+fn, _, _ = make_distributed_query(mesh, "bc", tile=16, src_chunk=2)
+args = build_query_inputs(g, mesh, srcs, tile=16)
+okp, dp, sp, lp, scores, val, agree = fn(*args)
+assert np.array_equal(np.asarray(lp)[:, :64], np.asarray(lv))
+assert bool(agree)
+
+# legacy edge-sharded oracle agrees on the same snapshot (BFS dist)
+from jax.sharding import Mesh
+from repro.core.partition_legacy import make_distributed_query as legacy_q
+from repro.core.partition_legacy import shard_edges
+lmesh = Mesh(np.asarray(jax.devices()).reshape(2, 2), ("data", "model"))
+gl = shard_edges(g, 4)
+lfn, _, _ = legacy_q(lmesh, "bfs")
+lreached, ldist, lparent, lec = jax.jit(lfn)(
+    gl.alive, gl.ecnt, gl.esrc, gl.edst, gl.ew, jnp.int32(0))
+assert np.array_equal(np.asarray(ldist), np.asarray(r.dist[0]))
+print("QUERIES OK")
+""")
+    assert "QUERIES OK" in out
+
+
+def test_sharded_service_multidevice():
+    """ShardedGraphService on a 4-way mesh: unchanged-shortcut, per-version
+    caches, cn double collect, and bc_scores vs the local engine service."""
+    out = _run_multidevice(r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import PUTE, REME, apply_ops
+from repro.data import load_rmat_graph
+from repro.engine import GraphService
+from repro.shard import ShardedGraphService, as_graph_mesh
+
+mesh = as_graph_mesh()
+g = load_rmat_graph(64, 600, seed=5)
+svc = ShardedGraphService(g, mesh, tile=16, batch_size=4)
+local = GraphService(g, batch_size=4)
+
+rep = svc.query("bfs", [0, 1])
+assert rep.mode == "full" and bool(rep.result.agree)
+lrep = local.query("bfs", 0)
+assert np.array_equal(np.asarray(rep.result.dist[0]), np.asarray(lrep.result.dist))
+assert svc.query("bfs", [0, 1]).mode == "unchanged"
+
+# churn far from the reached region keeps the cached answer
+svc.submit_many([(PUTE, 200, 201, 1.0)] * 4)
+svc.flush()
+rep2 = svc.query("sssp", [0])
+assert rep2.mode == "full"
+svc.submit_many([(PUTE, 200, 202, 1.0)] * 4)
+svc.flush()
+assert svc.query("sssp", [0]).mode == "unchanged"
+
+# touching churn forces a fresh distributed collect, via cn double collect
+ops = [(PUTE, 0, v, 1.0) for v in (9, 11, 13, 15)]
+svc.submit_many(ops)
+local.submit_many(ops)
+svc.flush(); local.flush()
+rep3 = svc.query("sssp", [0], mode="cn")
+# the cn reply carries its FINAL collect's mode: the second collect sees
+# the same ring version and reports unchanged (engine-service semantics)
+assert rep3.validated and svc.stats.full >= 2
+lrep3 = local.query("sssp", 0)
+assert np.array_equal(np.asarray(rep3.result.dist[0]), np.asarray(lrep3.result.dist))
+
+scores, ver = svc.bc_scores()
+lscores, lver = local.bc_scores()
+assert ver == svc.version and lver == local.version
+a, b = np.asarray(scores), np.asarray(lscores)
+assert np.array_equal(np.isnan(a), np.isnan(b))
+assert np.allclose(np.nan_to_num(a), np.nan_to_num(b), rtol=1e-4, atol=1e-4)
+print("SERVICE OK")
+""")
+    assert "SERVICE OK" in out
