@@ -41,13 +41,16 @@ from repro.data import load_rmat_graph
 from repro.engine import (
     GraphService,
     VersionRing,
+    incremental_bc,
     incremental_bfs,
     incremental_sssp,
     validate_incremental,
 )
 
-_INCR = {"bfs": incremental_bfs, "sssp": incremental_sssp}
-_FULL = {"bfs": queries.bfs, "sssp": queries.sssp}
+_INCR = {"bfs": incremental_bfs, "sssp": incremental_sssp,
+         "bc": incremental_bc}
+_FULL = {"bfs": queries.bfs, "sssp": queries.sssp,
+         "bc": queries.bc_dependencies}
 
 ROWS: list[dict] = []
 
@@ -239,7 +242,7 @@ def main(n=2048, edge_factor=8, n_commits=32, ops_per_commit=24,
     versions = build_versions(graph, stream, depth=n_commits + 2)
 
     speedups = {}
-    for kind in ("bfs", "sssp"):
+    for kind in ("bfs", "sssp", "bc"):
         speedups[kind] = bench_query_paths(graph, versions, src, kind,
                                            verify=verify)
     ops_per_s = bench_service_stream(graph, stream, src)
@@ -247,9 +250,9 @@ def main(n=2048, edge_factor=8, n_commits=32, ops_per_commit=24,
     tile_speedup, tile_stats = bench_tile_view(graph, versions)
 
     print(f"\nIncremental speedup at <={hot_frac * 100:.0f}% dirty/commit: "
-          f"BFS {speedups['bfs']:.2f}x, SSSP {speedups['sssp']:.2f}x "
-          f"over full recompute; tile refresh {tile_speedup:.2f}x over "
-          f"rebuild", flush=True)
+          f"BFS {speedups['bfs']:.2f}x, SSSP {speedups['sssp']:.2f}x, "
+          f"BC {speedups['bc']:.2f}x over full recompute; tile refresh "
+          f"{tile_speedup:.2f}x over rebuild", flush=True)
 
     payload = {
         "bench": "engine",
@@ -260,6 +263,7 @@ def main(n=2048, edge_factor=8, n_commits=32, ops_per_commit=24,
         "rows": ROWS,
         "speedups": {"bfs_incr_vs_full": round(speedups["bfs"], 3),
                      "sssp_incr_vs_full": round(speedups["sssp"], 3),
+                     "bc_incr_vs_full": round(speedups["bc"], 3),
                      "tileview_refresh_vs_rebuild": round(tile_speedup, 3)},
         "service": {"update_ops_per_s": round(ops_per_s, 1)},
         "tile_occupancy": tile_stats,

@@ -152,19 +152,16 @@ def sssp(state: GraphState, src) -> SSSPResult:
 
 # ---------------------------------- BC -----------------------------------
 
-@jax.jit
-def bc_dependencies(state: GraphState, src) -> BCResult:
-    """Brandes single-source dependency accumulation delta(src | .)."""
-    src = jnp.asarray(src, jnp.int32)
-    vcap = state.vcap
-    live, srcc, dstc = _edge_views(state)
-    ok = state.alive[jnp.clip(src, 0, vcap - 1)] & (src >= 0) & (src < vcap)
+def _bc_coo_sweep(live, srcc, dstc, vcap, level0, sigma0, front0, lvl0):
+    """Brandes forward + backward over COO edges from a (possibly warm) start.
 
-    level0 = jnp.full((vcap,), -1, jnp.int32).at[src].set(
-        jnp.where(ok, 0, -1), mode="drop")
-    sigma0 = jnp.zeros((vcap,), jnp.float32).at[src].set(
-        jnp.where(ok, 1.0, 0.0), mode="drop")
-    front0 = level0 == 0
+    The shared body of ``bc_dependencies`` (cold start: source frontier at
+    level 0) and the engine's level-cut ``delta_bc`` (warm start: the prior
+    forward tree above the cut, frontier at ``cut - 1``).  Warm starts
+    produce bit-identical results because the loop state at pass ``lvl0``
+    equals the cold run's state at that pass — the levels below ``lvl0``
+    are required to be exactly what a cold run would have computed.
+    """
 
     # Forward phase: levels + shortest-path counts.
     def fcond(carry):
@@ -182,11 +179,12 @@ def bc_dependencies(state: GraphState, src) -> BCResult:
         level = jnp.where(newly, lvl + 1, level)
         return level, sigma, newly, lvl + 1
 
-    level, sigma, _, maxl = lax.while_loop(
-        fcond, fbody, (level0, sigma0, front0, jnp.int32(0)))
+    level, sigma, _, _ = lax.while_loop(
+        fcond, fbody, (level0, sigma0, front0, jnp.asarray(lvl0, jnp.int32)))
 
     # Backward phase: delta[u] += sum over tree edges (u,w) at level l->l+1
-    # of sigma[u]/sigma[w] * (1 + delta[w]), from the deepest level down.
+    # of sigma[u]/sigma[w] * (1 + delta[w]), from the deepest level down
+    # (max(level) == deepest reached level; -1 when nothing is reached).
     sig_src = sigma[srcc]
     sig_dst = jnp.where(sigma[dstc] > 0, sigma[dstc], 1.0)
 
@@ -203,9 +201,103 @@ def bc_dependencies(state: GraphState, src) -> BCResult:
         return delta, l - 1
 
     delta, _ = lax.while_loop(
-        bcond, bbody, (jnp.zeros((vcap,), jnp.float32), maxl - 1))
+        bcond, bbody, (jnp.zeros((vcap,), jnp.float32), jnp.max(level)))
     delta = jnp.where(level == 0, 0.0, delta)  # source contributes nothing
+    return level, sigma, delta
+
+
+@jax.jit
+def bc_dependencies(state: GraphState, src) -> BCResult:
+    """Brandes single-source dependency accumulation delta(src | .)."""
+    src = jnp.asarray(src, jnp.int32)
+    vcap = state.vcap
+    live, srcc, dstc = _edge_views(state)
+    ok = state.alive[jnp.clip(src, 0, vcap - 1)] & (src >= 0) & (src < vcap)
+
+    level0 = jnp.full((vcap,), -1, jnp.int32).at[src].set(
+        jnp.where(ok, 0, -1), mode="drop")
+    sigma0 = jnp.zeros((vcap,), jnp.float32).at[src].set(
+        jnp.where(ok, 1.0, 0.0), mode="drop")
+    front0 = level0 == 0
+
+    level, sigma, delta = _bc_coo_sweep(
+        live, srcc, dstc, vcap, level0, sigma0, front0, jnp.int32(0))
     return BCResult(ok, delta, sigma, level)
+
+
+@jax.jit
+def bc_level_cut(prior_level, dirty, alive):
+    """Shallowest forward level a dirty set can have poisoned, per source.
+
+    ``prior_level`` is ``int32[vcap]`` (one source) or ``int32[S, vcap]``
+    (batched; ``dirty``/``alive`` broadcast over sources).  Levels strictly
+    below the returned cut are guaranteed untouched: BFS level sets are
+    determined level-by-level by the out-edge lists of the previous level's
+    vertices, every edge mutation dirties the edge's *source*, and a
+    liveness flip dirties the vertex itself — so a dirty vertex at prior
+    level ``l`` can disturb levels ``>= l + 1`` through its out-edges, or
+    level ``l`` itself only by dying.  Sources untouched by the dirty set
+    get a cut past every level (pure reuse); a cut of 0 means the source
+    itself is suspect and the caller must recompute that source cold.
+    """
+    reached = prior_level >= 0
+    d = dirty & reached
+    died = d & ~alive
+    big = jnp.int32(prior_level.shape[-1] + 1)  # deeper than any level
+    c1 = jnp.min(jnp.where(died, prior_level, big), axis=-1)
+    c2 = jnp.min(jnp.where(d, prior_level + 1, big), axis=-1)
+    return jnp.minimum(c1, c2)
+
+
+# ------------------------ traversal-tree parents ---------------------------
+
+@jax.jit
+def bfs_tree_parents(state: GraphState, dist: jax.Array,
+                     srcs: jax.Array) -> jax.Array:
+    """Canonical BFS-tree parents from final distances, batched over sources.
+
+    ``dist`` is ``int32[S, vcap]`` (-1 unreached); returns
+    ``int32[S, vcap]`` parents identical to per-source ``queries.bfs``: the
+    frontier at level ``l`` is exactly ``{u : dist[u] == l}``, so the
+    min-source over tree edges ``dist[u] + 1 == dist[v]`` reproduces the
+    per-level min-source candidate.  Shared by the engine's ``delta_bfs``
+    and the sharded queries (``repro.shard.queries``) so every path derives
+    parents from one definition.
+    """
+    vcap = state.vcap
+    live, srcc, dstc = _edge_views(state)
+
+    def one(d, s):
+        distf = jnp.where(d >= 0, d.astype(jnp.float32), INF)
+        tree = live & (distf[srcc] + 1.0 == distf[dstc]) & (distf[srcc] < INF)
+        parent = jnp.full((vcap,), NOKEY, jnp.int32).at[dstc].min(
+            jnp.where(tree, srcc, NOKEY), mode="drop")
+        parent = jnp.where(d >= 0, parent, NOKEY)
+        return parent.at[jnp.clip(s, 0, vcap - 1)].set(NOKEY)
+
+    return jax.vmap(one)(dist, srcs)
+
+
+@jax.jit
+def sssp_tree_parents(state: GraphState, dist: jax.Array,
+                      srcs: jax.Array) -> jax.Array:
+    """Tight-edge parents from final distances, batched over sources.
+
+    ``dist`` is ``f32[S, vcap]`` (+inf unreachable); identical to
+    per-source ``queries.sssp``: any tight edge
+    ``dist[v] == dist[u] + w(u, v)``, min source id as tie-break.
+    """
+    vcap = state.vcap
+    live, srcc, dstc = _edge_views(state)
+    ew = jnp.where(live, state.ew, INF)
+
+    def one(d, s):
+        tight = live & (d[dstc] == d[srcc] + ew) & (d[srcc] < INF)
+        parent = jnp.full((vcap,), NOKEY, jnp.int32).at[dstc].min(
+            jnp.where(tight, srcc, NOKEY), mode="drop")
+        return parent.at[jnp.clip(s, 0, vcap - 1)].set(NOKEY)
+
+    return jax.vmap(one)(dist, srcs)
 
 
 def bc_map(state: GraphState, v, sources) -> jax.Array:
@@ -338,23 +430,52 @@ def dense_views(state: GraphState):
 # ------------------------- batched Brandes (BC) ---------------------------
 
 def _bc_sweep(a: jax.Array, at: jax.Array, srcs: jax.Array, alive: jax.Array,
-              use_kernel: bool, amask, amask_t, tile: int):
+              use_kernel: bool, amask, amask_t, tile: int,
+              prior_level=None, prior_sigma=None, cut=None):
     """One forward+backward Brandes sweep over a batch of sources.
 
     Operands are already prepared (``a`` = alive-masked f32 adjacency,
     ``at`` its transpose); this is the per-chunk building block both
     ``bc_batched_dense`` and the sharded BC (``repro.shard.queries``) call.
+
+    ``prior_level``/``prior_sigma``/``cut`` warm-start the forward sweep
+    per source (the level-cut delta-BC path): levels strictly below
+    ``cut[s]`` are reused from the prior forward tree and source ``s``
+    resumes expanding from its frontier at level ``cut[s] - 1``; a cut of
+    0 (source itself suspect) restarts that source cold, and a cut past
+    every level (untouched source) reuses its whole tree with zero forward
+    passes.  The per-source level counter makes rows independent, so mixed
+    cuts share one loop; each row's state at its resume pass equals the
+    cold run's state at that pass, hence levels/sigma stay bit-identical
+    and the (full) backward sweep reproduces delta bit-identically too.
     """
     V = a.shape[0]
+    S = srcs.shape[0]
     ok = alive[jnp.clip(srcs, 0, V - 1)] & (srcs >= 0) & (srcs < V)
-    front0 = jax.nn.one_hot(srcs, V, dtype=jnp.float32) * ok[:, None]
-    level0 = jnp.where(front0 > 0, 0, -1).astype(jnp.int32)
-    sigma0 = front0
+    cold_front = jax.nn.one_hot(srcs, V, dtype=jnp.float32) * ok[:, None]
+    level0 = jnp.where(cold_front > 0, 0, -1).astype(jnp.int32)
+    sigma0 = cold_front
+    lvl0 = jnp.zeros((S,), jnp.int32)
+    if prior_level is not None:
+        cut = jnp.broadcast_to(jnp.asarray(cut, jnp.int32), (S,))
+        # A now-ok source whose prior tree is EMPTY (it was dead when the
+        # prior was computed and has been resurrected since) looks
+        # untouched to the level cut — its row has no reached levels for
+        # the dirty set to intersect — but must restart cold.
+        rows = jnp.arange(S, dtype=jnp.int32)
+        revived = ok & (prior_level[rows, jnp.clip(srcs, 0, V - 1)] < 0)
+        cut = jnp.where(revived, 0, cut)
+        warm = (cut >= 1)[:, None]
+        keep = warm & (prior_level >= 0) & (prior_level < cut[:, None])
+        level0 = jnp.where(warm, jnp.where(keep, prior_level, -1), level0)
+        sigma0 = jnp.where(warm, jnp.where(keep, prior_sigma, 0.0), sigma0)
+        lvl0 = jnp.maximum(cut - 1, 0)
+    front0 = (level0 == lvl0[:, None]).astype(jnp.float32)
 
     # Forward phase: levels + shortest-path counts.
     def fcond(c):
         _, _, front, lvl = c
-        return (front > 0).any() & (lvl < V)
+        return (front > 0).any() & (lvl < V).any()
 
     def fbody(c):
         level, sigma, front, lvl = c
@@ -367,11 +488,11 @@ def _bc_sweep(a: jax.Array, at: jax.Array, srcs: jax.Array, alive: jax.Array,
                                  tile=tile)
         newly = (adds > 0) & (level < 0)
         sigma = jnp.where(newly, adds, sigma)
-        level = jnp.where(newly, lvl + 1, level)
+        level = jnp.where(newly, lvl[:, None] + 1, level)
         return level, sigma, newly.astype(jnp.float32), lvl + 1
 
-    level, sigma, _, maxl = lax.while_loop(
-        fcond, fbody, (level0, sigma0, front0, jnp.int32(0)))
+    level, sigma, _, _ = lax.while_loop(
+        fcond, fbody, (level0, sigma0, front0, lvl0))
 
     # Backward phase, deepest level first.  g carries the per-vertex
     # dependency flow of the level below; pulling it across edges is a
@@ -390,10 +511,11 @@ def _bc_sweep(a: jax.Array, at: jax.Array, srcs: jax.Array, alive: jax.Array,
         delta = delta + jnp.where(level == l, sigma * pulled, 0.0)
         return delta, l - 1
 
-    # maxl is deepest-level + 1 (the forward loop's last pass consumes an
-    # empty frontier), so the deepest *edge* layer is maxl-2 -> maxl-1.
+    # The deepest *edge* layer is (max level - 1) -> (max level); with
+    # per-source resume passes the loop counter no longer bounds the depth,
+    # so take it off the levels themselves.
     delta, _ = lax.while_loop(
-        bcond, bbody, (jnp.zeros_like(sigma), maxl - 2))
+        bcond, bbody, (jnp.zeros_like(sigma), jnp.max(level) - 1))
     delta = jnp.where(level == 0, 0.0, delta)  # sources contribute nothing
     return delta, sigma, level, ok
 
@@ -402,7 +524,10 @@ def _bc_sweep(a: jax.Array, at: jax.Array, srcs: jax.Array, alive: jax.Array,
 def bc_batched_dense(adj_mask: jax.Array, srcs: jax.Array, alive: jax.Array,
                      use_kernel: bool = False,
                      amask: jax.Array | None = None, tile: int = 128,
-                     src_chunk: int | None = None):
+                     src_chunk: int | None = None,
+                     prior_level: jax.Array | None = None,
+                     prior_sigma: jax.Array | None = None,
+                     cut: jax.Array | None = None):
     """Multi-source Brandes as level-synchronous semiring matmuls.
 
     Forward sweep: bool_mm expands the per-source frontier (levels) while
@@ -427,17 +552,35 @@ def bc_batched_dense(adj_mask: jax.Array, srcs: jax.Array, alive: jax.Array,
     independent of the chunking (levels/sigma bit-exact; the matmul k
     reduction is unchanged, so delta only sees the padding's exact +0.0
     terms).
+
+    ``prior_level``/``prior_sigma`` (``[S, V]``, a prior call's forward
+    tree on the same sources) + ``cut`` (``int32[S]`` or scalar, from
+    ``bc_level_cut``) select the level-cut delta path: each source reuses
+    its cached levels/sigma strictly below its cut and re-runs the forward
+    only from there (the backward sweep always runs in full — dependency
+    flow crosses the cut upward).  Results are bit-identical to the cold
+    call on every source (see ``_bc_sweep``).
     """
     a = (adj_mask & alive[:, None] & alive[None, :]).astype(jnp.float32)
     at = a.T
     amask_t = None if amask is None else amask.T
     S = srcs.shape[0]
+    warm = prior_level is not None
+    if warm:
+        if prior_sigma is None or cut is None:
+            raise ValueError("warm start needs prior_level, prior_sigma "
+                             "and cut together")
+        cut = jnp.broadcast_to(jnp.asarray(cut, jnp.int32), (S,))
     if src_chunk is None or src_chunk >= S:
-        return _bc_sweep(a, at, srcs, alive, use_kernel, amask, amask_t, tile)
+        return _bc_sweep(a, at, srcs, alive, use_kernel, amask, amask_t,
+                         tile, prior_level, prior_sigma, cut)
     if src_chunk < 1:
         raise ValueError(f"src_chunk must be >= 1, got {src_chunk}")
     parts = [_bc_sweep(a, at, srcs[lo:lo + src_chunk], alive, use_kernel,
-                       amask, amask_t, tile)
+                       amask, amask_t, tile,
+                       prior_level[lo:lo + src_chunk] if warm else None,
+                       prior_sigma[lo:lo + src_chunk] if warm else None,
+                       cut[lo:lo + src_chunk] if warm else None)
              for lo in range(0, S, src_chunk)]
     return tuple(jnp.concatenate([p[i] for p in parts], axis=0)
                  for i in range(4))

@@ -15,6 +15,7 @@ Layers (each usable on its own):
 from .version_ring import PinnedSnapshot, RingEntry, VersionRing  # noqa: F401
 from .incremental import (  # noqa: F401
     IncrementalStats,
+    delta_bc,
     delta_bfs,
     delta_sssp,
     incremental_bc,

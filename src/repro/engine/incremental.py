@@ -52,11 +52,15 @@ from repro.core.queries import (
     BCResult,
     BFSResult,
     SSSPResult,
+    _bc_coo_sweep,
     _edge_views,
     bc_dependencies,
+    bc_level_cut,
     bfs,
+    bfs_tree_parents,
     relax_fixpoint,
     sssp,
+    sssp_tree_parents,
 )
 
 
@@ -159,14 +163,9 @@ def delta_bfs(state: GraphState, prior: BFSResult, dirty: jax.Array,
 
     reached = distf < INF
     dist = jnp.where(reached, distf, -1.0).astype(jnp.int32)
-    # Parent reconstruction matches queries.bfs exactly: the frontier at
-    # level l is precisely {u : dist[u] == l}, so the per-level min-source
-    # candidate equals the min over tree edges dist[u] + 1 == dist[v].
-    tree = live & (distf[srcc] + 1.0 == distf[dstc]) & (distf[srcc] < INF)
-    parent = jnp.full((vcap,), NOKEY, jnp.int32).at[dstc].min(
-        jnp.where(tree, srcc, NOKEY), mode="drop")
-    parent = jnp.where(reached, parent, NOKEY)
-    parent = parent.at[jnp.clip(src, 0, vcap - 1)].set(NOKEY)
+    # Parent reconstruction matches queries.bfs exactly (see
+    # bfs_tree_parents — shared with the sharded delta path).
+    parent = bfs_tree_parents(state, dist[None], src[None])[0]
     return BFSResult(ok, reached, dist, parent)
 
 
@@ -198,11 +197,56 @@ def delta_sssp(state: GraphState, prior: SSSPResult, dirty: jax.Array,
     # cycle, so exiting the loop still-changed == negative cycle.
     negcycle = changed
 
-    tight = live & (dist[dstc] == dist[srcc] + ew) & (dist[srcc] < INF)
-    parent = jnp.full((vcap,), NOKEY, jnp.int32).at[dstc].min(
-        jnp.where(tight, srcc, NOKEY), mode="drop")
-    parent = parent.at[jnp.clip(src, 0, vcap - 1)].set(NOKEY)
+    parent = sssp_tree_parents(state, dist[None], src[None])[0]
     return SSSPResult(ok_src & ~negcycle, negcycle, dist, parent)
+
+
+# ---------------------------------- BC -----------------------------------
+
+def delta_bc(state: GraphState, prior: BCResult, dirty: jax.Array,
+             src) -> BCResult:
+    """Level-cut delta Brandes: recompute BC dependencies reusing ``prior``.
+
+    BC needs a different poison than BFS/SSSP: ``sigma`` counts *all*
+    shortest paths, so even an edge insertion that moves no distance (a new
+    tight edge into an existing level) changes downstream counts — per-edge
+    chain probing cannot clear it.  But level sets are built level-by-level
+    from the out-edge lists of the previous level's (clean) vertices, so
+    everything strictly above the shallowest dirty level is untouched
+    (``bc_level_cut``): reuse the cached forward levels/sigma there, resume
+    the forward sweep from the cut's frontier, and re-run the backward
+    sweep in full (dependency flow crosses the cut upward, so it cannot be
+    truncated).  Bit-identical to ``bc_dependencies(state, src)`` — the
+    warm forward state at the resume pass equals the cold run's.
+
+    Callers gate on ``cut >= 1`` (a cut of 0 means the source itself is
+    suspect; ``incremental_bc`` falls back to the full query there — the
+    same gate, via ``prior.ok``, excludes priors whose source was dead).
+    """
+    cut = bc_level_cut(prior.level, dirty, state.alive)
+    return _delta_bc_at_cut(state, prior, cut, src)
+
+
+@jax.jit
+def _delta_bc_at_cut(state: GraphState, prior: BCResult, cut,
+                     src) -> BCResult:
+    """``delta_bc`` with the cut already computed (``incremental_bc``
+    evaluates it once for its host-side gate and passes the device scalar
+    through rather than re-deriving it under jit)."""
+    src = jnp.asarray(src, jnp.int32)
+    vcap = state.vcap
+    live, srcc, dstc = _edge_views(state)
+    ok = state.alive[jnp.clip(src, 0, vcap - 1)] & (src >= 0) & (src < vcap)
+
+    cut = jnp.asarray(cut, jnp.int32)
+    keep = (prior.level >= 0) & (prior.level < cut)
+    level0 = jnp.where(keep, prior.level, -1)
+    sigma0 = jnp.where(keep, prior.sigma, 0.0)
+    front0 = level0 == cut - 1
+
+    level, sigma, delta = _bc_coo_sweep(
+        live, srcc, dstc, vcap, level0, sigma0, front0, cut - 1)
+    return BCResult(ok, delta, sigma, level)
 
 
 # ----------------------------- host wrappers ------------------------------
@@ -266,25 +310,33 @@ def incremental_sssp(state: GraphState, prior: Optional[SSSPResult],
 def incremental_bc(state: GraphState, prior: Optional[BCResult],
                    dirty: Optional[jax.Array], src, *,
                    dirty_threshold: float = 0.25):
-    """BC dependencies with the engine's snapshot/cache semantics.
+    """BC dependencies with the engine's unchanged → delta → full ladder.
 
     Same *unchanged* shortcut as BFS/SSSP — churn that never touches the
     prior forward-traversal region (``level >= 0``) cannot move any
-    shortest path from ``src``, so the cached dependencies stand.  There is
-    no delta path yet (dependency deltas are non-local along the backward
-    sweep; see ROADMAP open items), so a touched region means a full
-    recompute.  ``dirty_threshold`` is accepted for signature parity.
+    shortest path from ``src``, so the cached dependencies stand.  A
+    touched region runs the level-cut delta (``delta_bc``) when the
+    shallowest suspect level is below the source (``cut >= 1``) and the
+    dirty fraction is within ``dirty_threshold``; otherwise full recompute.
     """
-    del dirty_threshold  # no delta path to gate yet
     usable = (prior is not None and bool(prior.ok)
               and prior.level.shape[0] == state.vcap)
     if dirty is None or not usable:
         return bc_dependencies(state, src), IncrementalStats("full")
     n_dirty, touched = (int(x) for x in _dirty_stats(prior.level >= 0, dirty))
     frac = n_dirty / state.vcap
+    stats = IncrementalStats("delta", n_dirty, frac)
     if not touched:
-        return prior, IncrementalStats("unchanged", n_dirty, frac)
-    return bc_dependencies(state, src), IncrementalStats("full", n_dirty, frac)
+        stats.mode = "unchanged"
+        return prior, stats
+    if frac > dirty_threshold:
+        stats.mode = "full"
+        return bc_dependencies(state, src), stats
+    cut = bc_level_cut(prior.level, dirty, state.alive)
+    if int(cut) < 1:
+        stats.mode = "full"
+        return bc_dependencies(state, src), stats
+    return _delta_bc_at_cut(state, prior, cut, src), stats
 
 
 # ------------------------------ validation --------------------------------

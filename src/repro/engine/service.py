@@ -25,6 +25,13 @@ Consistency modes (paper section 5, at batch granularity):
     collect reads one committed version, a repeat on an unchanged version
     matches trivially; under churn the loop pays exactly the paper's
     retry cost.
+
+:class:`BaseGraphService` carries everything that is not collect-specific
+— the ring + scheduler, the per-key result cache with LRU pruning, the
+mode counters, and the icn/cn query drivers — so the local service here
+and the distributed one (``repro.shard.service.ShardedGraphService``)
+share one copy of the unchanged → delta → full ladder plumbing and only
+implement how a single collect is answered.
 """
 from __future__ import annotations
 
@@ -39,6 +46,7 @@ from repro.core.snapshot import ScanStats
 from repro.core.tiles import TileView, refresh_tile_view
 
 from .incremental import (
+    _dirty_stats,
     incremental_bc,
     incremental_bfs,
     incremental_sssp,
@@ -77,7 +85,7 @@ class ServiceStats:
 @dataclass
 class _CacheSlot:
     version: int
-    result: object  # BFSResult | SSSPResult
+    result: object  # BFSResult | SSSPResult | BCResult | Sharded*Result
 
 
 def prune_result_cache(cache: Dict, max_cached: int, floor: int) -> None:
@@ -109,13 +117,23 @@ class QueryReply:
     scan: ScanStats = field(default_factory=ScanStats)
 
 
-class GraphService:
-    """submit()/query() front end: streaming updates, incremental queries."""
+class BaseGraphService:
+    """Shared submit()/query() plumbing of the local and sharded services.
 
-    def __init__(self, initial_state: GraphState, *, ring_depth: int = 8,
-                 batch_size: int = 32, dirty_threshold: float = 0.25,
-                 strict_order: bool = False, coalesce: bool = False,
-                 max_collects: int = 16, max_cached: int = 512):
+    Subclasses implement ``_collect(kind, srcs, key) -> (entry, result,
+    mode)`` — one collect against the latest ring version, running their
+    own unchanged → delta → full ladder — plus the small hooks below; the
+    base drives the scheduler/ring, the LRU result cache, the mode
+    counters, and the PG-Icn / PG-Cn collect loops identically for both.
+    """
+
+    #: query kinds this service answers (subclass attribute).
+    _kinds: Tuple[str, ...] = ()
+
+    def _init_service(self, initial_state: GraphState, *, ring_depth: int,
+                      batch_size: int, dirty_threshold: float,
+                      strict_order: bool, coalesce: bool, max_collects: int,
+                      max_cached: int) -> None:
         self.ring = VersionRing(initial_state, depth=ring_depth)
         self.scheduler = StreamScheduler(
             self.ring, batch_size=batch_size, strict_order=strict_order,
@@ -124,10 +142,7 @@ class GraphService:
         self.max_collects = max_collects
         self.max_cached = max_cached
         self.stats = ServiceStats()
-        self._cache: Dict[Tuple[str, int], _CacheSlot] = {}
-        self._tiles: Optional[TileView] = None
-        self._tiles_version: int = -1
-        self._bc_scores = None  # ((version, use_kernel), scores)
+        self._cache: Dict[Tuple, _CacheSlot] = {}
 
     # ------------------------------ updates ------------------------------
 
@@ -149,25 +164,14 @@ class GraphService:
     def pin(self, version: Optional[int] = None) -> PinnedSnapshot:
         return self.ring.pin(version)
 
-    # ------------------------------ queries ------------------------------
+    # ------------------------------- cache -------------------------------
 
-    def _collect(self, kind: str, src: int):
-        """One incremental collect against the current latest ring version."""
-        entry = self.ring.latest
-        slot = self._cache.get((kind, src))
-        prior, dirty = None, None
-        if slot is not None:
-            prior = slot.result
-            dirty = self.ring.dirty_between(slot.version, entry.version)
-        res, inc = _INCREMENTAL[kind](
-            entry.state, prior, dirty, src,
-            dirty_threshold=self.dirty_threshold)
+    def _cache_store(self, key, version: int, result) -> None:
         # Delete-then-insert moves the key to the back of the dict so
         # _prune_cache's front-of-dict eviction is LRU, not FIFO.
-        self._cache.pop((kind, src), None)
-        self._cache[(kind, src)] = _CacheSlot(entry.version, res)
+        self._cache.pop(key, None)
+        self._cache[key] = _CacheSlot(version, result)
         self._prune_cache()
-        return entry, res, inc
 
     def _prune_cache(self) -> None:
         # dirty_between still has a span for slots at oldest_version - 1
@@ -176,28 +180,50 @@ class GraphService:
         prune_result_cache(self._cache, self.max_cached,
                            self.ring.oldest_version - 1)
 
-    def query(self, kind: str, src: int, mode: str = "icn") -> QueryReply:
+    # ------------------------------- hooks -------------------------------
+
+    def _key(self, kind: str, srcs) -> Tuple:
+        raise NotImplementedError
+
+    def _check_srcs(self, kind: str, srcs) -> None:
+        """Reject source specs this service cannot answer (ValueError)."""
+
+    def _collect(self, kind: str, srcs, key):
+        """One collect at the latest ring version -> (entry, result, mode)."""
+        raise NotImplementedError
+
+    def _icn_validated(self, result) -> bool:
+        """The ``validated`` flag of a single-collect reply (the sharded
+        service carries the psum cross-shard agreement here)."""
+        return False
+
+    # ------------------------------ queries ------------------------------
+
+    def query(self, kind: str, srcs=None, mode: str = "icn") -> QueryReply:
         """Answer one analytics query.
 
-        ``kind``: ``"bfs"`` | ``"sssp"`` (unchanged/delta/full) or ``"bc"``
-        (unchanged/full — BC has no delta path yet, but caches per
-        ``(kind, src)`` with the same snapshot semantics).
-        ``mode``: ``"icn"`` or ``"cn"``.
+        ``kind``: one of ``self._kinds``; ``srcs`` as the subclass defines
+        (a vertex id for the local service; an id or sequence — ``None`` =
+        all slots, BC only — for the sharded one).
+        ``mode``: ``"icn"`` (single collect) or ``"cn"`` (double collect).
         """
-        if kind not in _FULL:
+        if kind not in self._kinds:
             raise KeyError(f"unknown query kind {kind!r}")
         if mode not in ("icn", "cn"):
             raise ValueError(f"unknown mode {mode!r}")
+        self._check_srcs(kind, srcs)
         self.stats.queries += 1
+        key = self._key(kind, srcs)
         if mode == "icn":
-            entry, res, inc = self._collect(kind, src)
+            entry, res, qmode = self._collect(kind, srcs, key)
             self.stats.collects += 1
-            self.stats.count(inc.mode)
-            return QueryReply(res, entry.version, inc.mode, False,
+            self.stats.count(qmode)
+            return QueryReply(res, entry.version, qmode,
+                              self._icn_validated(res),
                               ScanStats(collects=1, validated=False))
-        return self._query_cn(kind, src)
+        return self._query_cn(kind, srcs, key)
 
-    def _query_cn(self, kind: str, src: int) -> QueryReply:
+    def _query_cn(self, kind: str, srcs, key) -> QueryReply:
         """PG-Cn: double-collect over ring versions until answers match.
 
         Between collects, one pending update batch commits (the stream's
@@ -208,27 +234,71 @@ class GraphService:
         """
         scan = ScanStats()
         v0 = self.ring.latest.version
-        entry, prev_res, inc0 = self._collect(kind, src)
+        entry, prev_res, qmode = self._collect(kind, srcs, key)
         scan.collects = 1
-        mode = inc0.mode
         while scan.collects < self.max_collects:
-            self.scheduler.commit_one()  # interrupting update, if any pending
-            cur_entry, cur_res, inc = self._collect(kind, src)
+            self.scheduler.commit_one()  # interrupting update, if pending
+            cur_entry, cur_res, cur_mode = self._collect(kind, srcs, key)
             scan.collects += 1
             if cur_entry.version == entry.version or results_equal(
                     prev_res, cur_res):
                 self.stats.collects += scan.collects
-                self.stats.count(inc.mode)
+                self.stats.count(cur_mode)
                 scan.interrupting_updates = cur_entry.version - v0
-                return QueryReply(cur_res, cur_entry.version, inc.mode,
+                scan.validated = True
+                return QueryReply(cur_res, cur_entry.version, cur_mode,
                                   True, scan)
             self.stats.cn_retries += 1
-            entry, prev_res, mode = cur_entry, cur_res, inc.mode
+            entry, prev_res, qmode = cur_entry, cur_res, cur_mode
         scan.validated = False
         scan.interrupting_updates = self.ring.latest.version - v0
         self.stats.collects += scan.collects
-        self.stats.count(mode)
-        return QueryReply(prev_res, entry.version, mode, False, scan)
+        self.stats.count(qmode)
+        return QueryReply(prev_res, entry.version, qmode, False, scan)
+
+
+class GraphService(BaseGraphService):
+    """submit()/query() front end: streaming updates, incremental queries."""
+
+    _kinds = ("bfs", "sssp", "bc")
+
+    def __init__(self, initial_state: GraphState, *, ring_depth: int = 8,
+                 batch_size: int = 32, dirty_threshold: float = 0.25,
+                 strict_order: bool = False, coalesce: bool = False,
+                 max_collects: int = 16, max_cached: int = 512):
+        self._init_service(
+            initial_state, ring_depth=ring_depth, batch_size=batch_size,
+            dirty_threshold=dirty_threshold, strict_order=strict_order,
+            coalesce=coalesce, max_collects=max_collects,
+            max_cached=max_cached)
+        self._tiles: Optional[TileView] = None
+        self._tiles_version: int = -1
+        self._bc_scores: Optional[dict] = None
+        self.bc_scores_stats = {"unchanged": 0, "delta": 0, "full": 0}
+
+    # ------------------------------ queries ------------------------------
+
+    def _key(self, kind: str, src) -> Tuple[str, int]:
+        return kind, src
+
+    def _check_srcs(self, kind: str, src) -> None:
+        if src is None:
+            raise ValueError(f"{kind!r} needs an explicit source vertex")
+
+    def _collect(self, kind: str, src, key):
+        """One incremental collect against the current latest ring version:
+        the unchanged → delta → full ladder lives in ``engine.incremental``."""
+        entry = self.ring.latest
+        slot = self._cache.get(key)
+        prior, dirty = None, None
+        if slot is not None:
+            prior = slot.result
+            dirty = self.ring.dirty_between(slot.version, entry.version)
+        res, inc = _INCREMENTAL[kind](
+            entry.state, prior, dirty, src,
+            dirty_threshold=self.dirty_threshold)
+        self._cache_store(key, entry.version, res)
+        return entry, res, inc.mode
 
     # --------------------------- batched analytics ------------------------
 
@@ -254,20 +324,59 @@ class GraphService:
         once as semiring matmuls; empty tiles skipped).  ``src_chunk``
         bounds the S x V scratch (chunked source axis — the vcap ~16k
         ceiling lifter, see ``bc_batched_dense``).  Returns
-        ``(scores f32[vcap], version)``; cached per ring version."""
+        ``(scores f32[vcap], version)``.
+
+        Incremental across versions: the previous call's forward trees
+        (level/sigma per source, cached alongside the scores) warm-start
+        ``bc_batched_dense`` through the per-source level cut, so a
+        localized commit re-runs only the forward work below each source's
+        cut — bit-identical to the cold sweep.  Mode tallies land in
+        ``bc_scores_stats``.
+        """
         entry = self.ring.latest
-        key = (entry.version, use_kernel, src_chunk)
-        if self._bc_scores is not None and self._bc_scores[0] == key:
-            return self._bc_scores[1], entry.version
+        params = (use_kernel, src_chunk)
+        slot = self._bc_scores
+        if (slot is not None and slot["version"] == entry.version
+                and slot["params"] == params):
+            return slot["scores"], entry.version
         state = entry.state
+        mode, dirty = "full", None
+        if (slot is not None and slot["params"] == params
+                and slot["level"].shape == (state.vcap, state.vcap)):
+            dirty = self.ring.dirty_between(slot["version"], entry.version)
+            if dirty is not None:
+                n_dirty, touched = (int(x) for x in _dirty_stats(
+                    (slot["level"] >= 0).any(axis=0), dirty))
+                if not touched and bool((~slot["ok"] & state.alive).any()):
+                    # A resurrected source's cached tree is empty: no dirty
+                    # vertex can intersect it, but its row must recompute
+                    # (the warm start restarts revived sources cold).
+                    touched = True
+                if not touched:
+                    mode = "unchanged"
+                elif n_dirty / state.vcap <= self.dirty_threshold:
+                    mode = "delta"
+        self.bc_scores_stats[mode] += 1
+        if mode == "unchanged":
+            # Churn never touched any source's forward region: every tree —
+            # hence every score — stands as-is at the new version.
+            slot["version"] = entry.version
+            return slot["scores"], entry.version
         view = self.tile_view()
         from repro.core.tiles import dense_views_from_tiles
         adj_mask, _, alive = dense_views_from_tiles(state, view)
         srcs = jnp.arange(state.vcap, dtype=jnp.int32)
-        delta, _, _, ok = queries.bc_batched_dense(
+        warm = {}
+        if mode == "delta":
+            warm = dict(prior_level=slot["level"], prior_sigma=slot["sigma"],
+                        cut=queries.bc_level_cut(slot["level"], dirty,
+                                                 state.alive))
+        delta, sigma, level, ok = queries.bc_batched_dense(
             adj_mask, srcs, alive, use_kernel=use_kernel, amask=view.occ,
-            src_chunk=src_chunk)
+            src_chunk=src_chunk, **warm)
         scores = jnp.sum(jnp.where(ok[:, None], delta, 0.0), axis=0)
         scores = jnp.where(alive, scores, jnp.nan)
-        self._bc_scores = (key, scores)
+        self._bc_scores = {"version": entry.version, "params": params,
+                           "scores": scores, "level": level, "sigma": sigma,
+                           "ok": ok}
         return scores, entry.version

@@ -8,11 +8,13 @@ tile-skipping semiring work, one vcap-sized collective per level.
 """
 from .tile_shard import (  # noqa: F401
     GRAPH_AXIS,
+    REFRESH_BATCH,
     ShardedTileView,
     as_graph_mesh,
     build_sharded_view,
     gather_view,
     refresh_sharded_view,
+    refresh_stats,
     sharded_occupancy_stats,
 )
 from .queries import (  # noqa: F401
@@ -21,8 +23,12 @@ from .queries import (  # noqa: F401
     ShardedSSSPResult,
     bc_batched,
     bfs,
+    delta_bc_sharded,
+    delta_bfs_sharded,
+    delta_sssp_sharded,
     query_fn,
     query_shardings,
     sssp,
+    validate_incremental_sharded,
 )
 from .service import ShardedGraphService  # noqa: F401

@@ -33,10 +33,36 @@ path on the same snapshot: BFS levels are exact integers; the SSSP min-plus
 merge is order-free; BC runs the identical per-chunk sweep on the gathered
 operands (levels/sigma exact, delta exact per source — only the final
 score sum reassociates across shards).
+
+**Delta queries** (``delta_bfs_sharded`` / ``delta_sssp_sharded`` /
+``delta_bc_sharded``) port the engine's churn-proportional path to the
+mesh.  The split follows what replicates vs what shards: the *stale-region
+analysis* runs unsharded on replicated vertex-sized arrays (it is
+per-vertex work with no collective), while the *recompute* warm-starts the
+usual sharded level loop — local band products, ONE vcap-sized collective
+per level, exactly as the full queries.  Per kind:
+
+  * SSSP  — the engine's poison (``engine.incremental._poison``, the very
+            function the local delta runs: pointer doubling over the prior
+            parent tree + one weight-checked edge re-probe) certifies the
+            keep set, whose distances seed the min-plus re-relax loop;
+  * BFS   — the level cut (``bc_level_cut``): the poison's finer keep set
+            is only consumable by a min-plus re-relax (distances can
+            shrink through inserted shortcuts), which would forfeit the
+            boolean sgemm/MXU loop — so delta BFS reuses levels above the
+            shallowest dirty level and RESUMES ``_bfs_body``'s bool/pmax
+            loop from the cut frontier, with per-source resume counters;
+  * BC    — the same per-source level cut over the cached forward trees,
+            threaded through ``bc_batched_dense(prior_level=, ...)``,
+            sharded along the source axis like the full BC.
+
+Every delta result is bit-identical to the full sharded recompute AND to
+the local engine's delta path (distances are unique; parents come from
+the shared tree reconstruction; warm sweeps replay the cold op sequence).
 """
 from __future__ import annotations
 
-from functools import lru_cache
+from functools import lru_cache, partial
 from typing import NamedTuple
 
 import jax
@@ -47,7 +73,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import semiring
 from repro.core.graph_state import INF, GraphState
-from repro.core.queries import bc_batched_dense
+from repro.core.queries import (
+    bc_batched_dense,
+    bc_level_cut,
+    bfs_tree_parents,
+    sssp_tree_parents,
+)
 
 from .tile_shard import ShardedTileView, _axis
 
@@ -55,6 +86,7 @@ from .tile_shard import ShardedTileView, _axis
 class ShardedBFSResult(NamedTuple):
     ok: jax.Array        # bool[S]      source was alive
     dist: jax.Array      # int32[S, V]  (-1 = unreached)
+    parent: jax.Array    # int32[S, V]  (NOKEY = none; == queries.bfs parents)
     val_ecnt: jax.Array  # int32[V]     validation vector (reached ecnt)
     agree: jax.Array     # bool[]       all shards saw the same version
 
@@ -63,6 +95,7 @@ class ShardedSSSPResult(NamedTuple):
     ok: jax.Array        # bool[S]  source alive and no negative cycle
     negcycle: jax.Array  # bool[S]
     dist: jax.Array      # f32[S, V]  (+inf = unreachable)
+    parent: jax.Array    # int32[S, V]  (NOKEY = none; == queries.sssp parents)
     val_ecnt: jax.Array  # int32[V]
     agree: jax.Array     # bool[]
 
@@ -96,21 +129,71 @@ def _band_views(w_local, alive, ax):
 
 # ------------------------------ BFS / SSSP ---------------------------------
 
+def _cold_srcs(alive, srcs, vp, vcap):
+    """Per-shard source prep shared by the cold bodies: ``ok`` flags and
+    the one-hot source positions (as an int mask)."""
+    alivep = jnp.pad(alive, (0, vp - vcap))
+    ok = alivep[jnp.clip(srcs, 0, vp - 1)] & (srcs >= 0) & (srcs < vcap)
+    at_src = (jnp.arange(vp, dtype=jnp.int32)[None, :] == srcs[:, None])
+    return ok, at_src & ok[:, None]
+
+
 def _bfs_body(w_local, occ_local, alive, ecnt, srcs, version, *,
               ax, tile, use_kernel):
+    """Cold BFS == the warm loop started from the one-hot source frontier
+    at pass 0 (exactly how ``bc_dependencies`` reuses ``_bc_coo_sweep``),
+    so the full and delta paths cannot drift apart."""
     vp = w_local.shape[1]
-    band = w_local.shape[0]
+    vcap = alive.shape[0]
+    _, src_hot = _cold_srcs(alive, srcs, vp, vcap)
+    dist0 = jnp.where(src_hot, 0, -1)
+    lvl0 = jnp.zeros(srcs.shape, jnp.int32)
+    return _bfs_delta_body(w_local, occ_local, alive, ecnt, srcs, version,
+                           dist0, lvl0, ax=ax, tile=tile,
+                           use_kernel=use_kernel)
+
+
+def _sssp_body(w_local, occ_local, alive, ecnt, srcs, version, *,
+               ax, tile, use_kernel):
+    """Cold Bellman-Ford == the warm re-relax from the one-hot sources."""
+    vp = w_local.shape[1]
+    vcap = alive.shape[0]
+    _, src_hot = _cold_srcs(alive, srcs, vp, vcap)
+    dist0 = jnp.where(src_hot, 0.0, INF)
+    ok, changed, dist, val_ecnt, agree = _sssp_delta_body(
+        w_local, occ_local, alive, ecnt, srcs, version, dist0,
+        ax=ax, tile=tile, use_kernel=use_kernel)
+    return ok & ~changed, changed, dist, val_ecnt, agree
+
+
+# ----------------------------- delta re-relax -------------------------------
+
+def _bfs_delta_body(w_local, occ_local, alive, ecnt, srcs, version, dist0,
+                    lvl0, *, ax, tile, use_kernel):
+    """Warm-started BFS: the EXISTING bool/pmax level loop resumed mid-way.
+
+    ``dist0`` (replicated int32[S, Vp]) carries each source's prior levels
+    strictly above its level cut (-1 elsewhere) and ``lvl0[S]`` the resume
+    pass (``cut - 1``; 0 for cold rows, ``vcap`` for untouched rows, which
+    therefore run zero passes).  Per-source counters keep rows independent,
+    so mixed cuts share one loop; each warm row's state at its resume pass
+    equals the cold run's, hence distances are bit-identical to the full
+    query.  Same band bool products and ONE int8 pmax per level as
+    ``_bfs_body`` — staying on the boolean formulation (sgemm/MXU) is the
+    whole point of cutting by level instead of re-relaxing min-plus.
+    """
+    vp = w_local.shape[1]
     vcap = alive.shape[0]
     alivep, lo, edge = _band_views(w_local, alive, ax)
     a_local = edge.astype(jnp.float32)
+    band = w_local.shape[0]
 
     ok = alivep[jnp.clip(srcs, 0, vp - 1)] & (srcs >= 0) & (srcs < vcap)
-    front0 = jax.nn.one_hot(srcs, vp, dtype=jnp.float32) * ok[:, None]
-    dist0 = jnp.where(front0 > 0, 0, -1).astype(jnp.int32)
+    front0 = (dist0 == lvl0[:, None]).astype(jnp.float32)
 
     def cond(c):
         _, front, lvl = c
-        return (front > 0).any() & (lvl < vcap)
+        return (front > 0).any() & (lvl < vcap).any()
 
     def body(c):
         dist, front, lvl = c
@@ -119,28 +202,33 @@ def _bfs_body(w_local, occ_local, alive, ecnt, srcs, version, *,
                                 amask=occ_local, tile=tile)
         hit = lax.pmax(part.astype(jnp.int8), ax) > 0  # one int8 pmax / level
         newly = hit & (dist < 0)
-        dist = jnp.where(newly, lvl + 1, dist)
+        dist = jnp.where(newly, lvl[:, None] + 1, dist)
         return dist, newly.astype(jnp.float32), lvl + 1
 
-    dist, _, _ = lax.while_loop(cond, body, (dist0, front0, jnp.int32(0)))
+    dist, _, _ = lax.while_loop(cond, body, (dist0, front0, lvl0))
     reached_any = (dist[:, :vcap] >= 0).any(axis=0)
     val_ecnt = jnp.where(reached_any, ecnt, 0)
     return ok, dist, val_ecnt, _version_agree(version, ax)
 
 
-def _sssp_body(w_local, occ_local, alive, ecnt, srcs, version, *,
-               ax, tile, use_kernel):
-    vp = w_local.shape[1]
-    band = w_local.shape[0]
+def _sssp_delta_body(w_local, occ_local, alive, ecnt, srcs, version, dist0,
+                     *, ax, tile, use_kernel):
+    """Warm-started min-plus fixed point: delta SSSP's re-relax.
+
+    ``dist0`` (replicated f32[S, Vp]) carries the poison step's keep-set
+    distances — genuine path lengths in the new graph, hence admissible
+    upper bounds — so the standard label-correcting loop converges in
+    ~(affected-region diameter) passes instead of ~(graph diameter).  Same
+    band products and ONE f32 min-merge per level as the full
+    ``_sssp_body`` loop.
+    """
+    band, vp = w_local.shape
     vcap = alive.shape[0]
     S = srcs.shape[0]
     alivep, lo, edge = _band_views(w_local, alive, ax)
     big_local = jnp.where(edge, w_local, INF)
 
     ok = alivep[jnp.clip(srcs, 0, vp - 1)] & (srcs >= 0) & (srcs < vcap)
-    dist0 = jnp.where(
-        jax.nn.one_hot(srcs, vp, dtype=jnp.float32) * ok[:, None] > 0,
-        0.0, INF)
 
     def cond(c):
         _, changed, it = c
@@ -155,79 +243,130 @@ def _sssp_body(w_local, occ_local, alive, ecnt, srcs, version, *,
         nd = jnp.minimum(dist, cand)
         return nd, (nd < dist).any(axis=1), it + 1
 
-    # Same free CHECKNEGCYCLE as sssp_batched_dense: still-changed at loop
-    # exit == the vcap-th pass improved something == negative cycle.
+    # Exit-changed == negative cycle, exactly as in _sssp_body.
     dist, changed, _ = lax.while_loop(
         cond, body, (dist0, jnp.ones((S,), jnp.bool_), jnp.int32(0)))
     reached_any = (dist[:, :vcap] < INF).any(axis=0)
     val_ecnt = jnp.where(reached_any, ecnt, 0)
-    return ok & ~changed, changed, dist, val_ecnt, _version_agree(version, ax)
+    return ok, changed, dist, val_ecnt, _version_agree(version, ax)
 
 
 # ---------------------------------- BC -------------------------------------
 
-def _bc_body(w_local, occ_local, alive, ecnt, srcs_local, version, *,
-             ax, tile, use_kernel, src_chunk):
+def _bc_operands(w_local, occ_local, alive, ax):
+    """All-gather the row bands once per query: O(Vp^2/n x 4B) per shard,
+    vs O(levels x S x Vp) had the adjacency stayed sharded through both
+    sweeps — and it keeps the per-chunk sweep bit-identical to the
+    single-device path."""
     vp = w_local.shape[1]
-    vcap = alive.shape[0]
-    alivep = jnp.pad(alive, (0, vp - vcap))
-    # One gather of the row bands per query: O(Vp^2/n x 4B) per shard, vs
-    # O(levels x S x Vp) had the adjacency stayed sharded through both
-    # sweeps — and it keeps the per-chunk sweep bit-identical to the
-    # single-device path.
+    alivep = jnp.pad(alive, (0, vp - alive.shape[0]))
     w_full = lax.all_gather(w_local, ax, axis=0, tiled=True)
     occ_full = lax.all_gather(occ_local, ax, axis=0, tiled=True)
-    delta, sigma, level, ok = bc_batched_dense(
-        w_full < INF, srcs_local, alivep, use_kernel=use_kernel,
-        amask=occ_full, tile=tile, src_chunk=src_chunk)
+    return alivep, w_full, occ_full
+
+
+def _bc_finish(level, delta, ok, ecnt, vcap, ax):
     part = jnp.sum(jnp.where(ok[:, None], delta, 0.0), axis=0)
     scores = lax.psum(part, ax)[:vcap]
     reached_any = lax.psum((level[:, :vcap] >= 0).any(axis=0)
                            .astype(jnp.int32), ax) > 0
     val_ecnt = jnp.where(reached_any, ecnt, 0)
+    return scores, val_ecnt
+
+
+def _bc_body(w_local, occ_local, alive, ecnt, srcs_local, version, *,
+             ax, tile, use_kernel, src_chunk):
+    vp = w_local.shape[1]
+    vcap = alive.shape[0]
+    alivep, w_full, occ_full = _bc_operands(w_local, occ_local, alive, ax)
+    delta, sigma, level, ok = bc_batched_dense(
+        w_full < INF, srcs_local, alivep, use_kernel=use_kernel,
+        amask=occ_full, tile=tile, src_chunk=src_chunk)
+    scores, val_ecnt = _bc_finish(level, delta, ok, ecnt, vcap, ax)
+    return ok, delta, sigma, level, scores, val_ecnt, _version_agree(version, ax)
+
+
+def _bc_delta_body(w_local, occ_local, alive, ecnt, srcs_local, version,
+                   dirty, prior_level, prior_sigma, *,
+                   ax, tile, use_kernel, src_chunk):
+    """Level-cut delta BC, source axis sharded like the full ``_bc_body``.
+
+    Each shard derives the cuts for ITS sources from the replicated dirty
+    set (``bc_level_cut`` — no collective needed: a source's forward tree
+    is entirely local state) and warm-starts the chunked batched-Brandes
+    sweep from its cached trees; only the score psum and the validation
+    reduction cross shards, exactly as in the full query.
+    """
+    vp = w_local.shape[1]
+    vcap = alive.shape[0]
+    alivep, w_full, occ_full = _bc_operands(w_local, occ_local, alive, ax)
+    dirtyp = jnp.pad(dirty, (0, vp - vcap))
+    cut = bc_level_cut(prior_level, dirtyp, alivep)
+    delta, sigma, level, ok = bc_batched_dense(
+        w_full < INF, srcs_local, alivep, use_kernel=use_kernel,
+        amask=occ_full, tile=tile, src_chunk=src_chunk,
+        prior_level=prior_level, prior_sigma=prior_sigma, cut=cut)
+    scores, val_ecnt = _bc_finish(level, delta, ok, ecnt, vcap, ax)
     return ok, delta, sigma, level, scores, val_ecnt, _version_agree(version, ax)
 
 
 # ------------------------------ entry points -------------------------------
+
+_KINDS = ("bfs", "sssp", "bc", "bfs_delta", "sssp_delta", "bc_delta")
+
 
 @lru_cache(maxsize=None)
 def query_fn(mesh: Mesh, kind: str, tile: int, use_kernel: bool = False,
              src_chunk: int | None = None):
     """The jitted shard_map program for ``kind`` on ``mesh``.
 
-    Signature: ``fn(w, occ, alive, ecnt, srcs, version)`` over GLOBAL
-    arrays — ``w``/``occ`` sharded ``P(axis, None)`` (a ``ShardedTileView``),
-    vertex arrays replicated, ``srcs`` replicated for bfs/sssp and sharded
-    ``P(axis)`` for bc (length must divide the axis size; the host wrappers
-    pad with -1).  Cached per (mesh, kind, tile, use_kernel, src_chunk).
+    Signature: ``fn(w, occ, alive, ecnt, srcs, version, *extras)`` over
+    GLOBAL arrays — ``w``/``occ`` sharded ``P(axis, None)`` (a
+    ``ShardedTileView``), vertex arrays replicated, ``srcs`` replicated for
+    bfs/sssp and sharded ``P(axis)`` for bc (length must divide the axis
+    size; the host wrappers pad with -1).  The delta kinds take extras:
+    ``bfs_delta``/``sssp_delta`` a replicated warm-start ``dist0[S, Vp]``;
+    ``bc_delta`` the replicated dirty mask plus the source-sharded prior
+    ``level``/``sigma``.  Cached per (mesh, kind, tile, use_kernel,
+    src_chunk).
     """
     ax = _axis(mesh)
-    vspec, rspec = P(ax, None), P()
+    vspec, rspec, sspec = P(ax, None), P(), P(ax)
+    kw = dict(ax=ax, tile=tile, use_kernel=use_kernel)
+    extra_specs = ()
     if kind == "bfs":
-        def body(w, occ, alive, ecnt, srcs, version):
-            return _bfs_body(w, occ, alive, ecnt, srcs, version, ax=ax,
-                             tile=tile, use_kernel=use_kernel)
+        body = partial(_bfs_body, **kw)
         src_spec = rspec
         out_specs = (rspec, rspec, rspec, rspec)
     elif kind == "sssp":
-        def body(w, occ, alive, ecnt, srcs, version):
-            return _sssp_body(w, occ, alive, ecnt, srcs, version, ax=ax,
-                              tile=tile, use_kernel=use_kernel)
+        body = partial(_sssp_body, **kw)
         src_spec = rspec
         out_specs = (rspec, rspec, rspec, rspec, rspec)
+    elif kind == "bfs_delta":
+        body = partial(_bfs_delta_body, **kw)
+        src_spec = rspec
+        extra_specs = (rspec, rspec)                 # dist0, lvl0
+        out_specs = (rspec, rspec, rspec, rspec)
+    elif kind == "sssp_delta":
+        body = partial(_sssp_delta_body, **kw)
+        src_spec = rspec
+        extra_specs = (rspec,)                       # dist0
+        out_specs = (rspec, rspec, rspec, rspec, rspec)
     elif kind == "bc":
-        def body(w, occ, alive, ecnt, srcs, version):
-            return _bc_body(w, occ, alive, ecnt, srcs, version, ax=ax,
-                            tile=tile, use_kernel=use_kernel,
-                            src_chunk=src_chunk)
-        src_spec = P(ax)
-        out_specs = (P(ax), vspec, vspec, vspec, rspec, rspec, rspec)
+        body = partial(_bc_body, src_chunk=src_chunk, **kw)
+        src_spec = sspec
+        out_specs = (sspec, vspec, vspec, vspec, rspec, rspec, rspec)
+    elif kind == "bc_delta":
+        body = partial(_bc_delta_body, src_chunk=src_chunk, **kw)
+        src_spec = sspec
+        extra_specs = (rspec, vspec, vspec)          # dirty, level, sigma
+        out_specs = (sspec, vspec, vspec, vspec, rspec, rspec, rspec)
     else:
         raise ValueError(f"unknown query kind {kind!r}; "
-                         "supported kinds: bfs, sssp, bc")
+                         f"supported kinds: {', '.join(_KINDS)}")
     fn = shard_map(
         body, mesh=mesh,
-        in_specs=(vspec, vspec, rspec, rspec, src_spec, rspec),
+        in_specs=(vspec, vspec, rspec, rspec, src_spec, rspec) + extra_specs,
         out_specs=out_specs,
         check_rep=False,
     )
@@ -243,9 +382,15 @@ def query_shardings(mesh: Mesh, kind: str):
     s = NamedSharding(mesh, P(ax))
     if kind == "bc":
         return (v, v, r, r, s, r), (s, v, v, v, r, r, r)
+    if kind == "bc_delta":
+        return (v, v, r, r, s, r, r, v, v), (s, v, v, v, r, r, r)
+    if kind == "bfs_delta":
+        return (v, v, r, r, r, r, r, r), (r,) * 4
+    if kind == "sssp_delta":
+        return (v, v, r, r, r, r, r), (r,) * 5
     if kind not in ("bfs", "sssp"):
         raise ValueError(f"unknown query kind {kind!r}; "
-                         "supported kinds: bfs, sssp, bc")
+                         f"supported kinds: {', '.join(_KINDS)}")
     return (v, v, r, r, r, r), (r,) * (4 if kind == "bfs" else 5)
 
 
@@ -259,24 +404,59 @@ def _srcs_array(srcs, n_shards: int = 1, pad_to_shards: bool = False):
     return srcs
 
 
+def _host_local(view: ShardedTileView, x: jax.Array) -> jax.Array:
+    """Pull a small replicated array onto ONE device of the mesh.
+
+    The unsharded helper math (tree-parent reconstruction, the delta
+    poison/cut prep) consumes the replicated per-source outputs of the
+    shard_map programs; left replicated, those jitted helpers execute once
+    per mesh device — pure waste on host-platform meshes where every
+    placeholder device shares one CPU, and duplicated work off the
+    critical path on a real mesh.  The arrays are S x vcap-sized, so the
+    transfer is noise next to the O(Vp^2/n) bands.
+    """
+    return jax.device_put(x, view.mesh.devices.reshape(-1)[0])
+
+
+def _mesh_replicated(view: ShardedTileView, x: jax.Array) -> jax.Array:
+    """The inverse hop: broadcast a device-local helper output back to a
+    replicated mesh array so it can enter a shard_map program (jit refuses
+    to mix single-device and mesh-committed operands)."""
+    return jax.device_put(x, NamedSharding(view.mesh, P()))
+
+
 def bfs(view: ShardedTileView, state: GraphState, srcs, *,
         use_kernel: bool = False) -> ShardedBFSResult:
-    """Distributed multi-source BFS; ``dist`` is sliced back to ``vcap``."""
+    """Distributed multi-source BFS; ``dist`` is sliced back to ``vcap``.
+
+    ``parent`` is reconstructed from the final distances on the replicated
+    COO edge table (``bfs_tree_parents`` — O(S x ecap) per-vertex work, no
+    collective), identical to per-source ``queries.bfs`` and the array the
+    delta path's poison step walks.
+    """
     srcs = _srcs_array(srcs)
     fn = query_fn(view.mesh, "bfs", view.tile, use_kernel)
     ok, dist, val_ecnt, agree = fn(view.w, view.occ, state.alive, state.ecnt,
                                    srcs, state.version)
-    return ShardedBFSResult(ok, dist[:, :state.vcap], val_ecnt, agree)
+    dist = _host_local(view, dist)[:, :state.vcap]
+    parent = bfs_tree_parents(state, dist, srcs)
+    return ShardedBFSResult(ok, dist, parent, val_ecnt, agree)
 
 
 def sssp(view: ShardedTileView, state: GraphState, srcs, *,
          use_kernel: bool = False) -> ShardedSSSPResult:
-    """Distributed multi-source Bellman-Ford with negative-cycle flags."""
+    """Distributed multi-source Bellman-Ford with negative-cycle flags.
+
+    ``parent`` follows ``queries.sssp`` (tight edges, min-source tie-break)
+    via the shared ``sssp_tree_parents`` reconstruction.
+    """
     srcs = _srcs_array(srcs)
     fn = query_fn(view.mesh, "sssp", view.tile, use_kernel)
     ok, neg, dist, val_ecnt, agree = fn(view.w, view.occ, state.alive,
                                         state.ecnt, srcs, state.version)
-    return ShardedSSSPResult(ok, neg, dist[:, :state.vcap], val_ecnt, agree)
+    dist = _host_local(view, dist)[:, :state.vcap]
+    parent = sssp_tree_parents(state, dist, srcs)
+    return ShardedSSSPResult(ok, neg, dist, parent, val_ecnt, agree)
 
 
 def bc_batched(view: ShardedTileView, state: GraphState, srcs=None, *,
@@ -300,3 +480,180 @@ def bc_batched(view: ShardedTileView, state: GraphState, srcs=None, *,
     return ShardedBCResult(ok[:n_srcs], delta[:n_srcs, :vcap],
                            sigma[:n_srcs, :vcap], level[:n_srcs, :vcap],
                            scores, val_ecnt, agree)
+
+
+# ------------------------------ delta queries -------------------------------
+
+@partial(jax.jit, static_argnames=("vp",))
+def _sssp_delta_dist0(state: GraphState, prior_dist, prior_parent, dirty,
+                      srcs, vp: int):
+    """The poison step of the sharded delta SSSP, batched over sources.
+
+    Runs the engine's ``_poison`` (pointer doubling over the prior parent
+    tree + one vectorized edge re-probe, weight-checked) per source on
+    REPLICATED arrays — the parent walk is per-vertex, so nothing here
+    needs the mesh — and returns the warm-start ``dist0[S, vp]``:
+    surviving prior distances (admissible upper bounds in the new graph),
+    +inf elsewhere, source re-pinned to 0.  Identical seeding to the
+    engine's ``delta_sssp``.
+    """
+    from repro.engine.incremental import _poison
+
+    vcap = state.vcap
+
+    def one(dist, parent, src):
+        reached = dist < INF
+        poison = _poison(state, parent, reached, dist, dirty,
+                         check_weight=True)
+        keep = reached & ~poison
+        d0 = jnp.where(keep, dist, INF)
+        ok = (state.alive[jnp.clip(src, 0, vcap - 1)]
+              & (src >= 0) & (src < vcap))
+        return d0.at[src].set(jnp.where(ok, 0.0, INF), mode="drop")
+
+    dist0 = jax.vmap(one)(prior_dist, prior_parent, srcs)
+    return jnp.pad(dist0, ((0, 0), (0, vp - vcap)), constant_values=INF)
+
+
+@partial(jax.jit, static_argnames=("vp",))
+def _bfs_delta_state0(state: GraphState, prior_dist, dirty, srcs, vp: int):
+    """The cut step of the sharded delta BFS, batched over sources.
+
+    BFS levels ARE a forward tree, so the delta reuses exactly the
+    level-cut reasoning of delta-BC (``bc_level_cut``): everything
+    strictly above a source's shallowest dirty level is certainly
+    unchanged, everything below is suspect.  The parent-tree poison walk
+    would certify MORE survivors (it re-probes individual edges), but its
+    keep set is only usable by a min-plus re-relax — distances can shrink
+    through inserted shortcut edges — which would forfeit the boolean
+    (sgemm/MXU) formulation the sharded BFS loop is built on; the level
+    cut keeps every pass on the int8-pmax loop.  Returns the warm level
+    array and per-source resume pass (``cut - 1``; cold restart for
+    suspect sources, ``vcap`` = zero passes for untouched ones).
+    """
+    vcap = state.vcap
+    cut = bc_level_cut(prior_dist, dirty, state.alive)
+    ok = (state.alive[jnp.clip(srcs, 0, vcap - 1)]
+          & (srcs >= 0) & (srcs < vcap))
+    # A now-ok source with an EMPTY prior row (dead at prior time,
+    # resurrected since) is invisible to the level cut — nothing in its
+    # row is reached — but must restart cold, not reuse the empty tree.
+    rows = jnp.arange(srcs.shape[0], dtype=jnp.int32)
+    revived = ok & (prior_dist[rows, jnp.clip(srcs, 0, vcap - 1)] < 0)
+    cut = jnp.where(revived, 0, cut)
+    ids = jnp.arange(vcap, dtype=jnp.int32)
+    cold = jnp.where((ids[None, :] == srcs[:, None]) & ok[:, None], 0, -1)
+    usable = cut >= 1
+    keep = usable[:, None] & (prior_dist >= 0) & (prior_dist < cut[:, None])
+    dist0 = jnp.where(usable[:, None], jnp.where(keep, prior_dist, -1), cold)
+    lvl0 = jnp.where(usable, jnp.minimum(cut - 1, vcap), 0)
+    dist0 = jnp.pad(dist0, ((0, 0), (0, vp - vcap)), constant_values=-1)
+    return dist0.astype(jnp.int32), lvl0.astype(jnp.int32)
+
+
+def delta_bfs_sharded(view: ShardedTileView, state: GraphState,
+                      prior: ShardedBFSResult, dirty, srcs, *,
+                      use_kernel: bool = False) -> ShardedBFSResult:
+    """Distributed delta BFS: level cut unsharded, warm loop on the mesh.
+
+    ``prior`` must be a result for the SAME ``srcs`` at an earlier version
+    whose accumulated dirty set is ``dirty`` (a superset only costs time).
+    Bit-identical to both the full sharded ``bfs`` on this snapshot and
+    the engine's per-source ``delta_bfs`` (BFS distances are unique and
+    the parents come from the shared reconstruction); the cost is the
+    passes BELOW each source's cut — churn deep in the traversal skips the
+    shallow levels entirely, untouched sources run zero passes.
+    """
+    srcs = _srcs_array(srcs)
+    dist0, lvl0 = _bfs_delta_state0(state, prior.dist, dirty, srcs,
+                                    vp=view.vp)
+    dist0, lvl0 = (_mesh_replicated(view, x) for x in (dist0, lvl0))
+    fn = query_fn(view.mesh, "bfs_delta", view.tile, use_kernel)
+    ok, dist, val_ecnt, agree = fn(view.w, view.occ, state.alive,
+                                   state.ecnt, srcs, state.version,
+                                   dist0, lvl0)
+    dist = _host_local(view, dist)[:, :state.vcap]
+    parent = bfs_tree_parents(state, dist, srcs)
+    return ShardedBFSResult(ok, dist, parent, val_ecnt, agree)
+
+
+def delta_sssp_sharded(view: ShardedTileView, state: GraphState,
+                       prior: ShardedSSSPResult, dirty, srcs, *,
+                       use_kernel: bool = False) -> ShardedSSSPResult:
+    """Distributed delta Bellman-Ford: poison unsharded, re-relax sharded.
+
+    The prior must be negative-cycle-free (its distances must be converged
+    path lengths for the poison chain walk to certify them); on detection
+    in the NEW graph the caller should re-run the full query, whose
+    partially-relaxed distances are the canonical answer — exactly the
+    ``incremental_sssp`` contract.  Bit-identical to the full sharded
+    ``sssp`` and to the engine's ``delta_sssp`` (the re-relax is the same
+    fixed point, merged with an order-free f32 min per level).
+    """
+    srcs = _srcs_array(srcs)
+    dist0 = _mesh_replicated(view, _sssp_delta_dist0(
+        state, prior.dist, prior.parent, dirty, srcs, vp=view.vp))
+    fn = query_fn(view.mesh, "sssp_delta", view.tile, use_kernel)
+    ok, changed, dist, val_ecnt, agree = fn(view.w, view.occ, state.alive,
+                                            state.ecnt, srcs, state.version,
+                                            dist0)
+    dist = _host_local(view, dist)[:, :state.vcap]
+    parent = sssp_tree_parents(state, dist, srcs)
+    return ShardedSSSPResult(ok & ~changed, changed, dist, parent,
+                             val_ecnt, agree)
+
+
+def delta_bc_sharded(view: ShardedTileView, state: GraphState,
+                     prior: ShardedBCResult, dirty, srcs=None, *,
+                     use_kernel: bool = False,
+                     src_chunk: int | None = None) -> ShardedBCResult:
+    """Distributed level-cut delta BC, source axis sharded as in ``bc_batched``.
+
+    Each shard cuts its own sources' cached forward trees at the shallowest
+    dirty level (``bc_level_cut`` on the replicated dirty mask — sources
+    the churn cannot have touched reuse their whole tree with zero forward
+    passes; a source that is itself suspect restarts cold) and resumes the
+    chunked batched-Brandes sweep.  Bit-identical to the full sharded
+    ``bc_batched`` on this snapshot, scores included.
+    """
+    if srcs is None:
+        srcs = jnp.arange(state.vcap, dtype=jnp.int32)
+    n_srcs = jnp.atleast_1d(jnp.asarray(srcs)).shape[0]
+    srcs = _srcs_array(srcs, view.n_shards, pad_to_shards=True)
+    vcap = state.vcap
+    S, vp = srcs.shape[0], view.vp
+    # Re-pad the cached (sliced-back) prior to the program's [S, Vp] shape:
+    # padding sources carry an empty tree and padding columns are never
+    # reached, matching what the full program computes for them.
+    level = jnp.full((S, vp), -1, jnp.int32).at[:n_srcs, :vcap].set(
+        prior.level)
+    sigma = jnp.zeros((S, vp), jnp.float32).at[:n_srcs, :vcap].set(
+        prior.sigma)
+    dirty = _mesh_replicated(view, dirty)
+    fn = query_fn(view.mesh, "bc_delta", view.tile, use_kernel, src_chunk)
+    ok, delta, sigma, level, scores, val_ecnt, agree = fn(
+        view.w, view.occ, state.alive, state.ecnt, srcs, state.version,
+        dirty, level, sigma)
+    return ShardedBCResult(ok[:n_srcs], delta[:n_srcs, :vcap],
+                           sigma[:n_srcs, :vcap], level[:n_srcs, :vcap],
+                           scores, val_ecnt, agree)
+
+
+def validate_incremental_sharded(view: ShardedTileView, state: GraphState,
+                                 srcs, result, kind: str, *,
+                                 use_kernel: bool = False,
+                                 src_chunk: int | None = None) -> bool:
+    """``cmp_tree``-style check for the sharded delta paths: bit-equality
+    of every result field against a fresh full distributed collect on the
+    same snapshot (the sharded analogue of
+    ``engine.incremental.validate_incremental`` — delta BC included, since
+    the warm-started sweep replays the cold op sequence exactly)."""
+    from repro.engine.incremental import results_equal
+
+    if kind == "bc":
+        fresh = bc_batched(view, state, srcs, use_kernel=use_kernel,
+                           src_chunk=src_chunk)
+    else:
+        fresh = {"bfs": bfs, "sssp": sssp}[kind](view, state, srcs,
+                                                 use_kernel=use_kernel)
+    return results_equal(result, fresh)

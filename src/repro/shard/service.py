@@ -1,33 +1,42 @@
 """ShardedGraphService: the streaming front end on a device mesh.
 
-Mirrors :class:`repro.engine.service.GraphService` semantics — updates
-enter through the :class:`~repro.engine.scheduler.StreamScheduler` and
-commit into a :class:`~repro.engine.version_ring.VersionRing`; queries are
-answered from the ring with per-``(kind, sources)`` caches and the
-*unchanged* shortcut (churn that never touches a cached query's reached
-region returns the cached answer with zero device work) — but every full
-collect is a distributed ``shard_map`` program over the sharded tile grid,
-and the grid itself is maintained incrementally per shard
-(``refresh_sharded_view`` re-derives only the dirty tile rows named by the
-ring's dirty sets).
+Shares :class:`repro.engine.service.BaseGraphService` with the local
+``GraphService`` — updates enter through the
+:class:`~repro.engine.scheduler.StreamScheduler` and commit into a
+:class:`~repro.engine.version_ring.VersionRing`; queries are answered from
+the ring with per-``(kind, sources)`` caches, the PG-Icn / PG-Cn collect
+loops, the LRU cache pruning, and the mode counters all written once in
+the base — but every collect here runs distributed ``shard_map`` programs
+over the sharded tile grid, and the grid itself is maintained
+incrementally per shard (``refresh_sharded_view`` re-derives only the
+dirty tile rows named by the ring's dirty sets).
 
-Consistency modes match the paper at batch granularity:
+Each collect climbs the same *unchanged → delta → full* ladder as the
+local engine:
 
-  * ``"icn"`` — single collect against the latest commit;
-  * ``"cn"``  — double collect across ring versions until two answers
-    match, with pending update batches committing between collects.  Each
-    collect additionally carries the psum-validated cross-shard version
-    agreement (``result.agree``) — the intra-query half of the paper's
-    double-collect check, spanning shards instead of time.
+  * **unchanged** — churn since the cached answer never touched its
+    reached region: the cached result stands with zero device work;
+  * **delta** — the engine's poison + re-relax path on the mesh
+    (``shard.queries.delta_*_sharded``): the poison pointer-doubling runs
+    unsharded over the replicated prior parent arrays, the re-relax
+    warm-starts the sharded level loop from the keep set, and BC resumes
+    its per-source level-cut warm start from the cached forward trees.
+    Guarded like ``engine.incremental``'s ``_prior_usable``: the prior
+    must match the current vertex table (and be negative-cycle-free for
+    SSSP), the dirty span must be within the ring window and under
+    ``dirty_threshold``; a delta SSSP that detects a new negative cycle
+    re-runs the full query for the canonical answer;
+  * **full** — the distributed fixed point.
 
-There is no delta path here (the sharded queries are full fixed points);
-the mode split is unchanged/full, which is where most of the paper's
-selectivity win lives anyway.
+Consistency modes match the paper at batch granularity: ``"icn"`` single
+collect; ``"cn"`` double collect across ring versions until two answers
+match.  Each collect additionally carries the psum-validated cross-shard
+version agreement (``result.agree``) — the intra-query half of the
+paper's double-collect check, spanning shards instead of time.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, Optional, Sequence, Tuple, Union
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,29 +44,23 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core.graph_state import GraphState
-from repro.core.snapshot import ScanStats
 from repro.core.tiles import TILE
-from repro.engine.incremental import results_equal
-from repro.engine.scheduler import StreamScheduler
-from repro.engine.service import QueryReply, ServiceStats, prune_result_cache
-from repro.engine.version_ring import PinnedSnapshot, VersionRing
+from repro.engine.incremental import _dirty_stats
+from repro.engine.service import BaseGraphService, QueryReply  # noqa: F401
+from repro.engine.service import ServiceStats  # noqa: F401  (re-export)
 
 from . import queries as shard_queries
 from .tile_shard import (
     ShardedTileView,
     as_graph_mesh,
-    build_sharded_view,
     refresh_sharded_view,
 )
 
 _QUERIES = {"bfs": shard_queries.bfs, "sssp": shard_queries.sssp,
             "bc": shard_queries.bc_batched}
-
-
-@dataclass
-class _Slot:
-    version: int
-    result: object
+_DELTA = {"bfs": shard_queries.delta_bfs_sharded,
+          "sssp": shard_queries.delta_sssp_sharded,
+          "bc": shard_queries.delta_bc_sharded}
 
 
 def _reached_union(kind: str, result) -> jax.Array:
@@ -69,47 +72,28 @@ def _reached_union(kind: str, result) -> jax.Array:
     return (result.level >= 0).any(axis=0)
 
 
-class ShardedGraphService:
+class ShardedGraphService(BaseGraphService):
     """submit()/query() front end over the sharded tile grid."""
+
+    _kinds = ("bfs", "sssp", "bc")
 
     def __init__(self, initial_state: GraphState, mesh: Mesh, *,
                  tile: int = TILE, use_kernel: bool = False,
                  src_chunk: Optional[int] = None, ring_depth: int = 8,
-                 batch_size: int = 32, strict_order: bool = False,
-                 coalesce: bool = False, max_collects: int = 16,
-                 max_cached: int = 128):
+                 batch_size: int = 32, dirty_threshold: float = 0.25,
+                 strict_order: bool = False, coalesce: bool = False,
+                 max_collects: int = 16, max_cached: int = 128):
         self.mesh = as_graph_mesh(mesh)
         self.tile = tile
         self.use_kernel = use_kernel
         self.src_chunk = src_chunk
-        self.ring = VersionRing(initial_state, depth=ring_depth)
-        self.scheduler = StreamScheduler(
-            self.ring, batch_size=batch_size, strict_order=strict_order,
-            coalesce=coalesce)
-        self.max_collects = max_collects
-        self.max_cached = max_cached
-        self.stats = ServiceStats()
-        self._cache: Dict[Tuple[str, tuple], _Slot] = {}
+        self._init_service(
+            initial_state, ring_depth=ring_depth, batch_size=batch_size,
+            dirty_threshold=dirty_threshold, strict_order=strict_order,
+            coalesce=coalesce, max_collects=max_collects,
+            max_cached=max_cached)
         self._view: Optional[ShardedTileView] = None
         self._view_version: int = -1
-
-    # ------------------------------ updates ------------------------------
-
-    def submit(self, op: Tuple) -> int:
-        return self.scheduler.submit(op)
-
-    def submit_many(self, ops: Sequence[Tuple]) -> list:
-        return self.scheduler.submit_many(ops)
-
-    def flush(self):
-        return self.scheduler.flush()
-
-    @property
-    def version(self) -> int:
-        return self.ring.latest.version
-
-    def pin(self, version: Optional[int] = None) -> PinnedSnapshot:
-        return self.ring.pin(version)
 
     # ------------------------------- view --------------------------------
 
@@ -135,93 +119,100 @@ class ShardedGraphService:
         arr = np.atleast_1d(np.asarray(srcs))
         return kind, tuple(int(s) for s in arr)
 
+    def _check_srcs(self, kind: str, srcs) -> None:
+        if srcs is None and kind != "bc":
+            raise ValueError(f"{kind!r} needs explicit sources")
+
+    def _icn_validated(self, result) -> bool:
+        return bool(result.agree)
+
+    def _delta_usable(self, kind: str, prior, state: GraphState) -> bool:
+        """The sharded ``_prior_usable``: same-vcap prior whose cached
+        payload the delta path can certify (SSSP additionally: converged,
+        i.e. no prior negative cycle).  Per-source ``ok`` flips are fine —
+        a source that died poisons its whole tree, one that was dead
+        re-relaxes cold, and a BC source that turned suspect restarts at
+        cut 0."""
+        if kind == "bc":
+            return prior.level.shape[1] == state.vcap
+        if prior.dist.shape[1] != state.vcap:
+            return False
+        return kind == "bfs" or not bool(prior.negcycle.any())
+
+    def _revived_source(self, prior, srcs, state: GraphState) -> bool:
+        """True when a source that was NOT ok at prior time is alive now.
+
+        Such a source's cached row is empty, so no dirty vertex can
+        intersect it — invisible to both the unchanged test and the level
+        cut — yet the row must be recomputed (the delta paths restart it
+        cold once this forces them past the unchanged shortcut).
+        Conservative for SSSP, where ``ok`` also folds in the negative-
+        cycle flag: a cached negcycle answer is re-collected every time.
+        """
+        idx = (jnp.arange(prior.ok.shape[0], dtype=jnp.int32) if srcs is None
+               else jnp.atleast_1d(jnp.asarray(srcs, jnp.int32)))
+        alive_now = (state.alive[jnp.clip(idx, 0, state.vcap - 1)]
+                     & (idx >= 0) & (idx < state.vcap))
+        return bool((~prior.ok & alive_now).any())
+
     def _collect(self, kind: str, srcs, key):
-        """One collect against the latest ring version: unchanged shortcut
-        first, full distributed query otherwise."""
+        """One collect against the latest ring version, climbing the
+        unchanged → delta → full ladder (see module docstring)."""
         entry = self.ring.latest
+        state = entry.state
         slot = self._cache.get(key)
         mode, res = "full", None
         if slot is not None:
+            prior = slot.result
             if slot.version == entry.version:
-                mode, res = "unchanged", slot.result
+                mode, res = "unchanged", prior
             else:
                 dirty = self.ring.dirty_between(slot.version, entry.version)
-                union = _reached_union(kind, slot.result)
-                if (dirty is not None and union.shape[0] == entry.state.vcap
-                        and not bool((dirty & union).any())):
-                    mode, res = "unchanged", slot.result
-        if mode == "full":
+                union = _reached_union(kind, prior)
+                if dirty is not None and union.shape[0] == state.vcap:
+                    n_dirty, touched = (int(x) for x in
+                                        _dirty_stats(union, dirty))
+                    if not touched and self._revived_source(prior, srcs,
+                                                            state):
+                        touched = True
+                    if not touched:
+                        mode, res = "unchanged", prior
+                    elif (n_dirty / state.vcap <= self.dirty_threshold
+                          and self._delta_usable(kind, prior, state)):
+                        mode, res = "delta", self._delta_collect(
+                            kind, prior, dirty, srcs, state)
+                        if res is None:  # new negative cycle: canonical full
+                            mode, res = "full", None
+        if res is None:
             res = _QUERIES[kind](
-                self.view(), entry.state, srcs,
+                self.view(), state, srcs,
                 **({"src_chunk": self.src_chunk} if kind == "bc" else {}),
                 use_kernel=self.use_kernel)
-        self._cache.pop(key, None)
-        self._cache[key] = _Slot(entry.version, res)
-        self._prune_cache()
+        self._cache_store(key, entry.version, res)
         return entry, res, mode
 
-    def _prune_cache(self) -> None:
-        prune_result_cache(self._cache, self.max_cached,
-                           self.ring.oldest_version - 1)
-
-    def query(self, kind: str, srcs=None, mode: str = "icn") -> QueryReply:
-        """Answer one distributed analytics query.
-
-        ``kind``: ``"bfs"`` | ``"sssp"`` | ``"bc"``; ``srcs`` is an int or
-        a sequence of sources (``None`` = all vertex slots, BC only).
-        ``mode``: ``"icn"`` (single collect) or ``"cn"`` (double collect).
-        """
-        if kind not in _QUERIES:
-            raise KeyError(f"unknown query kind {kind!r}")
-        if mode not in ("icn", "cn"):
-            raise ValueError(f"unknown mode {mode!r}")
-        if srcs is None and kind != "bc":
-            raise ValueError(f"{kind!r} needs explicit sources")
-        self.stats.queries += 1
-        key = self._key(kind, srcs)
-        if mode == "icn":
-            entry, res, qmode = self._collect(kind, srcs, key)
-            self.stats.collects += 1
-            self.stats.count(qmode)
-            return QueryReply(res, entry.version, qmode, bool(res.agree),
-                              ScanStats(collects=1, validated=False))
-        return self._query_cn(kind, srcs, key)
-
-    def _query_cn(self, kind: str, srcs, key) -> QueryReply:
-        """PG-Cn: double-collect over ring versions until answers match,
-        with one pending update batch committing between collects.  Kept
-        in lockstep with ``GraphService._query_cn`` (the collect return
-        shapes differ; change both together)."""
-        scan = ScanStats()
-        v0 = self.ring.latest.version
-        entry, prev_res, qmode = self._collect(kind, srcs, key)
-        scan.collects = 1
-        while scan.collects < self.max_collects:
-            self.scheduler.commit_one()
-            cur_entry, cur_res, cur_mode = self._collect(kind, srcs, key)
-            scan.collects += 1
-            if cur_entry.version == entry.version or results_equal(
-                    prev_res, cur_res):
-                self.stats.collects += scan.collects
-                self.stats.count(cur_mode)
-                scan.interrupting_updates = cur_entry.version - v0
-                scan.validated = True
-                return QueryReply(cur_res, cur_entry.version, cur_mode,
-                                  True, scan)
-            self.stats.cn_retries += 1
-            entry, prev_res, qmode = cur_entry, cur_res, cur_mode
-        scan.validated = False
-        scan.interrupting_updates = self.ring.latest.version - v0
-        self.stats.collects += scan.collects
-        self.stats.count(qmode)
-        return QueryReply(prev_res, entry.version, qmode, False, scan)
+    def _delta_collect(self, kind: str, prior, dirty, srcs,
+                       state: GraphState):
+        """Run the distributed delta query; ``None`` = fall back to full
+        (delta SSSP surfaced a negative cycle born since the prior)."""
+        view = self.view()
+        if kind == "bc":
+            return _DELTA[kind](view, state, prior, dirty, srcs,
+                                use_kernel=self.use_kernel,
+                                src_chunk=self.src_chunk)
+        res = _DELTA[kind](view, state, prior, dirty, srcs,
+                           use_kernel=self.use_kernel)
+        if kind == "sssp" and bool(res.negcycle.any()):
+            return None
+        return res
 
     # --------------------------- batched analytics ------------------------
 
     def bc_scores(self):
         """Exact all-vertex betweenness centrality at the latest version via
         the distributed batched-Brandes path; dead slots are NaN.  Cached
-        through the regular query cache (kind ``"bc"``, all sources)."""
+        through the regular query cache (kind ``"bc"``, all sources), so a
+        localized commit pays only the level-cut delta sweep."""
         reply = self.query("bc", None)
         state = self.ring.latest.state
         scores = jnp.where(state.alive, reply.result.scores, jnp.nan)

@@ -172,36 +172,64 @@ def build_sharded_view(state: GraphState, mesh: Mesh,
 
 # ------------------------------ refresh -----------------------------------
 
-@lru_cache(maxsize=None)
-def _row_refresh_fn(mesh: Mesh, tile: int, width: int):
-    """One-dirty-tile-row refresh as a shard_map program.
+REFRESH_BATCH = 8  # max dirty tile rows fused into one shard_map dispatch
 
-    Every shard receives the (replicated) edge window and rebuilds the
-    slab, but only the OWNER of global tile row ``r`` writes it — the rest
-    rewrite their current contents in place, so the donated buffers never
-    move across shards.  Cached per (mesh, tile, window width): every dirty
-    row with the same window width reuses one compiled program, exactly
-    like the single-device ``core.tiles._refresh_row``.
+
+@dataclass
+class RefreshStats:
+    """Per-process tallies of ``refresh_sharded_view``'s dispatch behavior
+    (benchmarks read the deltas around a call): ``rows`` dirty tile rows
+    refreshed, in ``dispatches`` shard_map program launches (the
+    pre-batching cost was one launch per row == ``rows``)."""
+
+    rows: int = 0
+    dispatches: int = 0
+    rebuilds: int = 0
+
+
+refresh_stats = RefreshStats()
+
+
+@lru_cache(maxsize=None)
+def _rows_refresh_fn(mesh: Mesh, tile: int, width: int, nrows: int):
+    """Batched dirty-tile-row refresh as ONE shard_map program.
+
+    Every shard receives the (replicated) edge windows of up to ``nrows``
+    dirty rows and rebuilds all their slabs at once (``vmap`` over the row
+    axis of the shared ``row_window_slab`` derivation), then writes each
+    row back in place — only the OWNER of global tile row ``r`` keeps the
+    new slab, every other shard (and every padding row, ``r == -1``)
+    rewrites its current contents, so the donated buffers never move
+    across shards.  Cached per (mesh, tile, window width, row-count
+    bucket): under heavy churn a commit's same-width rows amortize to
+    ``ceil(rows / REFRESH_BATCH)`` dispatches instead of one per row.
     """
     ax = _axis(mesh)
 
-    def body(w_local, occ_local, esrc, edst, ew, alive, r, lo):
+    def body(w_local, occ_local, esrc, edst, ew, alive, rs, los):
         vp = w_local.shape[1]
         nt = occ_local.shape[1]
         rows_per_shard = occ_local.shape[0]
         i = lax.axis_index(ax)
-        r = jnp.asarray(r, jnp.int32)
-        own = (r // rows_per_shard) == i
-        lr = jnp.where(own, r % rows_per_shard, 0)
-        slab, occ_row = row_window_slab(esrc, edst, ew, alive, r, lo,
-                                        tile=tile, width=width, vp=vp, nt=nt)
-        zero = jnp.int32(0)
-        cur_w = lax.dynamic_slice(w_local, (lr * tile, zero), (tile, vp))
-        cur_occ = lax.dynamic_slice(occ_local, (lr, zero), (1, nt))
-        slab = jnp.where(own, slab, cur_w)
-        occ_row = jnp.where(own, occ_row, cur_occ)
-        return (lax.dynamic_update_slice(w_local, slab, (lr * tile, zero)),
-                lax.dynamic_update_slice(occ_local, occ_row, (lr, zero)))
+        slabs, occ_rows = jax.vmap(
+            lambda r, lo: row_window_slab(esrc, edst, ew, alive, r, lo,
+                                          tile=tile, width=width, vp=vp,
+                                          nt=nt))(rs, los)
+
+        def write(k, carry):
+            w, occ = carry
+            r = rs[k]
+            own = (r >= 0) & ((r // rows_per_shard) == i)
+            lr = jnp.where(own, r % rows_per_shard, 0)
+            zero = jnp.int32(0)
+            cur_w = lax.dynamic_slice(w, (lr * tile, zero), (tile, vp))
+            cur_occ = lax.dynamic_slice(occ, (lr, zero), (1, nt))
+            slab = jnp.where(own, slabs[k], cur_w)
+            occ_row = jnp.where(own, occ_rows[k], cur_occ)
+            return (lax.dynamic_update_slice(w, slab, (lr * tile, zero)),
+                    lax.dynamic_update_slice(occ, occ_row, (lr, zero)))
+
+        return lax.fori_loop(0, nrows, write, (w_local, occ_local))
 
     vspec, sspec = P(_axis(mesh), None), P()
     fn = shard_map(
@@ -213,6 +241,28 @@ def _row_refresh_fn(mesh: Mesh, tile: int, width: int):
     return jax.jit(fn, donate_argnums=(0, 1))
 
 
+def _batched_plan(plan):
+    """Group the (row, lo, width) windows into dispatch batches: same-width
+    rows fuse into chunks of up to ``REFRESH_BATCH``, each chunk padded up
+    to the next power of two (padding rows are ``r = -1`` no-ops) so a
+    handful of (width, bucket) program shapes cover every commit."""
+    by_width: dict = {}
+    for r, lo, width in plan:
+        by_width.setdefault(width, []).append((r, lo))
+    batches = []
+    for width, rows in sorted(by_width.items()):
+        for i in range(0, len(rows), REFRESH_BATCH):
+            chunk = rows[i:i + REFRESH_BATCH]
+            bucket = 1
+            while bucket < len(chunk):
+                bucket *= 2
+            chunk = chunk + [(-1, 0)] * (bucket - len(chunk))
+            rs = np.asarray([c[0] for c in chunk], np.int32)
+            los = np.asarray([c[1] for c in chunk], np.int32)
+            batches.append((width, bucket, rs, los))
+    return batches
+
+
 def refresh_sharded_view(state: GraphState, prev: ShardedTileView | None,
                          dirty: jax.Array | None, *,
                          mesh: Mesh | None = None,
@@ -221,10 +271,11 @@ def refresh_sharded_view(state: GraphState, prev: ShardedTileView | None,
 
     Same host-side strategy pick as ``core.tiles.refresh_tile_view``: no
     dirty tile row returns ``prev``; a few dirty rows re-derive only those
-    rows (one shard_map row program each, writing in place on the owning
-    shard); more than half the rows moved — or a resize / mesh change / no
-    dirty info — rebuilds from scratch.  ``prev``'s buffers are DONATED on
-    the row path: treat the call as consuming ``prev``.
+    rows (same-width rows batched into one shard_map program each, writing
+    in place on the owning shards); more than half the rows moved — or a
+    resize / mesh change / no dirty info — rebuilds from scratch.
+    ``prev``'s buffers are DONATED on the row path: treat the call as
+    consuming ``prev``.  Dispatch tallies accumulate in ``refresh_stats``.
     """
     if prev is not None:
         mesh = mesh or prev.mesh
@@ -238,15 +289,19 @@ def refresh_sharded_view(state: GraphState, prev: ShardedTileView | None,
             or prev.tile != tile
             or prev.vp != _padded_dim(state.vcap, tile, n)
             or dirty.shape[0] != state.vcap):
+        refresh_stats.rebuilds += 1
         return build_sharded_view(state, mesh, tile)
     plan = dirty_row_windows(state, dirty, prev.n_tiles, tile)
     if plan is None:
+        refresh_stats.rebuilds += 1
         return build_sharded_view(state, mesh, tile)
     if not plan:
         return prev
     w, occ = prev.w, prev.occ
-    for r, lo, width in plan:
-        w, occ = _row_refresh_fn(mesh, tile, width)(
+    for width, bucket, rs, los in _batched_plan(plan):
+        w, occ = _rows_refresh_fn(mesh, tile, width, bucket)(
             w, occ, state.esrc, state.edst, state.ew, state.alive,
-            jnp.int32(r), jnp.int32(lo))
+            jnp.asarray(rs), jnp.asarray(los))
+        refresh_stats.dispatches += 1
+    refresh_stats.rows += len(plan)
     return ShardedTileView(w, occ, mesh, tile)

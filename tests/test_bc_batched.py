@@ -138,3 +138,56 @@ def test_bc_map_is_the_old_lax_map_baseline():
                          (PUTE, 0, 1, 1.0), (PUTE, 1, 2, 1.0)])
     val = bc_map(g, 1, jnp.arange(3, dtype=jnp.int32))
     assert float(val) == pytest.approx(1.0)
+
+
+def test_bc_batched_warm_start_bit_identical_to_cold():
+    """The level-cut warm start (prior_level/prior_sigma/cut) reproduces the
+    cold sweep bit-exactly on every source — including cut-0 rows (suspect
+    sources restarting cold), untouched rows (pure tree reuse), dead
+    vertices, and the chunked source axis."""
+    from repro.core.queries import bc_level_cut
+    from repro.core.updates import dirty_vertices
+
+    g = load_rmat_graph(64, 400, seed=3, weighted=False)
+    srcs = jnp.arange(64, dtype=jnp.int32)
+    am, _, alive = dense_views(g)
+    d0, s0, l0, _ = bc_batched_dense(am, srcs, alive)
+    g2, _ = apply_ops(g, [(REMV, 13), (PUTE, 40, 2, 1.0),
+                          (REME, 21, int(g.edst[100]))])
+    dirty = dirty_vertices(g, g2)
+    am2, _, alive2 = dense_views(g2)
+    cut = bc_level_cut(l0, dirty, g2.alive)
+    assert int(jnp.min(cut)) == 0  # the dirty sources themselves restart
+    cold = bc_batched_dense(am2, srcs, alive2)
+    for chunk in (None, 5):
+        warm = bc_batched_dense(am2, srcs, alive2, src_chunk=chunk,
+                                prior_level=l0, prior_sigma=s0, cut=cut)
+        for a, b in zip(warm, cold):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(ValueError):
+        bc_batched_dense(am2, srcs, alive2, prior_level=l0)
+
+
+def test_bc_batched_warm_start_revived_source_restarts_cold():
+    """A source dead at prior time and alive now has an empty prior tree
+    that no dirty vertex intersects; the warm start must force its cut to
+    0 (cold restart) rather than reuse the empty row."""
+    from repro.core.queries import bc_level_cut
+    from repro.core.updates import dirty_vertices
+
+    g = make_graph(16, 64)
+    g, _ = apply_ops(g, [(PUTV, i) for i in range(8)]
+                     + [(PUTE, 0, 1, 1.0), (PUTE, 1, 2, 1.0), (REMV, 5)])
+    srcs = jnp.asarray([0, 5], jnp.int32)
+    am, _, alive = dense_views(g)
+    d0, s0, l0, ok0 = bc_batched_dense(am, srcs, alive)
+    assert not bool(ok0[1])
+    g2, _ = apply_ops(g, [(PUTV, 5), (PUTE, 5, 1, 1.0)])
+    am2, _, alive2 = dense_views(g2)
+    cut = bc_level_cut(l0, dirty_vertices(g, g2), g2.alive)
+    warm = bc_batched_dense(am2, srcs, alive2, prior_level=l0,
+                            prior_sigma=s0, cut=cut)
+    cold = bc_batched_dense(am2, srcs, alive2)
+    for a, b in zip(warm, cold):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert bool(warm[3][1]) and int(warm[2][1, 5]) == 0  # row restarted

@@ -8,10 +8,12 @@ from repro.core import (
     apply_ops, dirty_vertices, make_graph, queries,
 )
 from repro.core.graph_state import NOKEY, live_edge_mask
+from repro.core.queries import bc_level_cut
 from repro.engine import (
     GraphService,
     StreamScheduler,
     VersionRing,
+    incremental_bc,
     incremental_bfs,
     incremental_sssp,
     validate_incremental,
@@ -65,6 +67,7 @@ def _assert_bit_identical(res, fresh):
 @pytest.mark.parametrize("kind,incr,full", [
     ("bfs", incremental_bfs, queries.bfs),
     ("sssp", incremental_sssp, queries.sssp),
+    ("bc", incremental_bc, queries.bc_dependencies),
 ])
 def test_incremental_matches_fresh_over_randomized_stream(kind, incr, full):
     """>= 20 randomized update/query interleavings, bit-identical results."""
@@ -131,6 +134,105 @@ def test_incremental_sssp_zero_weight_parent_cycle():
     res, stats = incremental_sssp(g2, prior, dirty_vertices(g, g2), 2)
     assert stats.mode == "delta"
     _assert_bit_identical(res, queries.sssp(g2, 2))  # 0 and 1 unreachable
+
+
+def _chain_graph(depth=8, width=2):
+    """Layered DAG: vertex l*width+j sits at BFS level l from source 0."""
+    n = depth * width
+    ops = [(PUTV, i) for i in range(n)]
+    ops += [(PUTE, 0, j, 1.0) for j in range(1, width)]  # level-0 clique seed
+    for l in range(depth - 1):
+        for j in range(width):
+            for k in range(width):
+                ops.append((PUTE, l * width + j, (l + 1) * width + k, 1.0))
+    g = make_graph(n, 4 * n * width)
+    g, _ = apply_ops(g, ops)
+    return g, n
+
+
+def test_bc_level_cut_semantics():
+    """Edge churn at level l cuts at l+1; a death at level l cuts at l;
+    untouched sources cut past every level."""
+    g, n = _chain_graph(depth=6, width=2)
+    prior = queries.bc_dependencies(g, 0)
+    lvl = np.asarray(prior.level)
+    deep = int(np.flatnonzero(lvl == 4)[0])
+    dirty = np.zeros(n, bool)
+    dirty[deep] = True
+    cut = int(bc_level_cut(prior.level, dirty, g.alive))
+    assert cut == 5  # out-edge churn at level 4 can only disturb level >= 5
+    g2, _ = apply_ops(g, [(REMV, deep)])
+    cut2 = int(bc_level_cut(prior.level, dirty_vertices(g, g2), g2.alive))
+    assert cut2 == 4  # the vertex itself died: its own level is suspect
+    assert int(bc_level_cut(prior.level, np.zeros(n, bool), g.alive)) > 5
+
+
+def test_incremental_bc_deep_cut_is_delta_and_exact():
+    """Churn confined below the median level takes the delta path and is
+    bit-identical to a fresh bc_dependencies (level/sigma/delta all)."""
+    g, n = _chain_graph(depth=8, width=2)
+    prior, st = incremental_bc(g, None, None, 0)
+    assert st.mode == "full"
+    deep = int(np.flatnonzero(np.asarray(prior.level) == 6)[0])
+    g2, _ = apply_ops(g, [(REME, deep, int(np.flatnonzero(
+        np.asarray(prior.level) == 7)[0]))])
+    res, st = incremental_bc(g2, prior, dirty_vertices(g, g2), 0)
+    assert st.mode == "delta"
+    _assert_bit_identical(res, queries.bc_dependencies(g2, 0))
+    assert validate_incremental(g2, 0, res, "bc")
+
+
+def test_incremental_bc_source_level_dirt_falls_back_to_full():
+    """A cut of 0 (the source itself suspect) cannot warm-start: full."""
+    g, n = _chain_graph(depth=4, width=2)
+    prior, _ = incremental_bc(g, None, None, 0)
+    g2, _ = apply_ops(g, [(PUTE, 0, 5, 1.0)])  # source out-list churn
+    res, st = incremental_bc(g2, prior, dirty_vertices(g, g2), 0)
+    # source dirty at level 0 -> cut 1 is still a valid warm start (only
+    # level 0 is reused); dirt at the source's own liveness would cut 0
+    assert st.mode in ("delta", "full")
+    _assert_bit_identical(res, queries.bc_dependencies(g2, 0))
+    g3, _ = apply_ops(g, [(REMV, 0)])
+    res3, st3 = incremental_bc(g3, prior, dirty_vertices(g, g3), 0)
+    assert st3.mode == "full"  # dead source: cut 0
+    _assert_bit_identical(res3, queries.bc_dependencies(g3, 0))
+
+
+def test_service_bc_scores_revived_source_not_unchanged():
+    """Resurrecting a dead vertex gives it a non-empty forward tree, but
+    its cached row is empty and intersects no dirty set — bc_scores must
+    still recompute it (cold row inside the warm sweep)."""
+    g = make_graph(16, 64)
+    g, _ = apply_ops(g, [(PUTV, i) for i in range(8)]
+                     + [(PUTE, 0, 1, 1.0), (PUTE, 1, 2, 1.0)])
+    g, _ = apply_ops(g, [(REMV, 5)])
+    svc = GraphService(g, batch_size=4)
+    svc.bc_scores()
+    svc.submit_many([(PUTV, 5), (PUTE, 5, 1, 1.0)])
+    svc.flush()
+    scores, _ = svc.bc_scores()
+    assert svc.bc_scores_stats["unchanged"] == 0
+    ref, _ = GraphService(svc.ring.latest.state).bc_scores()
+    a, b = np.asarray(scores), np.asarray(ref)
+    assert np.array_equal(np.isnan(a), np.isnan(b))
+    assert np.array_equal(np.nan_to_num(a), np.nan_to_num(b))
+
+
+def test_service_bc_scores_delta_bit_identical():
+    """GraphService.bc_scores warm-starts all-source BC through the
+    per-source level cut and stays bit-identical to a cold recompute."""
+    rng = np.random.default_rng(21)
+    svc = _service(rng)
+    svc.bc_scores()
+    svc.submit_many([(PUTE, 3, 9, 2.0), (REME, 5, 11), (PUTE, 40, 7, 1.0)])
+    svc.flush()
+    scores, ver = svc.bc_scores()
+    assert svc.bc_scores_stats["delta"] == 1
+    cold = GraphService(svc.ring.latest.state)
+    ref, _ = cold.bc_scores()
+    a, b = np.asarray(scores), np.asarray(ref)
+    assert np.array_equal(np.isnan(a), np.isnan(b))
+    assert np.array_equal(np.nan_to_num(a), np.nan_to_num(b))
 
 
 def test_incremental_sssp_negative_cycle_matches_full():
@@ -361,22 +463,24 @@ def test_service_bc_supports_cn_double_collect():
 
 
 def test_service_bc_cache_semantics_match_bfs():
-    """BC is a cached query kind: unchanged on untouched commits, full
-    recompute (bit-identical to fresh) once the reached region moves."""
+    """BC is a cached query kind with the full unchanged/delta/full ladder:
+    every mode is bit-identical to a fresh ``bc_dependencies``."""
     rng = np.random.default_rng(16)
     svc = _service(rng)
     r0 = svc.query("bc", 0)
     assert r0.mode == "full"
     r1 = svc.query("bc", 0)  # nothing committed since
     assert r1.mode == "unchanged" and r1.result is r0.result
-    for _ in range(3):
+    modes = set()
+    for _ in range(6):
         svc.submit_many(_random_commit(rng, vertex_churn=False))
         svc.flush()
         r = svc.query("bc", 0)
-        assert r.mode in ("unchanged", "full")
+        modes.add(r.mode)
         assert r.version == svc.version
         _assert_bit_identical(
             r.result, queries.bc_dependencies(svc.ring.latest.state, 0))
+    assert "delta" in modes  # the level-cut path actually exercised
 
 
 def test_service_bc_unchanged_outside_reached_region():

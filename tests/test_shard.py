@@ -31,10 +31,15 @@ from repro.shard import (
     bc_batched,
     bfs,
     build_sharded_view,
+    delta_bc_sharded,
+    delta_bfs_sharded,
+    delta_sssp_sharded,
     gather_view,
     refresh_sharded_view,
+    refresh_stats,
     sharded_occupancy_stats,
     sssp,
+    validate_incremental_sharded,
 )
 
 
@@ -114,6 +119,115 @@ def test_bc_source_padding_and_default_sources():
     scores = jnp.sum(jnp.where(ok[:, None], d, 0.0), axis=0)
     assert np.allclose(np.asarray(r_all.scores), np.asarray(scores),
                        rtol=1e-5, atol=1e-5)
+
+
+def test_sharded_parents_match_local_queries():
+    """Full sharded bfs/sssp carry traversal-tree parents identical to the
+    per-source COO queries (the arrays the delta poison step walks)."""
+    g = _tombstoned_graph()
+    mesh = as_graph_mesh()
+    view = build_sharded_view(g, mesh, tile=16)
+    srcs = jnp.asarray([0, 1, 7, 33, 63], jnp.int32)
+    r, r2 = bfs(view, g, srcs), sssp(view, g, srcs)
+    for i, s in enumerate([0, 1, 7, 33, 63]):
+        assert np.array_equal(np.asarray(r.parent[i]),
+                              np.asarray(queries.bfs(g, s).parent)), s
+        assert np.array_equal(np.asarray(r2.parent[i]),
+                              np.asarray(queries.sssp(g, s).parent)), s
+
+
+def test_sharded_delta_queries_single_device():
+    """Delta bfs/sssp/bc on a 1-device mesh: bit-identical to (a) a full
+    sharded recompute and (b) the local engine's per-source delta path."""
+    from repro.engine import delta_bfs, delta_sssp
+
+    g = _tombstoned_graph()
+    mesh = as_graph_mesh()
+    view = build_sharded_view(g, mesh, tile=16)
+    srcs = jnp.asarray([0, 1, 7, 33, 63], jnp.int32)
+    pb, ps = bfs(view, g, srcs), sssp(view, g, srcs)
+    pc = bc_batched(view, g, srcs, src_chunk=2)
+    g2, _ = apply_ops(g, [(PUTE, 0, 40, 2.0), (REME, 1, int(g.edst[20])),
+                          (PUTE, 20, 55, 1.0), (REMV, 12)])
+    dirty = dirty_vertices(g, g2)
+    view2 = refresh_sharded_view(g2, view, dirty)
+    db = delta_bfs_sharded(view2, g2, pb, dirty, srcs)
+    ds = delta_sssp_sharded(view2, g2, ps, dirty, srcs)
+    dc = delta_bc_sharded(view2, g2, pc, dirty, srcs, src_chunk=2)
+    assert validate_incremental_sharded(view2, g2, srcs, db, "bfs")
+    assert validate_incremental_sharded(view2, g2, srcs, ds, "sssp")
+    assert validate_incremental_sharded(view2, g2, srcs, dc, "bc",
+                                        src_chunk=2)
+    for i, s in enumerate([0, 1, 7, 33, 63]):
+        lb = delta_bfs(g2, queries.bfs(g, s), dirty, s)
+        assert np.array_equal(np.asarray(db.dist[i]), np.asarray(lb.dist)), s
+        assert np.array_equal(np.asarray(db.parent[i]),
+                              np.asarray(lb.parent)), s
+        ls = delta_sssp(g2, queries.sssp(g, s), dirty, s)
+        assert np.array_equal(np.asarray(ds.dist[i]), np.asarray(ls.dist)), s
+        assert np.array_equal(np.asarray(ds.parent[i]),
+                              np.asarray(ls.parent)), s
+
+
+def test_sharded_delta_revived_source_restarts_cold():
+    """A source that was dead when the prior was cached and resurrected
+    since has an EMPTY prior row — invisible to the level cut and to the
+    unchanged test — and must be recomputed from scratch."""
+    from repro.core import PUTV
+    from repro.engine import GraphService
+    from repro.shard import ShardedGraphService
+
+    g = _tombstoned_graph()  # vertices 7 and 33 are dead
+    mesh = as_graph_mesh()
+    view = build_sharded_view(g, mesh, tile=16)
+    srcs = jnp.asarray([0, 7], jnp.int32)
+    pb = bfs(view, g, srcs)
+    pc = bc_batched(view, g, srcs, src_chunk=2)
+    assert not bool(pb.ok[1])
+    g2, _ = apply_ops(g, [(PUTV, 7), (PUTE, 7, 20, 1.0), (PUTE, 0, 40, 2.0)])
+    dirty = dirty_vertices(g, g2)
+    view2 = refresh_sharded_view(g2, view, dirty)
+    db = delta_bfs_sharded(view2, g2, pb, dirty, srcs)
+    assert validate_incremental_sharded(view2, g2, srcs, db, "bfs")
+    assert bool(db.ok[1]) and int(db.dist[1, 7]) == 0
+    dc = delta_bc_sharded(view2, g2, pc, dirty, srcs, src_chunk=2)
+    assert validate_incremental_sharded(view2, g2, srcs, dc, "bc",
+                                        src_chunk=2)
+    # the service ladder must not answer "unchanged" when the ONLY churn
+    # is the resurrection (no prior-reached vertex is dirty)
+    svc = ShardedGraphService(g, mesh, tile=16, batch_size=4)
+    local = GraphService(g, batch_size=4)
+    svc.query("bfs", [7])
+    ops = [(PUTV, 7), (PUTE, 7, 20, 1.0)]
+    svc.submit_many(ops); local.submit_many(ops)
+    svc.flush(); local.flush()
+    rep = svc.query("bfs", [7])
+    assert rep.mode != "unchanged"
+    lrep = local.query("bfs", 7)
+    assert np.array_equal(np.asarray(rep.result.dist[0]),
+                          np.asarray(lrep.result.dist))
+
+
+def test_batched_refresh_dispatch_counts():
+    """Same-width dirty rows fuse into one shard_map dispatch each batch:
+    strictly fewer dispatches than rows, result identical to a rebuild."""
+    rng = np.random.default_rng(5)
+    g = load_rmat_graph(256, 2000, seed=2)
+    mesh = as_graph_mesh()
+    view = build_sharded_view(g, mesh, tile=16)
+    ops = [(PUTE, int(rng.integers(0, 96)), int(rng.integers(0, 256)), 2.0)
+           for _ in range(40)]
+    g2, _ = apply_ops(g, ops)
+    dirty = dirty_vertices(g, g2)
+    r0, d0 = refresh_stats.rows, refresh_stats.dispatches
+    view2 = refresh_sharded_view(g2, view, dirty)
+    rows = refresh_stats.rows - r0
+    dispatches = refresh_stats.dispatches - d0
+    assert rows > 1 and dispatches < rows
+    full, ref = gather_view(view2), gather_view(
+        build_sharded_view(g2, mesh, tile=16))
+    assert np.array_equal(np.asarray(full.w), np.asarray(ref.w))
+    assert np.array_equal(np.asarray(full.occ), np.asarray(ref.occ))
 
 
 def test_refresh_sharded_view_strategies():
@@ -272,6 +386,127 @@ assert np.array_equal(np.asarray(ldist), np.asarray(r.dist[0]))
 print("QUERIES OK")
 """)
     assert "QUERIES OK" in out
+
+
+def test_sharded_delta_queries_multidevice():
+    """Sharded delta bfs/sssp/bc on a 4-way mesh under churn that poisons
+    vertices across shard boundaries, with tombstones and dead vertices:
+    bit-identical to the local engine's delta path AND to a full sharded
+    recompute on the same snapshot."""
+    out = _run_multidevice(r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import PUTE, REME, REMV, apply_ops, queries
+from repro.core.updates import dirty_vertices
+from repro.data import load_rmat_graph
+from repro.engine import delta_bfs, delta_sssp
+from repro.shard import (as_graph_mesh, build_sharded_view, refresh_sharded_view,
+                         bfs, sssp, bc_batched, delta_bfs_sharded,
+                         delta_sssp_sharded, delta_bc_sharded,
+                         validate_incremental_sharded)
+
+mesh = as_graph_mesh()
+assert mesh.devices.size == 4
+g = load_rmat_graph(64, 400, seed=3)
+g, _ = apply_ops(g, [(REME, int(g.esrc[5]), int(g.edst[5])),
+                     (REMV, 7), (REMV, 33)])  # tombstones + dead vertices
+view = build_sharded_view(g, mesh, tile=16)  # band = 16: shard i owns [16i, 16i+16)
+srcs = jnp.asarray([0, 1, 7, 33, 12, 63, 5, 2], jnp.int32)
+pb, ps = bfs(view, g, srcs), sssp(view, g, srcs)
+pc = bc_batched(view, g, srcs, src_chunk=2)
+
+# churn whose poison crosses shard boundaries: edges from shard 0/1 sources
+# into shard 2/3 bands, plus a mid-band death
+g2, _ = apply_ops(g, [(PUTE, 0, 40, 2.0), (REME, 1, int(g.edst[20])),
+                      (PUTE, 20, 55, 1.0), (REMV, 12), (PUTE, 47, 18, 3.0)])
+dirty = dirty_vertices(g, g2)
+view2 = refresh_sharded_view(g2, view, dirty)
+
+db = delta_bfs_sharded(view2, g2, pb, dirty, srcs)
+ds = delta_sssp_sharded(view2, g2, ps, dirty, srcs)
+dc = delta_bc_sharded(view2, g2, pc, dirty, srcs, src_chunk=2)
+# (b) vs full sharded recompute: every field bit-equal
+assert validate_incremental_sharded(view2, g2, srcs, db, 'bfs')
+assert validate_incremental_sharded(view2, g2, srcs, ds, 'sssp')
+assert validate_incremental_sharded(view2, g2, srcs, dc, 'bc', src_chunk=2)
+# (a) vs the local engine's per-source delta path: dist AND parent bit-equal
+for i, s in enumerate(np.asarray(srcs)):
+    lb = delta_bfs(g2, queries.bfs(g, int(s)), dirty, int(s))
+    assert np.array_equal(np.asarray(db.dist[i]), np.asarray(lb.dist)), s
+    assert np.array_equal(np.asarray(db.parent[i]), np.asarray(lb.parent)), s
+    ls = delta_sssp(g2, queries.sssp(g, int(s)), dirty, int(s))
+    assert np.array_equal(np.asarray(ds.dist[i]), np.asarray(ls.dist)), s
+    assert np.array_equal(np.asarray(ds.parent[i]), np.asarray(ls.parent)), s
+# delta BC vs the local batched warm start on the gathered adjacency
+from repro.core import dense_views
+am2, _, alive2 = dense_views(g2)
+dref, sref, lref, okref = queries.bc_batched_dense(am2, srcs, alive2, src_chunk=2)
+assert np.array_equal(np.asarray(dc.level), np.asarray(lref))
+assert np.array_equal(np.asarray(dc.sigma), np.asarray(sref))
+print("DELTA OK")
+""")
+    assert "DELTA OK" in out
+
+
+def test_sharded_service_delta_ladder_multidevice():
+    """ShardedGraphService on a 4-way mesh climbs unchanged -> delta ->
+    full with results bit-identical to the local GraphService at every
+    step, and bc_scores rides the level-cut delta."""
+    out = _run_multidevice(r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import PUTE, REME, apply_ops
+from repro.data import load_rmat_graph
+from repro.engine import GraphService
+from repro.shard import ShardedGraphService, as_graph_mesh
+
+mesh = as_graph_mesh()
+g = load_rmat_graph(64, 600, seed=5)
+svc = ShardedGraphService(g, mesh, tile=16, batch_size=4)
+local = GraphService(g, batch_size=4)
+
+assert svc.query("bfs", [0, 1]).mode == "full"
+assert svc.query("sssp", [0]).mode == "full"
+local.query("bfs", 0); local.query("sssp", 0)  # prime the local caches
+
+# localized churn inside the reached region: the delta path answers
+ops = [(PUTE, 0, v, 1.0) for v in (9, 11, 13, 15)] + [(REME, 0, 9)]
+svc.submit_many(ops); local.submit_many(ops)
+svc.flush(); local.flush()
+rb = svc.query("bfs", [0, 1])
+assert rb.mode == "delta" and bool(rb.result.agree)
+lb = local.query("bfs", 0)
+assert lb.mode == "delta"
+assert np.array_equal(np.asarray(rb.result.dist[0]), np.asarray(lb.result.dist))
+assert np.array_equal(np.asarray(rb.result.parent[0]), np.asarray(lb.result.parent))
+rs = svc.query("sssp", [0])
+assert rs.mode == "delta"
+ls = local.query("sssp", 0)
+assert np.array_equal(np.asarray(rs.result.dist[0]), np.asarray(ls.result.dist))
+
+# churn outside every cached region: unchanged, however large
+svc.submit_many([(PUTE, 200, 201 + i, 1.0) for i in range(4)])
+svc.flush()
+assert svc.query("bfs", [0, 1]).mode == "unchanged"
+
+# bc_scores: full once, then the level-cut delta, bit-identical to local
+s0, v0 = svc.bc_scores()
+svc.submit_many([(PUTE, 3, 17, 1.0)]); svc.flush()
+s1, v1 = svc.bc_scores()
+assert v1 > v0 and svc.stats.delta >= 3
+ref, _ = GraphService(svc.ring.latest.state).bc_scores()
+a, b = np.asarray(s1), np.asarray(ref)
+assert np.array_equal(np.isnan(a), np.isnan(b))
+assert np.allclose(np.nan_to_num(a), np.nan_to_num(b), rtol=1e-4, atol=1e-4)
+
+# cn double collect over the delta path still validates
+svc.submit_many([(PUTE, 0, 21, 1.0)]); local.submit_many([(PUTE, 0, 21, 1.0)])
+svc.flush(); local.flush()
+rcn = svc.query("sssp", [0], mode="cn")
+assert rcn.validated
+lcn = local.query("sssp", 0, mode="cn")
+assert np.array_equal(np.asarray(rcn.result.dist[0]), np.asarray(lcn.result.dist))
+print("LADDER OK")
+""")
+    assert "LADDER OK" in out
 
 
 def test_sharded_service_multidevice():
