@@ -17,7 +17,12 @@ scaling ratio only on a real mesh.  What it reports:
     shard's masked kernels elide;
   * **collective bytes per level** — measured from the compiled HLO
     (``launch.dryrun.parse_collective_bytes`` on the while-loop body) next
-    to the formula value S x Vp x (1B bfs | 4B sssp).
+    to the formula value S x Vp x (1B bfs | 4B sssp);
+  * **ring vs gather BC** — the SUMMA band-rotation BC (``bc_mode="ring"``)
+    against the all-gather oracle: wall time, per-device temp bytes off
+    ``memory_analysis`` (gather materialises the O(Vp^2) grid, ring holds
+    O(Vp^2/n)), and the measured ``collective-permute`` bytes next to the
+    O(Vp^2/n)-per-rotation formula.
 
 Prints the usual ``name,us_per_call,derived`` CSV rows and always writes
 ``BENCH_shard.json``.
@@ -174,16 +179,32 @@ def bench_view(mesh, g, n, hot_frac, seed):
     }
 
 
-def _collective_bytes(mesh, view, g, kind, srcs):
+def _compiled(mesh, view, g, kind, srcs, src_chunk=None):
+    fn = query_fn(mesh, kind, view.tile, False, src_chunk)
+    return fn.lower(view.w, view.occ, g.alive, g.ecnt, srcs,
+                    g.version).compile()
+
+
+def _collective_bytes(mesh, view, g, kind, srcs, src_chunk=None):
     """Per-level collective bytes off the compiled HLO (the while body's
-    all-reduce appears once in the program text)."""
+    all-reduce — and the ring's band permutes — appear once per loop in
+    the program text)."""
     # Deferred import: dryrun prepends its own 512-device XLA flag on
     # import, which must never race this benchmark's --devices flag.
     from repro.launch.dryrun import parse_collective_bytes
-    fn = query_fn(mesh, kind, view.tile)
-    txt = fn.lower(view.w, view.occ, g.alive, g.ecnt, srcs,
-                   g.version).compile().as_text()
+    txt = _compiled(mesh, view, g, kind, srcs, src_chunk).as_text()
     return parse_collective_bytes(txt)
+
+
+def _temp_bytes(mesh, view, g, kind, srcs, src_chunk=None):
+    """Per-device temp (scratch) bytes of the compiled program — where the
+    gather path's materialised Vp^2 grid vs the ring path's O(Vp^2/n) band
+    shows up."""
+    try:
+        ma = _compiled(mesh, view, g, kind, srcs, src_chunk).memory_analysis()
+        return int(ma.temp_size_in_bytes)
+    except Exception:  # pragma: no cover - backend without memory stats
+        return None
 
 
 def bench_queries(mesh, view, g, n_sources, bc_chunk):
@@ -229,6 +250,45 @@ def bench_queries(mesh, view, g, n_sources, bc_chunk):
     out["bc"] = {"t_sharded_s": round(t_s, 4), "t_local_s": round(t_l, 4),
                  "speedup_sharded_vs_local": round(t_l / t_s, 2),
                  "src_chunk": bc_chunk}
+
+    # ---- ring-mode BC: SUMMA band rotation vs the gathered oracle -----
+    # Crossover economics: gather pays O(Vp^2/n x (n-1)) all-gather bytes
+    # ONCE per query plus O(Vp^2) per-shard memory; ring pays O(Vp^2/n)
+    # permute bytes per rotation, (levels x n) rotations per sweep, but
+    # holds per-shard memory at O(Vp^2/n).  On host-platform placeholder
+    # devices the timing ratio is pure program overhead — the memory and
+    # byte columns are the hardware-independent facts.
+    t_r, rr = _time(bc_batched, view, g, srcs, src_chunk=bc_chunk,
+                    bc_mode="ring")
+    assert np.array_equal(np.asarray(rr.level), np.asarray(r.level)), \
+        "ring level drift"
+    assert np.array_equal(np.asarray(rr.sigma), np.asarray(r.sigma)), \
+        "ring sigma drift"
+    assert np.allclose(np.asarray(rr.scores), np.asarray(r.scores),
+                       rtol=1e-4, atol=1e-4), "ring score drift"
+    coll = _collective_bytes(mesh, view, g, "bc_ring", srcs,
+                             src_chunk=bc_chunk)
+    permute = coll.get("collective-permute", 0)
+    n_dev = view.n_shards
+    per_rot = (view.band * view.vp * 4
+               + view.rows_per_shard * view.n_tiles * 4)  # O(Vp^2/n)
+    mem_g = _temp_bytes(mesh, view, g, "bc", srcs, src_chunk=bc_chunk)
+    mem_r = _temp_bytes(mesh, view, g, "bc_ring", srcs, src_chunk=bc_chunk)
+    _row("shard_bc_ring", t_r * 1e6,
+         f"gather={t_s * 1e6:.1f}us;ring_vs_gather={t_s / t_r:.2f}x;"
+         f"permute_bytes={permute};per_rot_formula={per_rot};"
+         f"temp_bytes={mem_r}vs{mem_g}")
+    out["bc"]["ring"] = {
+        "t_ring_s": round(t_r, 4),
+        "ring_vs_gather": round(t_s / t_r, 2),
+        "rotations_per_product": n_dev,
+        "permute_bytes_hlo": permute,
+        "permute_bytes_per_rotation_formula": per_rot,
+        "temp_bytes_gather": mem_g,
+        "temp_bytes_ring": mem_r,
+        "temp_bytes_ratio": (round(mem_g / mem_r, 2)
+                             if mem_g and mem_r else None),
+    }
     return out
 
 
@@ -315,6 +375,24 @@ def bench_incremental(mesh, view, g, n, n_sources, bc_chunk, seed,
                  "speedup_delta_vs_full": round(t_fc / t_dc, 2),
                  "dirty_frac": round(frac3, 4),
                  "deep_dirty_vertices": int(deep.size)}
+
+    # Ring-mode delta BC: the prior's forward trees are mode-independent
+    # (level/sigma bit-identical), so the gather prior warm-starts the
+    # ring sweep directly; the cuts and per-source resume counters agree
+    # by construction.
+    t_dr, dr = _time(delta_bc_sharded, view3, g3, prior_c, dirty3, srcs,
+                     src_chunk=bc_chunk, bc_mode="ring")
+    t_fr, fr = _time(bc_batched, view3, g3, srcs, src_chunk=bc_chunk,
+                     bc_mode="ring")
+    assert np.array_equal(np.asarray(dr.level), np.asarray(fc.level))
+    assert np.array_equal(np.asarray(dr.sigma), np.asarray(fc.sigma))
+    assert np.array_equal(np.asarray(dr.scores), np.asarray(fr.scores))
+    _row("shard_bc_incr_ring", t_dr * 1e6,
+         f"full_ring_us={t_fr * 1e6:.1f};speedup={t_fr / t_dr:.2f}x;"
+         f"dirty_frac={frac3:.3f}")
+    out["bc"]["ring"] = {"t_delta_s": round(t_dr, 4),
+                         "t_full_s": round(t_fr, 4),
+                         "speedup_delta_vs_full": round(t_fr / t_dr, 2)}
 
     # ---- crossover: uniform hot range, growing dirty fraction ---------
     crossover = []
@@ -418,6 +496,7 @@ def main(a):
             "sharded_delta_vs_full": {
                 k: incr[k]["speedup_delta_vs_full"]
                 for k in ("bfs", "sssp", "bc")},
+            "bc_ring_vs_gather": q["bc"]["ring"]["ring_vs_gather"],
         },
         "verified": True,  # every timed query is cross-checked above
     }

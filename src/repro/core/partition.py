@@ -12,8 +12,10 @@ double-collect version check is psum-validated so all shards agree on the
 snapshot.
 
 ``make_distributed_query`` builds the jitted shard_map entry point for a
-given mesh and query kind (``"bfs"`` | ``"sssp"`` | ``"bc"``); it is also
-what ``launch/dryrun.py`` lowers for the graph-engine dry-run cells.  The
+given mesh and query kind (``"bfs"`` | ``"sssp"`` | ``"bc"`` |
+``"bc_ring"`` — the SUMMA-style band-rotation BC that never gathers the
+adjacency); it is also what ``launch/dryrun.py`` lowers for the
+graph-engine dry-run cells.  The
 pre-PR-3 round-robin *edge* sharding survives in ``partition_legacy`` as
 the cross-implementation oracle for the distributed tests.
 """
@@ -33,7 +35,7 @@ from .tiles import TILE
 
 from .partition_legacy import shard_edges  # noqa: F401  (legacy oracle API)
 
-SUPPORTED_KINDS = ("bfs", "sssp", "bc")
+SUPPORTED_KINDS = ("bfs", "sssp", "bc", "bc_ring")
 
 
 def make_distributed_query(mesh: Mesh, kind: str = "bfs", *,

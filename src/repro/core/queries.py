@@ -429,14 +429,34 @@ def dense_views(state: GraphState):
 
 # ------------------------- batched Brandes (BC) ---------------------------
 
-def _bc_sweep(a: jax.Array, at: jax.Array, srcs: jax.Array, alive: jax.Array,
-              use_kernel: bool, amask, amask_t, tile: int,
-              prior_level=None, prior_sigma=None, cut=None):
-    """One forward+backward Brandes sweep over a batch of sources.
+def bc_sweep_ops(fwd_mm, bwd_mm, srcs: jax.Array, alive: jax.Array, V: int,
+                 prior_level=None, prior_sigma=None, cut=None,
+                 sync_any=None, sync_max=None):
+    """One forward+backward Brandes sweep over *abstract* semiring products.
 
-    Operands are already prepared (``a`` = alive-masked f32 adjacency,
-    ``at`` its transpose); this is the per-chunk building block both
-    ``bc_batched_dense`` and the sharded BC (``repro.shard.queries``) call.
+    The sweep never touches the adjacency itself — it only calls
+
+      * ``fwd_mm(x)``  with the frontier-masked sigma ``x: f32[S, V]`` and
+        expects the counting product ``x @ A``  (``f32[S, V]``);
+      * ``bwd_mm(g)``  with the dependency flow ``g: f32[S, V]`` and
+        expects ``g @ A^T`` (``f32[S, V]``)
+
+    — which is what lets one sweep body serve both the dense chunked path
+    (``bc_batched_dense``: one ``count_mm`` against the full matrix) and
+    the sharded SUMMA-style ring path (``repro.shard.queries``: the
+    products are assembled from O(V^2/n) bands rotated around the mesh
+    with ``lax.ppermute``, no adjacency ever materialised per shard).
+    Levels and sigma are bit-identical across providers: sigma counts are
+    exact integers in f32 (< 2^24), so the band summation order cannot
+    change them; only the backward ``delta`` sees f32 reassociation.
+
+    ``sync_any``/``sync_max`` (default: identity) merge the loop-control
+    predicates across whatever the products span.  A provider whose
+    ``fwd_mm``/``bwd_mm`` contain collectives (the ring) MUST run its
+    level loops in lock-step on every shard — a shard that exited early
+    would abandon the rotation mid-ring — so the ring passes ``pmax``
+    reductions here; extra lock-step iterations are exact no-ops (empty
+    frontiers add zeros).
 
     ``prior_level``/``prior_sigma``/``cut`` warm-start the forward sweep
     per source (the level-cut delta-BC path): levels strictly below
@@ -449,7 +469,10 @@ def _bc_sweep(a: jax.Array, at: jax.Array, srcs: jax.Array, alive: jax.Array,
     cold run's state at that pass, hence levels/sigma stay bit-identical
     and the (full) backward sweep reproduces delta bit-identically too.
     """
-    V = a.shape[0]
+    if sync_any is None:
+        sync_any = lambda p: p  # noqa: E731
+    if sync_max is None:
+        sync_max = lambda x: x  # noqa: E731
     S = srcs.shape[0]
     ok = alive[jnp.clip(srcs, 0, V - 1)] & (srcs >= 0) & (srcs < V)
     cold_front = jax.nn.one_hot(srcs, V, dtype=jnp.float32) * ok[:, None]
@@ -472,27 +495,31 @@ def _bc_sweep(a: jax.Array, at: jax.Array, srcs: jax.Array, alive: jax.Array,
         lvl0 = jnp.maximum(cut - 1, 0)
     front0 = (level0 == lvl0[:, None]).astype(jnp.float32)
 
-    # Forward phase: levels + shortest-path counts.
+    # Forward phase: levels + shortest-path counts.  The continue flag is
+    # computed in the body and carried (rather than derived in the cond)
+    # so a collective sync_any stays legal — while-loop conds must be
+    # collective-free.
+    def _more(front, lvl):
+        return sync_any((front > 0).any() & (lvl < V).any())
+
     def fcond(c):
-        _, _, front, lvl = c
-        return (front > 0).any() & (lvl < V).any()
+        return c[4]
 
     def fbody(c):
-        level, sigma, front, lvl = c
+        level, sigma, front, lvl, _ = c
         # One counting product per level does both jobs: frontier sigma is
         # >= 1 on every frontier vertex and counts are exact integers in
         # f32 (below 2^24), so adds > 0 is precisely the bool_mm frontier
         # hit — no separate boolean product needed.
-        adds = semiring.count_mm(jnp.where(front > 0, sigma, 0.0), a,
-                                 use_kernel=use_kernel, amask=amask,
-                                 tile=tile)
+        adds = fwd_mm(jnp.where(front > 0, sigma, 0.0))
         newly = (adds > 0) & (level < 0)
         sigma = jnp.where(newly, adds, sigma)
         level = jnp.where(newly, lvl[:, None] + 1, level)
-        return level, sigma, newly.astype(jnp.float32), lvl + 1
+        front = newly.astype(jnp.float32)
+        return level, sigma, front, lvl + 1, _more(front, lvl + 1)
 
-    level, sigma, _, _ = lax.while_loop(
-        fcond, fbody, (level0, sigma0, front0, lvl0))
+    level, sigma, _, _, _ = lax.while_loop(
+        fcond, fbody, (level0, sigma0, front0, lvl0, _more(front0, lvl0)))
 
     # Backward phase, deepest level first.  g carries the per-vertex
     # dependency flow of the level below; pulling it across edges is a
@@ -506,16 +533,17 @@ def _bc_sweep(a: jax.Array, at: jax.Array, srcs: jax.Array, alive: jax.Array,
     def bbody(c):
         delta, l = c
         g = jnp.where(level == l + 1, (1.0 + delta) / sig_safe, 0.0)
-        pulled = semiring.count_mm(g, at, use_kernel=use_kernel,
-                                   amask=amask_t, tile=tile)
+        pulled = bwd_mm(g)
         delta = delta + jnp.where(level == l, sigma * pulled, 0.0)
         return delta, l - 1
 
     # The deepest *edge* layer is (max level - 1) -> (max level); with
     # per-source resume passes the loop counter no longer bounds the depth,
-    # so take it off the levels themselves.
+    # so take it off the levels themselves.  sync_max keeps lock-step
+    # providers iterating to the deepest level of ANY shard's chunk — the
+    # extra iterations pull zero flow.
     delta, _ = lax.while_loop(
-        bcond, bbody, (jnp.zeros_like(sigma), jnp.max(level) - 1))
+        bcond, bbody, (jnp.zeros_like(sigma), sync_max(jnp.max(level)) - 1))
     delta = jnp.where(level == 0, 0.0, delta)  # sources contribute nothing
     return delta, sigma, level, ok
 
@@ -559,11 +587,41 @@ def bc_batched_dense(adj_mask: jax.Array, srcs: jax.Array, alive: jax.Array,
     its cached levels/sigma strictly below its cut and re-runs the forward
     only from there (the backward sweep always runs in full — dependency
     flow crosses the cut upward).  Results are bit-identical to the cold
-    call on every source (see ``_bc_sweep``).
+    call on every source (see ``bc_sweep_ops``).
     """
     a = (adj_mask & alive[:, None] & alive[None, :]).astype(jnp.float32)
     at = a.T
     amask_t = None if amask is None else amask.T
+
+    def fwd_mm(x):
+        return semiring.count_mm(x, a, use_kernel=use_kernel, amask=amask,
+                                 tile=tile)
+
+    def bwd_mm(g):
+        return semiring.count_mm(g, at, use_kernel=use_kernel, amask=amask_t,
+                                 tile=tile)
+
+    return bc_batched_ops(fwd_mm, bwd_mm, srcs, alive, a.shape[0],
+                          src_chunk=src_chunk, prior_level=prior_level,
+                          prior_sigma=prior_sigma, cut=cut)
+
+
+def bc_batched_ops(fwd_mm, bwd_mm, srcs: jax.Array, alive: jax.Array, V: int,
+                   *, src_chunk: int | None = None,
+                   prior_level: jax.Array | None = None,
+                   prior_sigma: jax.Array | None = None,
+                   cut: jax.Array | None = None,
+                   sync_any=None, sync_max=None):
+    """The chunked batched-Brandes driver over abstract semiring products.
+
+    Exactly ``bc_batched_dense``'s source-chunking loop (one full
+    forward+backward ``bc_sweep_ops`` per chunk, tail chunk ragged, warm
+    state sliced per chunk) but consuming ``fwd_mm``/``bwd_mm`` providers
+    instead of a materialised adjacency — the hook the sharded ring BC
+    uses to run the identical per-chunk sweep over rotated O(V^2/n) bands.
+    ``sync_any``/``sync_max`` are forwarded to every chunk's sweep (see
+    ``bc_sweep_ops``).
+    """
     S = srcs.shape[0]
     warm = prior_level is not None
     if warm:
@@ -572,15 +630,16 @@ def bc_batched_dense(adj_mask: jax.Array, srcs: jax.Array, alive: jax.Array,
                              "and cut together")
         cut = jnp.broadcast_to(jnp.asarray(cut, jnp.int32), (S,))
     if src_chunk is None or src_chunk >= S:
-        return _bc_sweep(a, at, srcs, alive, use_kernel, amask, amask_t,
-                         tile, prior_level, prior_sigma, cut)
+        return bc_sweep_ops(fwd_mm, bwd_mm, srcs, alive, V,
+                            prior_level, prior_sigma, cut,
+                            sync_any, sync_max)
     if src_chunk < 1:
         raise ValueError(f"src_chunk must be >= 1, got {src_chunk}")
-    parts = [_bc_sweep(a, at, srcs[lo:lo + src_chunk], alive, use_kernel,
-                       amask, amask_t, tile,
-                       prior_level[lo:lo + src_chunk] if warm else None,
-                       prior_sigma[lo:lo + src_chunk] if warm else None,
-                       cut[lo:lo + src_chunk] if warm else None)
+    parts = [bc_sweep_ops(fwd_mm, bwd_mm, srcs[lo:lo + src_chunk], alive, V,
+                          prior_level[lo:lo + src_chunk] if warm else None,
+                          prior_sigma[lo:lo + src_chunk] if warm else None,
+                          cut[lo:lo + src_chunk] if warm else None,
+                          sync_any, sync_max)
              for lo in range(0, S, src_chunk)]
     return tuple(jnp.concatenate([p[i] for p in parts], axis=0)
                  for i in range(4))

@@ -207,13 +207,16 @@ def run_graph_cell(multi_pod: bool, out_dir: str = OUT_DIR,
     """The paper's own workload on the production mesh: the sharded
     tile-grid engine's distributed BFS/SSSP/BC over a Table-1-scale graph
     (131072 vertices; the tile grid shards 512 rows of the 64 GiB padded
-    weight matrix per chip).  BC all-gathers the row bands per shard, so
-    its cell compiles at a smaller vcap — note the grid pads vcap up to a
-    multiple of tile x n_devices (8 MiB-row granularity at 256+ devices),
-    so each cell records the ``vp`` it actually compiled at and the
-    per-device numbers must be read against vp, not vcap.  Collective
-    bytes per level (the O(S x vcap) frontier merges) land in the
-    ``collectives`` section via the HLO parser."""
+    weight matrix per chip).  Gather-mode BC all-gathers the row bands per
+    shard, so its cell compiles at a smaller vcap; ring-mode BC
+    (``bc_ring``, the SUMMA band rotation) keeps per-shard adjacency at
+    O(Vp^2/n) and compiles at the FULL vcap like bfs/sssp — note the grid
+    pads vcap up to a multiple of tile x n_devices (8 MiB-row granularity
+    at 256+ devices), so each cell records the ``vp`` it actually compiled
+    at and the per-device numbers must be read against vp, not vcap.
+    Collective bytes per level (the O(S x vcap) frontier merges, and the
+    ring's O(Vp^2/n) band permutes) land in the ``collectives`` section
+    via the HLO parser."""
     from repro.core.partition import (
         make_distributed_query, distributed_query_specs)
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
@@ -222,7 +225,7 @@ def run_graph_cell(multi_pod: bool, out_dir: str = OUT_DIR,
     rec = {"arch": "graph_engine", "mesh": mesh_name,
            "vcap": vcap, "bc_vcap": bc_vcap, "n_sources": n_sources,
            "n_devices": int(mesh.devices.size)}
-    for query in ("bfs", "sssp", "bc"):
+    for query in ("bfs", "sssp", "bc", "bc_ring"):
         v = bc_vcap if query == "bc" else vcap
         fn, in_sh, _ = make_distributed_query(mesh, query)
         sds = distributed_query_specs(v, mesh, n_sources=n_sources)

@@ -18,6 +18,7 @@ from .tile_shard import (  # noqa: F401
     sharded_occupancy_stats,
 )
 from .queries import (  # noqa: F401
+    BC_MODES,
     ShardedBCResult,
     ShardedBFSResult,
     ShardedSSSPResult,

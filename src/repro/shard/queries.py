@@ -12,14 +12,19 @@ frontiers:
             (S x Vp bytes per level);
   * SSSP  — f32 min-merge (``-pmax(-x)``) of the per-band relax candidates
             (4 x S x Vp bytes per level);
-  * BC    — the **source axis** is sharded instead: one ``all_gather`` of
-            the row bands rebuilds the full grid per shard (Vp^2/n x 4
-            bytes, once per query, not per level), then each shard runs the
-            chunked batched-Brandes building block
-            (``core.queries.bc_batched_dense``) over its own S/n sources,
-            holding only its sources' S/n x Vp level/sigma/delta state —
-            the "BC at larger scale" decomposition.  One final psum merges
-            the per-vertex scores.
+  * BC    — the **source axis** is sharded instead, each shard running the
+            chunked batched-Brandes sweep over its own S/n sources (S/n x
+            Vp level/sigma/delta state — the "BC at larger scale"
+            decomposition) with one final psum merging the per-vertex
+            scores.  How a shard sees the adjacency is the ``bc_mode``
+            knob: ``"gather"`` all-gathers the row bands once per query
+            (full O(Vp^2) grid per shard, zero per-level collectives — the
+            oracle path), ``"ring"`` keeps only the shard's own O(Vp^2/n)
+            band and SUMMA-style rotates bands around the mesh with
+            ``lax.ppermute``, one revolution per level step, partial
+            products accumulating (forward) / assembling (backward)
+            between hops (``_ring_mms``) — per-shard memory stays
+            O(Vp^2/n) at the cost of O(Vp^2/n) permute bytes per rotation.
 
 Collective bytes per level are O(S x vcap), independent of E — exactly the
 paper's property that queries validate against vertex metadata, not edges.
@@ -74,7 +79,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import semiring
 from repro.core.graph_state import INF, GraphState
 from repro.core.queries import (
+    _edge_views,
     bc_batched_dense,
+    bc_batched_ops,
     bc_level_cut,
     bfs_tree_parents,
     sssp_tree_parents,
@@ -155,13 +162,20 @@ def _bfs_body(w_local, occ_local, alive, ecnt, srcs, version, *,
 
 def _sssp_body(w_local, occ_local, alive, ecnt, srcs, version, *,
                ax, tile, use_kernel):
-    """Cold Bellman-Ford == the warm re-relax from the one-hot sources."""
+    """Cold Bellman-Ford == the warm re-relax from the one-hot sources.
+
+    The pass-0 activity seed is the finite rows of ``dist0`` — only a
+    source vertex can relax anything on the first pass, so bands holding
+    no source skip their product until relaxation reaches them (the
+    band-level frontier the activity tracking then maintains).
+    """
     vp = w_local.shape[1]
     vcap = alive.shape[0]
     _, src_hot = _cold_srcs(alive, srcs, vp, vcap)
     dist0 = jnp.where(src_hot, 0.0, INF)
     ok, changed, dist, val_ecnt, agree = _sssp_delta_body(
         w_local, occ_local, alive, ecnt, srcs, version, dist0,
+        (dist0 < INF).any(axis=0),
         ax=ax, tile=tile, use_kernel=use_kernel)
     return ok & ~changed, changed, dist, val_ecnt, agree
 
@@ -181,9 +195,16 @@ def _bfs_delta_body(w_local, occ_local, alive, ecnt, srcs, version, dist0,
     query.  Same band bool products and ONE int8 pmax per level as
     ``_bfs_body`` — staying on the boolean formulation (sgemm/MXU) is the
     whole point of cutting by level instead of re-relaxing min-plus.
+
+    Per-shard early-exit: a shard whose band rows hold NO frontier vertex
+    this level skips the band product entirely (its bool product of a zero
+    frontier is exactly zero) but still joins the per-level pmax — the
+    common case when a deep level cut confines the resumed frontier to a
+    few shards' bands.
     """
     vp = w_local.shape[1]
     vcap = alive.shape[0]
+    S = srcs.shape[0]
     alivep, lo, edge = _band_views(w_local, alive, ax)
     a_local = edge.astype(jnp.float32)
     band = w_local.shape[0]
@@ -198,8 +219,11 @@ def _bfs_delta_body(w_local, occ_local, alive, ecnt, srcs, version, dist0,
     def body(c):
         dist, front, lvl = c
         fk = lax.dynamic_slice_in_dim(front, lo, band, axis=1)
-        part = semiring.bool_mm(fk, a_local, use_kernel=use_kernel,
-                                amask=occ_local, tile=tile)
+        part = lax.cond(
+            (fk > 0).any(),
+            lambda: semiring.bool_mm(fk, a_local, use_kernel=use_kernel,
+                                     amask=occ_local, tile=tile),
+            lambda: jnp.zeros((S, vp), jnp.float32))
         hit = lax.pmax(part.astype(jnp.int8), ax) > 0  # one int8 pmax / level
         newly = hit & (dist < 0)
         dist = jnp.where(newly, lvl[:, None] + 1, dist)
@@ -212,7 +236,7 @@ def _bfs_delta_body(w_local, occ_local, alive, ecnt, srcs, version, dist0,
 
 
 def _sssp_delta_body(w_local, occ_local, alive, ecnt, srcs, version, dist0,
-                     *, ax, tile, use_kernel):
+                     active0, *, ax, tile, use_kernel):
     """Warm-started min-plus fixed point: delta SSSP's re-relax.
 
     ``dist0`` (replicated f32[S, Vp]) carries the poison step's keep-set
@@ -221,6 +245,18 @@ def _sssp_delta_body(w_local, occ_local, alive, ecnt, srcs, version, dist0,
     ~(affected-region diameter) passes instead of ~(graph diameter).  Same
     band products and ONE f32 min-merge per level as the full
     ``_sssp_body`` loop.
+
+    Per-shard early-exit via ``active0`` (replicated bool[Vp], the
+    suspect-row seed — see ``_sssp_delta_dist0``): a band whose rows hold
+    no active vertex contributes ``INF`` without running its product, but
+    still joins the min-merge collective.  Sound because a row's
+    contribution can only differ from what ``dist`` already absorbed when
+    the row's distance changed since the pass that produced it (weights
+    are fixed within a query) — so after pass 0, activity is exactly the
+    vertices the previous min-merge improved, which every shard derives
+    identically from the replicated post-collective distances.  Skipped
+    bands therefore never change ``dist``, the pass count, or the
+    exit-changed negative-cycle flag: results stay bit-identical.
     """
     band, vp = w_local.shape
     vcap = alive.shape[0]
@@ -231,21 +267,26 @@ def _sssp_delta_body(w_local, occ_local, alive, ecnt, srcs, version, dist0,
     ok = alivep[jnp.clip(srcs, 0, vp - 1)] & (srcs >= 0) & (srcs < vcap)
 
     def cond(c):
-        _, changed, it = c
+        _, changed, _, it = c
         return changed.any() & (it < vcap)
 
     def body(c):
-        dist, _, it = c
+        dist, _, act, it = c
         dk = lax.dynamic_slice_in_dim(dist, lo, band, axis=1)
-        cand = semiring.minplus_mm(dk, big_local, use_kernel=use_kernel,
-                                   amask=occ_local, tile=tile)
+        cand = lax.cond(
+            lax.dynamic_slice_in_dim(act, lo, band).any(),
+            lambda: semiring.minplus_mm(dk, big_local, use_kernel=use_kernel,
+                                        amask=occ_local, tile=tile),
+            lambda: jnp.full((S, vp), INF))
         cand = -lax.pmax(-cand, ax)  # one f32 min-merge / level
         nd = jnp.minimum(dist, cand)
-        return nd, (nd < dist).any(axis=1), it + 1
+        improved = nd < dist
+        return nd, improved.any(axis=1), improved.any(axis=0), it + 1
 
     # Exit-changed == negative cycle, exactly as in _sssp_body.
-    dist, changed, _ = lax.while_loop(
-        cond, body, (dist0, jnp.ones((S,), jnp.bool_), jnp.int32(0)))
+    dist, changed, _, _ = lax.while_loop(
+        cond, body, (dist0, jnp.ones((S,), jnp.bool_), active0,
+                     jnp.int32(0)))
     reached_any = (dist[:, :vcap] < INF).any(axis=0)
     val_ecnt = jnp.where(reached_any, ecnt, 0)
     return ok, changed, dist, val_ecnt, _version_agree(version, ax)
@@ -310,9 +351,157 @@ def _bc_delta_body(w_local, occ_local, alive, ecnt, srcs_local, version,
     return ok, delta, sigma, level, scores, val_ecnt, _version_agree(version, ax)
 
 
+# ------------------------------- BC: ring ----------------------------------
+
+def _ring_mms(a_local, occ_local, *, ax, tile, use_kernel):
+    """SUMMA-style semiring-product providers over a rotating band ring.
+
+    The gather-mode BC materialises the full ``Vp x Vp`` adjacency per
+    shard; here each shard ever holds only its own ``O(Vp^2/n)`` band plus
+    the one in-flight band a ``lax.ppermute`` hop is delivering.  Per
+    product the ring makes one revolution — ``n`` partial products with
+    ``n - 1`` hops, each step computing the held band's tile-skipping
+    partial and then passing the band (and its occupancy grid, the
+    kernels' ``amask``) to the next shard; the last partial is peeled out
+    of the loop so no hop is spent returning bands home (every product
+    restarts from the shard's own closed-over band):
+
+      * ``fwd_mm(x)``: holding band ``b`` (rows ``[b*band, (b+1)*band)``),
+        the contribution to ``x @ A`` is ``x[:, rows(b)] @ A[rows(b), :]``
+        — partials ACCUMULATE across rotations (the k axis is sharded).
+        The sum is exact for sigma (integer counts in f32), so the ring's
+        band-major summation order is invisible to levels/sigma.
+      * ``bwd_mm(g)``: the contribution to ``g @ A^T`` is the full-k
+        product ``g @ A[rows(b), :].T`` covering output columns
+        ``rows(b)`` — partials ASSEMBLE by column block, each an intact
+        dot against the transposed band (occupancy grid transposed too).
+
+    Collective bytes per rotation: ``band x Vp x 4`` (f32 weights band)
+    ``+ rows x nt x 4`` (int32 occupancy band) = O(Vp^2/n) — the figure
+    the collective-byte regression test pins against the compiled HLO.
+
+    Both providers contain collectives, so every shard must call them the
+    same number of times: the callers run their level loops in lock-step
+    via ``bc_sweep_ops``'s ``sync_any``/``sync_max`` hooks
+    (``_ring_sync``).
+    """
+    band, vp = a_local.shape
+    n = vp // band
+    perm = [(j, (j + 1) % n) for j in range(n)]
+    i = lax.axis_index(ax)
+
+    def rotate(ab, ob):
+        return lax.ppermute(ab, ax, perm), lax.ppermute(ob, ax, perm)
+
+    def _revolve(combine, init):
+        """n partials, n - 1 hops: loop over the first n - 1 held bands
+        (combine, then rotate), then combine the last held band with no
+        hop — the loop-carried bands are discarded, so a homing rotation
+        would be pure wasted ICI traffic."""
+
+        def step(t, c):
+            ab, ob, acc = c
+            acc = combine(t, ab, ob, acc)
+            ab, ob = rotate(ab, ob)
+            return ab, ob, acc
+
+        ab, ob, acc = lax.fori_loop(0, n - 1, step,
+                                    (a_local, occ_local, init))
+        return combine(n - 1, ab, ob, acc)
+
+    def fwd_mm(x):
+        def combine(t, ab, ob, acc):
+            b = (i - t) % n  # the band this shard holds at step t
+            xk = lax.dynamic_slice_in_dim(x, b * band, band, axis=1)
+            return acc + semiring.count_mm(xk, ab, use_kernel=use_kernel,
+                                           amask=ob, tile=tile)
+
+        return _revolve(combine, jnp.zeros((x.shape[0], vp), jnp.float32))
+
+    def bwd_mm(g):
+        def combine(t, ab, ob, out):
+            b = (i - t) % n
+            part = semiring.count_mm(g, ab.T, use_kernel=use_kernel,
+                                     amask=ob.T, tile=tile)
+            return lax.dynamic_update_slice(out, part, (0, b * band))
+
+        return _revolve(combine, jnp.zeros((g.shape[0], vp), jnp.float32))
+
+    return fwd_mm, bwd_mm
+
+
+def _ring_sync(ax):
+    """Lock-step hooks for ``bc_sweep_ops`` (see ``_ring_mms``): the level
+    loops continue until EVERY shard's source chunk is done — one int8
+    pmax per forward level, one int32 pmax per chunk for the backward
+    start — and a shard's extra iterations are exact no-ops."""
+    return dict(
+        sync_any=lambda p: lax.pmax(p.astype(jnp.int8), ax) > 0,
+        sync_max=lambda x: lax.pmax(x, ax))
+
+
+def _bc_ring_prep(w_local, occ_local, alive, ax, tile, use_kernel):
+    alivep, _, edge = _band_views(w_local, alive, ax)
+    fwd_mm, bwd_mm = _ring_mms(edge.astype(jnp.float32), occ_local,
+                               ax=ax, tile=tile, use_kernel=use_kernel)
+    return alivep, fwd_mm, bwd_mm
+
+
+def _bc_ring_body(w_local, occ_local, alive, ecnt, srcs_local, version, *,
+                  ax, tile, use_kernel, src_chunk):
+    """Ring-mode ``_bc_body``: the identical chunked batched-Brandes sweep
+    (``bc_batched_ops`` == ``bc_batched_dense``'s driver) fed by rotated
+    bands instead of a gathered matrix.  Levels/sigma bit-identical to the
+    gather mode; per-shard adjacency memory O(Vp^2/n) instead of O(Vp^2).
+    """
+    vp = w_local.shape[1]
+    vcap = alive.shape[0]
+    alivep, fwd_mm, bwd_mm = _bc_ring_prep(w_local, occ_local, alive, ax,
+                                           tile, use_kernel)
+    delta, sigma, level, ok = bc_batched_ops(
+        fwd_mm, bwd_mm, srcs_local, alivep, vp, src_chunk=src_chunk,
+        **_ring_sync(ax))
+    scores, val_ecnt = _bc_finish(level, delta, ok, ecnt, vcap, ax)
+    return ok, delta, sigma, level, scores, val_ecnt, _version_agree(version, ax)
+
+
+def _bc_delta_ring_body(w_local, occ_local, alive, ecnt, srcs_local, version,
+                        dirty, prior_level, prior_sigma, *,
+                        ax, tile, use_kernel, src_chunk):
+    """Ring-mode ``_bc_delta_body``: the same per-shard level cuts
+    (replicated dirty set against the shard's own cached forward trees —
+    levels/sigma are bit-identical across modes, so the cuts and the
+    per-source resume counters are too), warm-starting the ring sweep.
+    """
+    vp = w_local.shape[1]
+    vcap = alive.shape[0]
+    alivep, fwd_mm, bwd_mm = _bc_ring_prep(w_local, occ_local, alive, ax,
+                                           tile, use_kernel)
+    dirtyp = jnp.pad(dirty, (0, vp - vcap))
+    cut = bc_level_cut(prior_level, dirtyp, alivep)
+    delta, sigma, level, ok = bc_batched_ops(
+        fwd_mm, bwd_mm, srcs_local, alivep, vp, src_chunk=src_chunk,
+        prior_level=prior_level, prior_sigma=prior_sigma, cut=cut,
+        **_ring_sync(ax))
+    scores, val_ecnt = _bc_finish(level, delta, ok, ecnt, vcap, ax)
+    return ok, delta, sigma, level, scores, val_ecnt, _version_agree(version, ax)
+
+
 # ------------------------------ entry points -------------------------------
 
-_KINDS = ("bfs", "sssp", "bc", "bfs_delta", "sssp_delta", "bc_delta")
+_KINDS = ("bfs", "sssp", "bc", "bc_ring", "bfs_delta", "sssp_delta",
+          "bc_delta", "bc_delta_ring")
+
+#: ``bc_mode`` knob -> the (full, delta) shard_map kinds it selects.
+BC_MODES = {"gather": ("bc", "bc_delta"),
+            "ring": ("bc_ring", "bc_delta_ring")}
+
+
+def _bc_kind(bc_mode: str, delta: bool) -> str:
+    if bc_mode not in BC_MODES:
+        raise ValueError(f"unknown bc_mode {bc_mode!r}; "
+                         f"supported modes: {', '.join(sorted(BC_MODES))}")
+    return BC_MODES[bc_mode][1 if delta else 0]
 
 
 @lru_cache(maxsize=None)
@@ -323,11 +512,15 @@ def query_fn(mesh: Mesh, kind: str, tile: int, use_kernel: bool = False,
     Signature: ``fn(w, occ, alive, ecnt, srcs, version, *extras)`` over
     GLOBAL arrays — ``w``/``occ`` sharded ``P(axis, None)`` (a
     ``ShardedTileView``), vertex arrays replicated, ``srcs`` replicated for
-    bfs/sssp and sharded ``P(axis)`` for bc (length must divide the axis
-    size; the host wrappers pad with -1).  The delta kinds take extras:
-    ``bfs_delta``/``sssp_delta`` a replicated warm-start ``dist0[S, Vp]``;
-    ``bc_delta`` the replicated dirty mask plus the source-sharded prior
-    ``level``/``sigma``.  Cached per (mesh, kind, tile, use_kernel,
+    bfs/sssp and sharded ``P(axis)`` for the bc kinds (length must divide
+    the axis size; the host wrappers pad with -1).  The ``*_ring`` bc
+    kinds share the bc signatures and differ only in how the adjacency
+    reaches each shard (band rotation vs all-gather).  The delta kinds
+    take extras: ``bfs_delta`` a replicated warm-start ``dist0[S, Vp]``
+    plus resume passes ``lvl0[S]``; ``sssp_delta`` the replicated
+    ``dist0[S, Vp]`` plus the band-activity seed ``active0[Vp]``;
+    ``bc_delta(_ring)`` the replicated dirty mask plus the source-sharded
+    prior ``level``/``sigma``.  Cached per (mesh, kind, tile, use_kernel,
     src_chunk).
     """
     ax = _axis(mesh)
@@ -350,14 +543,17 @@ def query_fn(mesh: Mesh, kind: str, tile: int, use_kernel: bool = False,
     elif kind == "sssp_delta":
         body = partial(_sssp_delta_body, **kw)
         src_spec = rspec
-        extra_specs = (rspec,)                       # dist0
+        extra_specs = (rspec, rspec)                 # dist0, active0
         out_specs = (rspec, rspec, rspec, rspec, rspec)
-    elif kind == "bc":
-        body = partial(_bc_body, src_chunk=src_chunk, **kw)
+    elif kind in ("bc", "bc_ring"):
+        bodies = {"bc": _bc_body, "bc_ring": _bc_ring_body}
+        body = partial(bodies[kind], src_chunk=src_chunk, **kw)
         src_spec = sspec
         out_specs = (sspec, vspec, vspec, vspec, rspec, rspec, rspec)
-    elif kind == "bc_delta":
-        body = partial(_bc_delta_body, src_chunk=src_chunk, **kw)
+    elif kind in ("bc_delta", "bc_delta_ring"):
+        bodies = {"bc_delta": _bc_delta_body,
+                  "bc_delta_ring": _bc_delta_ring_body}
+        body = partial(bodies[kind], src_chunk=src_chunk, **kw)
         src_spec = sspec
         extra_specs = (rspec, vspec, vspec)          # dirty, level, sigma
         out_specs = (sspec, vspec, vspec, vspec, rspec, rspec, rspec)
@@ -380,14 +576,14 @@ def query_shardings(mesh: Mesh, kind: str):
     v = NamedSharding(mesh, P(ax, None))
     r = NamedSharding(mesh, P())
     s = NamedSharding(mesh, P(ax))
-    if kind == "bc":
+    if kind in ("bc", "bc_ring"):
         return (v, v, r, r, s, r), (s, v, v, v, r, r, r)
-    if kind == "bc_delta":
+    if kind in ("bc_delta", "bc_delta_ring"):
         return (v, v, r, r, s, r, r, v, v), (s, v, v, v, r, r, r)
     if kind == "bfs_delta":
         return (v, v, r, r, r, r, r, r), (r,) * 4
     if kind == "sssp_delta":
-        return (v, v, r, r, r, r, r), (r,) * 5
+        return (v, v, r, r, r, r, r, r), (r,) * 5
     if kind not in ("bfs", "sssp"):
         raise ValueError(f"unknown query kind {kind!r}; "
                          f"supported kinds: {', '.join(_KINDS)}")
@@ -460,20 +656,29 @@ def sssp(view: ShardedTileView, state: GraphState, srcs, *,
 
 
 def bc_batched(view: ShardedTileView, state: GraphState, srcs=None, *,
-               use_kernel: bool = False,
-               src_chunk: int | None = None) -> ShardedBCResult:
+               use_kernel: bool = False, src_chunk: int | None = None,
+               bc_mode: str = "gather") -> ShardedBCResult:
     """Distributed batched Brandes, source axis sharded over the mesh.
 
     ``srcs`` defaults to every vertex slot (exact all-sources BC); it is
     padded with -1 up to a multiple of the shard count (dead padding
     contributes nothing) and the padding is sliced back off the returned
     per-source arrays, which stay sharded ``P(axis, None)``.
+
+    ``bc_mode`` picks how each shard sees the adjacency: ``"gather"``
+    (one ``all_gather`` of the row bands per query — O(Vp^2) per-shard
+    memory, zero per-level collectives; the oracle path) or ``"ring"``
+    (SUMMA-style ``lax.ppermute`` band rotation — O(Vp^2/n) per-shard
+    memory, one ring revolution per level step; see ``_ring_mms``).
+    Levels/sigma are bit-identical across modes; delta/scores agree to
+    f32 summation order.
     """
     if srcs is None:
         srcs = jnp.arange(state.vcap, dtype=jnp.int32)
     n_srcs = jnp.atleast_1d(jnp.asarray(srcs)).shape[0]
     srcs = _srcs_array(srcs, view.n_shards, pad_to_shards=True)
-    fn = query_fn(view.mesh, "bc", view.tile, use_kernel, src_chunk)
+    fn = query_fn(view.mesh, _bc_kind(bc_mode, delta=False), view.tile,
+                  use_kernel, src_chunk)
     ok, delta, sigma, level, scores, val_ecnt, agree = fn(
         view.w, view.occ, state.alive, state.ecnt, srcs, state.version)
     vcap = state.vcap
@@ -496,6 +701,16 @@ def _sssp_delta_dist0(state: GraphState, prior_dist, prior_parent, dirty,
     surviving prior distances (admissible upper bounds in the new graph),
     +inf elsewhere, source re-pinned to 0.  Identical seeding to the
     engine's ``delta_sssp``.
+
+    Also derives ``active0[vp]``, the pass-0 band-activity seed of the
+    re-relax loop's per-shard early-exit: the rows that can possibly
+    improve anything on the first pass.  A kept, clean vertex relaxing a
+    kept neighbour reproves what prior convergence already guarantees —
+    only (a) DIRTY rows (their out-edge set or weights changed) and
+    (b) rows with a live out-edge into the poisoned/unreached region
+    (``dist0 == INF``) can tighten a bound, and either way only where the
+    row is finite for some source.  Later passes reseed activity from the
+    vertices the previous min-merge improved (see ``_sssp_delta_body``).
     """
     from repro.engine.incremental import _poison
 
@@ -512,7 +727,18 @@ def _sssp_delta_dist0(state: GraphState, prior_dist, prior_parent, dirty,
         return d0.at[src].set(jnp.where(ok, 0.0, INF), mode="drop")
 
     dist0 = jax.vmap(one)(prior_dist, prior_parent, srcs)
-    return jnp.pad(dist0, ((0, 0), (0, vp - vcap)), constant_values=INF)
+
+    live, srcc, dstc = _edge_views(state)
+
+    def gap_rows(d):
+        gap = live & (d[srcc] < INF) & (d[dstc] == INF)
+        return (jnp.zeros((vcap,), jnp.bool_)
+                .at[srcc].max(gap, mode="drop"))
+
+    finite_any = (dist0 < INF).any(axis=0)
+    active0 = (dirty & finite_any) | jax.vmap(gap_rows)(dist0).any(axis=0)
+    return (jnp.pad(dist0, ((0, 0), (0, vp - vcap)), constant_values=INF),
+            jnp.pad(active0, (0, vp - vcap)))
 
 
 @partial(jax.jit, static_argnames=("vp",))
@@ -591,12 +817,12 @@ def delta_sssp_sharded(view: ShardedTileView, state: GraphState,
     fixed point, merged with an order-free f32 min per level).
     """
     srcs = _srcs_array(srcs)
-    dist0 = _mesh_replicated(view, _sssp_delta_dist0(
+    dist0, active0 = (_mesh_replicated(view, x) for x in _sssp_delta_dist0(
         state, prior.dist, prior.parent, dirty, srcs, vp=view.vp))
     fn = query_fn(view.mesh, "sssp_delta", view.tile, use_kernel)
     ok, changed, dist, val_ecnt, agree = fn(view.w, view.occ, state.alive,
                                             state.ecnt, srcs, state.version,
-                                            dist0)
+                                            dist0, active0)
     dist = _host_local(view, dist)[:, :state.vcap]
     parent = sssp_tree_parents(state, dist, srcs)
     return ShardedSSSPResult(ok & ~changed, changed, dist, parent,
@@ -605,8 +831,8 @@ def delta_sssp_sharded(view: ShardedTileView, state: GraphState,
 
 def delta_bc_sharded(view: ShardedTileView, state: GraphState,
                      prior: ShardedBCResult, dirty, srcs=None, *,
-                     use_kernel: bool = False,
-                     src_chunk: int | None = None) -> ShardedBCResult:
+                     use_kernel: bool = False, src_chunk: int | None = None,
+                     bc_mode: str = "gather") -> ShardedBCResult:
     """Distributed level-cut delta BC, source axis sharded as in ``bc_batched``.
 
     Each shard cuts its own sources' cached forward trees at the shallowest
@@ -614,7 +840,10 @@ def delta_bc_sharded(view: ShardedTileView, state: GraphState,
     the churn cannot have touched reuse their whole tree with zero forward
     passes; a source that is itself suspect restarts cold) and resumes the
     chunked batched-Brandes sweep.  Bit-identical to the full sharded
-    ``bc_batched`` on this snapshot, scores included.
+    ``bc_batched`` on this snapshot, scores included.  ``bc_mode`` as in
+    ``bc_batched``; the prior's forward trees are mode-independent
+    (level/sigma bit-identical), so the cuts and per-source resume
+    counters cannot drift across modes either.
     """
     if srcs is None:
         srcs = jnp.arange(state.vcap, dtype=jnp.int32)
@@ -630,7 +859,8 @@ def delta_bc_sharded(view: ShardedTileView, state: GraphState,
     sigma = jnp.zeros((S, vp), jnp.float32).at[:n_srcs, :vcap].set(
         prior.sigma)
     dirty = _mesh_replicated(view, dirty)
-    fn = query_fn(view.mesh, "bc_delta", view.tile, use_kernel, src_chunk)
+    fn = query_fn(view.mesh, _bc_kind(bc_mode, delta=True), view.tile,
+                  use_kernel, src_chunk)
     ok, delta, sigma, level, scores, val_ecnt, agree = fn(
         view.w, view.occ, state.alive, state.ecnt, srcs, state.version,
         dirty, level, sigma)
@@ -642,17 +872,20 @@ def delta_bc_sharded(view: ShardedTileView, state: GraphState,
 def validate_incremental_sharded(view: ShardedTileView, state: GraphState,
                                  srcs, result, kind: str, *,
                                  use_kernel: bool = False,
-                                 src_chunk: int | None = None) -> bool:
+                                 src_chunk: int | None = None,
+                                 bc_mode: str = "gather") -> bool:
     """``cmp_tree``-style check for the sharded delta paths: bit-equality
     of every result field against a fresh full distributed collect on the
     same snapshot (the sharded analogue of
     ``engine.incremental.validate_incremental`` — delta BC included, since
-    the warm-started sweep replays the cold op sequence exactly)."""
+    the warm-started sweep replays the cold op sequence exactly; a ring
+    delta validates against a ring full collect so the comparison stays
+    within one summation order)."""
     from repro.engine.incremental import results_equal
 
     if kind == "bc":
         fresh = bc_batched(view, state, srcs, use_kernel=use_kernel,
-                           src_chunk=src_chunk)
+                           src_chunk=src_chunk, bc_mode=bc_mode)
     else:
         fresh = {"bfs": bfs, "sssp": sssp}[kind](view, state, srcs,
                                                  use_kernel=use_kernel)

@@ -73,20 +73,32 @@ def _reached_union(kind: str, result) -> jax.Array:
 
 
 class ShardedGraphService(BaseGraphService):
-    """submit()/query() front end over the sharded tile grid."""
+    """submit()/query() front end over the sharded tile grid.
+
+    ``bc_mode`` picks the adjacency strategy of every BC collect (full and
+    delta): ``"gather"`` all-gathers the row bands per query (O(Vp^2)
+    per-shard memory, kept as the oracle path), ``"ring"`` SUMMA-rotates
+    the O(Vp^2/n) bands with ``lax.ppermute`` — see
+    ``shard.queries.bc_batched``.  Levels/sigma (hence the delta ladder's
+    cuts) are bit-identical across modes; scores agree to f32 summation
+    order.
+    """
 
     _kinds = ("bfs", "sssp", "bc")
 
     def __init__(self, initial_state: GraphState, mesh: Mesh, *,
                  tile: int = TILE, use_kernel: bool = False,
-                 src_chunk: Optional[int] = None, ring_depth: int = 8,
-                 batch_size: int = 32, dirty_threshold: float = 0.25,
-                 strict_order: bool = False, coalesce: bool = False,
-                 max_collects: int = 16, max_cached: int = 128):
+                 src_chunk: Optional[int] = None, bc_mode: str = "gather",
+                 ring_depth: int = 8, batch_size: int = 32,
+                 dirty_threshold: float = 0.25, strict_order: bool = False,
+                 coalesce: bool = False, max_collects: int = 16,
+                 max_cached: int = 128):
+        shard_queries._bc_kind(bc_mode, delta=False)  # validate up front
         self.mesh = as_graph_mesh(mesh)
         self.tile = tile
         self.use_kernel = use_kernel
         self.src_chunk = src_chunk
+        self.bc_mode = bc_mode
         self._init_service(
             initial_state, ring_depth=ring_depth, batch_size=batch_size,
             dirty_threshold=dirty_threshold, strict_order=strict_order,
@@ -186,10 +198,13 @@ class ShardedGraphService(BaseGraphService):
         if res is None:
             res = _QUERIES[kind](
                 self.view(), state, srcs,
-                **({"src_chunk": self.src_chunk} if kind == "bc" else {}),
+                **(self._bc_kwargs() if kind == "bc" else {}),
                 use_kernel=self.use_kernel)
         self._cache_store(key, entry.version, res)
         return entry, res, mode
+
+    def _bc_kwargs(self) -> dict:
+        return {"src_chunk": self.src_chunk, "bc_mode": self.bc_mode}
 
     def _delta_collect(self, kind: str, prior, dirty, srcs,
                        state: GraphState):
@@ -199,7 +214,7 @@ class ShardedGraphService(BaseGraphService):
         if kind == "bc":
             return _DELTA[kind](view, state, prior, dirty, srcs,
                                 use_kernel=self.use_kernel,
-                                src_chunk=self.src_chunk)
+                                **self._bc_kwargs())
         res = _DELTA[kind](view, state, prior, dirty, srcs,
                            use_kernel=self.use_kernel)
         if kind == "sssp" and bool(res.negcycle.any()):

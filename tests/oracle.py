@@ -130,3 +130,11 @@ class GraphOracle:
                     delta[u] += sigma[u] / sigma[v] * (1 + delta[v])
         delta[src] = 0.0
         return delta
+
+    def bc_scores(self):
+        """Exact all-sources betweenness: BC(v) = sum_s delta(s | v)."""
+        scores = {v: 0.0 for v in self.vertices}
+        for s in self.vertices:
+            for v, d in self.bc_dependencies(s).items():
+                scores[v] += d
+        return scores

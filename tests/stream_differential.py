@@ -1,0 +1,197 @@
+"""Randomized differential op-stream harness.
+
+One seeded RNG drives a mixed stream of vertex/edge mutations and
+bfs/sssp/bc queries; the stream is replayed simultaneously against
+
+  * the pure-python sequential oracle (``tests/oracle.py`` — the paper's
+    ADT semantics, trusted by the PR-1 property tests),
+  * the local :class:`repro.engine.GraphService`, and
+  * (when given a mesh) the distributed
+    :class:`repro.shard.ShardedGraphService` in either ``bc_mode``,
+
+asserting after EVERY query that the service's answer — whatever rung of
+the unchanged → delta → full ladder produced it — equals the oracle's at
+that version.  The churn alternates between the half of the vertex range
+the pinned sources live in and the far half, so one stream naturally
+exercises all three ladder modes (the per-service mode tallies are
+returned for the caller to assert on), plus the delta fallbacks: negative
+weights (``neg_frac``) breed negative cycles mid-stream (delta SSSP must
+fall back to the canonical full answer) and REMV/PUTV pairs resurrect
+sources whose empty cached rows must restart cold.
+
+Everything is keyed on the integer ``seed`` (logged on entry), so any
+failure is reproducible with ``run_differential(seed, ...)`` alone.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import PUTE, PUTV, REME, REMV, make_graph
+from repro.engine import GraphService
+from oracle import GraphOracle
+
+INF = float("inf")
+WEIGHTS = (1.0, 2.0, 3.0)
+
+
+# ------------------------------ stream gen ---------------------------------
+
+def gen_ops(rng, lo: int, hi: int, count: int, neg_frac: float = 0.0):
+    """One commit's worth of mixed ops confined to vertex range [lo, hi)."""
+    ops = []
+    for _ in range(count):
+        r = float(rng.random())
+        u = int(rng.integers(lo, hi))
+        v = int(rng.integers(lo, hi))
+        if r < 0.15:
+            ops.append((PUTV, u))
+        elif r < 0.25:
+            ops.append((REMV, u))
+        elif r < 0.85:
+            w = (-1.0 if float(rng.random()) < neg_frac
+                 else float(WEIGHTS[int(rng.integers(0, len(WEIGHTS)))]))
+            ops.append((PUTE, u, v, w))
+        else:
+            ops.append((REME, u, v))
+    return ops
+
+
+def _apply_oracle(oracle: GraphOracle, ops) -> None:
+    for op in ops:
+        if op[0] == PUTV:
+            oracle.put_v(op[1])
+        elif op[0] == REMV:
+            oracle.rem_v(op[1])
+        elif op[0] == PUTE:
+            oracle.put_e(op[1], op[2], op[3])
+        else:
+            oracle.rem_e(op[1], op[2])
+
+
+# ------------------------------ checkers -----------------------------------
+
+def _dense(m: dict, vcap: int, fill: float) -> np.ndarray:
+    out = np.full((vcap,), fill, np.float64)
+    for v, d in m.items():
+        out[v] = d
+    return out
+
+
+def _first(x, sharded: bool):
+    return x[0] if sharded else x
+
+
+def check_bfs(ctx, reply, oracle, src, vcap, sharded):
+    ref = oracle.bfs(src)
+    ok = bool(_first(reply.result.ok, sharded))
+    assert ok == (ref is not None), ctx
+    dist = np.asarray(_first(reply.result.dist, sharded), np.float64)
+    exp = _dense(ref or {}, vcap, -1.0)
+    assert np.array_equal(dist, exp), ctx
+
+
+def check_sssp(ctx, reply, oracle, src, vcap, sharded):
+    ref, refneg = oracle.sssp(src)
+    neg = bool(_first(reply.result.negcycle, sharded))
+    ok = bool(_first(reply.result.ok, sharded))
+    assert neg == refneg, ctx
+    assert ok == (ref is not None and not refneg), ctx
+    if ref is None or refneg:
+        # a negative-cycle answer's partially-relaxed distances are only
+        # canonical per implementation; the flag is the contract
+        return
+    dist = np.asarray(_first(reply.result.dist, sharded), np.float64)
+    assert np.array_equal(dist, _dense(ref, vcap, INF)), ctx
+
+
+def check_bc(ctx, reply, oracle, src, vcap, sharded):
+    ref = oracle.bc_dependencies(src)
+    ok = bool(_first(reply.result.ok, sharded))
+    assert ok == (ref is not None), ctx
+    if ref is None:
+        return
+    # levels ARE the oracle's BFS distances (hop metric), exactly
+    level = np.asarray(_first(reply.result.level, sharded), np.float64)
+    assert np.array_equal(level, _dense(oracle.bfs(src), vcap, -1.0)), ctx
+    delta = np.asarray(_first(reply.result.delta, sharded), np.float64)
+    assert np.allclose(delta, _dense(ref, vcap, 0.0),
+                       rtol=1e-5, atol=1e-5), ctx
+
+
+def check_scores(ctx, scores, oracle, vcap):
+    ref = oracle.bc_scores()
+    sc = np.asarray(scores, np.float64)
+    for v in range(vcap):
+        if v in ref:
+            assert abs(sc[v] - ref[v]) <= 1e-4 * (1.0 + abs(ref[v])), (ctx, v)
+        else:
+            assert np.isnan(sc[v]), (ctx, v)
+
+
+_CHECK = {"bfs": check_bfs, "sssp": check_sssp, "bc": check_bc}
+
+
+# -------------------------------- runner -----------------------------------
+
+def run_differential(seed: int, *, n: int = 24, steps: int = 8,
+                     ops_per_step: int = 8, neg_frac: float = 0.0,
+                     mesh=None, tile: int = 8, bc_mode: str = "gather",
+                     batch_size: int = 4, score_every: int = 0):
+    """Replay one seeded stream against oracle + service(s).
+
+    Returns ``{service_name: {"unchanged": k, "delta": k, "full": k}}`` so
+    callers can assert ladder-mode coverage.  Raises AssertionError (with
+    the offending (service, kind, src, step, mode) context) on the first
+    divergence from the oracle.
+    """
+    print(f"[stream-differential] seed={seed} n={n} steps={steps} "
+          f"ops_per_step={ops_per_step} neg_frac={neg_frac} "
+          f"bc_mode={bc_mode}", flush=True)
+    rng = np.random.default_rng(seed)
+    g0 = make_graph(n, 16 * n)
+    oracle = GraphOracle()
+    services = [("local", GraphService(g0, batch_size=batch_size), False)]
+    if mesh is not None:
+        from repro.shard import ShardedGraphService
+        services.append(("sharded", ShardedGraphService(
+            g0, mesh, tile=tile, batch_size=batch_size, bc_mode=bc_mode,
+            src_chunk=2), True))
+    modes = {name: {"unchanged": 0, "delta": 0, "full": 0}
+             for name, _, _ in services}
+
+    def commit(ops):
+        _apply_oracle(oracle, ops)
+        for _, svc, _ in services:
+            svc.submit_many(ops)
+            svc.flush()
+
+    # Base population: every vertex alive, a random edge set per HALF of
+    # the range — churn then alternates halves, so queries pinned in the
+    # lower half see far commits (unchanged), near commits (delta), and
+    # their own cold collects (full).
+    half = n // 2
+    base = [(PUTV, i) for i in range(n)]
+    for lo, hi in ((0, half), (half, n)):
+        for _ in range(3 * half):
+            base.append((PUTE, int(rng.integers(lo, hi)),
+                         int(rng.integers(lo, hi)),
+                         float(WEIGHTS[int(rng.integers(0, len(WEIGHTS)))])))
+    commit(base)
+
+    pinned = [0, 1]
+    for step in range(steps):
+        lo, hi = ((half, n) if step % 2 else (0, half))
+        commit(gen_ops(rng, lo, hi, ops_per_step, neg_frac))
+        for src in pinned + [int(rng.integers(0, n))]:
+            for kind in ("bfs", "sssp", "bc"):
+                for name, svc, sharded in services:
+                    reply = svc.query(kind, [src] if sharded else src)
+                    modes[name][reply.mode] += 1
+                    ctx = (name, kind, src, step, reply.mode, seed)
+                    _CHECK[kind](ctx, reply, oracle, src, n, sharded)
+        if score_every and (step + 1) % score_every == 0:
+            for name, svc, _ in services:
+                scores, _ = svc.bc_scores()
+                check_scores((name, "bc_scores", step, seed), scores,
+                             oracle, n)
+    return modes

@@ -95,6 +95,20 @@ def test_bool_mm_property(sb, kb, nb, seed):
     assert np.array_equal(out, exp)
 
 
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.booleans())
+def test_stream_differential_property(seed, negative):
+    """Hypothesis roams the seed space of the randomized differential
+    op-stream suite (``stream_differential``): mixed add/remove-edge/vertex
+    commits + bfs/sssp/bc queries, every ladder answer checked against the
+    sequential oracle.  The fixed-seed + sharded variants live in
+    ``test_stream_differential.py``; any failing seed here reproduces with
+    ``run_differential(seed, n=16, steps=3, ...)``."""
+    from stream_differential import run_differential
+    run_differential(seed, n=16, steps=3, ops_per_step=6,
+                     neg_frac=0.1 if negative else 0.0)
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(0, 2**31 - 1))
 def test_minplus_triangle_inequality_property(seed):

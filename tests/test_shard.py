@@ -1,22 +1,20 @@
 """Sharded tile-grid engine: sharded-vs-local equivalence.
 
-The multi-device tests follow the ``test_checkpoint.py`` elastic-rescale
-pattern: a subprocess sets ``--xla_force_host_platform_device_count=4``
-BEFORE importing jax, so the placeholder devices never leak into other
-tests.  Equivalence bar (the PR's acceptance): distributed bfs/sssp dist
+The multi-device tests run through ``conftest.run_multidevice`` (a
+subprocess sets ``--xla_force_host_platform_device_count=4`` BEFORE
+importing jax, so the placeholder devices never leak into other tests).
+Equivalence bar (the PR's acceptance): distributed bfs/sssp dist
 and bc level/sigma are BIT-identical to the single-device ``core.queries``
 batched path on the same snapshot — including tombstones and dead vertices
 — while bc delta/scores match to f32 summation order (the same caveat
 ``bc_batched_dense`` documents vs per-source Brandes).
 """
-import os
-import subprocess
-import sys
-
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+
+from conftest import run_multidevice as _run_multidevice
 
 from repro.core import (
     PUTE, REME, REMV, apply_ops, dense_views, queries,
@@ -41,20 +39,6 @@ from repro.shard import (
     sssp,
     validate_incremental_sharded,
 )
-
-
-def _run_multidevice(script: str, n_devices: int = 4) -> str:
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    env.pop("XLA_FLAGS", None)
-    prelude = (
-        "import os\n"
-        f'os.environ["XLA_FLAGS"] = '
-        f'"--xla_force_host_platform_device_count={n_devices}"\n')
-    r = subprocess.run([sys.executable, "-c", prelude + script], env=env,
-                       capture_output=True, text=True, timeout=600)
-    assert r.returncode == 0, r.stdout + r.stderr
-    return r.stdout
 
 
 def _tombstoned_graph(n=64, edges=400, seed=3):
@@ -121,6 +105,90 @@ def test_bc_source_padding_and_default_sources():
                        rtol=1e-5, atol=1e-5)
 
 
+def test_bc_ring_matches_gather_single_device():
+    """Ring-mode BC on a 1-device mesh (a ring of one: no permutes) must
+    already match the gathered oracle bit-for-bit on level/sigma."""
+    g = _tombstoned_graph()
+    mesh = as_graph_mesh()
+    view = build_sharded_view(g, mesh, tile=16)
+    srcs = jnp.asarray([0, 1, 7, 33, 63], jnp.int32)
+    rg = bc_batched(view, g, srcs, src_chunk=2)
+    rr = bc_batched(view, g, srcs, src_chunk=2, bc_mode="ring")
+    assert np.array_equal(np.asarray(rr.level), np.asarray(rg.level))
+    assert np.array_equal(np.asarray(rr.sigma), np.asarray(rg.sigma))
+    assert np.array_equal(np.asarray(rr.ok), np.asarray(rg.ok))
+    assert np.allclose(np.asarray(rr.delta), np.asarray(rg.delta),
+                       rtol=1e-5, atol=1e-5)
+    assert np.allclose(np.asarray(rr.scores), np.asarray(rg.scores),
+                       rtol=1e-5, atol=1e-5)
+
+
+def test_bc_mode_validation():
+    """Unknown bc_mode raises with the supported modes listed, at both the
+    query and the service layer."""
+    g = _tombstoned_graph(n=32, edges=120)
+    mesh = as_graph_mesh()
+    view = build_sharded_view(g, mesh, tile=16)
+    with pytest.raises(ValueError) as ei:
+        bc_batched(view, g, jnp.asarray([0], jnp.int32), bc_mode="bogus")
+    assert "gather" in str(ei.value) and "ring" in str(ei.value)
+    from repro.shard import ShardedGraphService
+    with pytest.raises(ValueError) as ei2:
+        ShardedGraphService(g, mesh, tile=16, bc_mode="bogus")
+    assert "ring" in str(ei2.value)
+
+
+def test_sharded_sssp_negcycle_delta_fallback():
+    """A negative cycle born since the cached answer: the delta re-relax
+    surfaces it (exit-changed flag) and the service falls back to the full
+    distributed collect for the canonical answer — under both bc_mode
+    values (the knob must not disturb the sssp ladder)."""
+    from repro.shard import ShardedGraphService
+
+    g = _tombstoned_graph()
+    mesh = as_graph_mesh()
+    srcs = jnp.asarray([0], jnp.int32)
+
+    # direct delta path: the new cycle flips the negcycle flag
+    view = build_sharded_view(g, mesh, tile=16)
+    prior = sssp(view, g, srcs)
+    assert not bool(prior.negcycle.any())
+    reached = np.flatnonzero(np.asarray(prior.dist[0]) < np.inf)
+    a, b = (int(v) for v in reached[1:3])
+    ops = [(PUTE, a, b, 1.0), (PUTE, b, a, -5.0)]
+    g2, _ = apply_ops(g, ops)
+    dirty = dirty_vertices(g, g2)
+    view2 = refresh_sharded_view(g2, view, dirty)
+    ds = delta_sssp_sharded(view2, g2, prior, dirty, srcs)
+    assert bool(ds.negcycle[0]) and not bool(ds.ok[0])
+
+    for bc_mode in ("gather", "ring"):
+        svc = ShardedGraphService(g, mesh, tile=16, batch_size=4,
+                                  bc_mode=bc_mode)
+        rep0 = svc.query("sssp", [0])
+        assert rep0.mode == "full" and not bool(rep0.result.negcycle[0])
+        svc.submit_many(ops)
+        svc.flush()
+        # the ladder attempts delta (tiny touched dirty set, usable prior)
+        # and its negcycle detection returns None = fall back to full
+        ring_dirty = svc.ring.dirty_between(rep0.version, svc.version)
+        state = svc.ring.latest.state
+        assert svc._delta_collect("sssp", rep0.result, ring_dirty, [0],
+                                  state) is None
+        rep = svc.query("sssp", [0])
+        assert rep.mode == "full" and bool(rep.result.negcycle[0])
+        fresh = sssp(svc.view(), state, srcs)
+        assert np.array_equal(np.asarray(rep.result.dist),
+                              np.asarray(fresh.dist))
+        # the canonical negcycle answer is cached; the NEXT query cannot
+        # ride delta off it (negcycle prior is unusable) — localized churn
+        # forces a fresh full collect, not a poisoned warm start
+        svc.submit_many([(PUTE, a, int(reached[3]), 1.0)])
+        svc.flush()
+        rep2 = svc.query("sssp", [0])
+        assert rep2.mode == "full" and bool(rep2.result.negcycle[0])
+
+
 def test_sharded_parents_match_local_queries():
     """Full sharded bfs/sssp carry traversal-tree parents identical to the
     per-source COO queries (the arrays the delta poison step walks)."""
@@ -172,7 +240,9 @@ def test_sharded_delta_queries_single_device():
 def test_sharded_delta_revived_source_restarts_cold():
     """A source that was dead when the prior was cached and resurrected
     since has an EMPTY prior row — invisible to the level cut and to the
-    unchanged test — and must be recomputed from scratch."""
+    unchanged test — and must be recomputed from scratch, in BOTH bc_mode
+    values (the ring warm start shares the gather path's cut/revive logic
+    but runs a different program)."""
     from repro.core import PUTV
     from repro.engine import GraphService
     from repro.shard import ShardedGraphService
@@ -190,9 +260,13 @@ def test_sharded_delta_revived_source_restarts_cold():
     db = delta_bfs_sharded(view2, g2, pb, dirty, srcs)
     assert validate_incremental_sharded(view2, g2, srcs, db, "bfs")
     assert bool(db.ok[1]) and int(db.dist[1, 7]) == 0
-    dc = delta_bc_sharded(view2, g2, pc, dirty, srcs, src_chunk=2)
-    assert validate_incremental_sharded(view2, g2, srcs, dc, "bc",
-                                        src_chunk=2)
+    for bc_mode in ("gather", "ring"):
+        dc = delta_bc_sharded(view2, g2, pc, dirty, srcs, src_chunk=2,
+                              bc_mode=bc_mode)
+        assert validate_incremental_sharded(view2, g2, srcs, dc, "bc",
+                                            src_chunk=2, bc_mode=bc_mode), \
+            bc_mode
+        assert bool(dc.ok[1]) and int(dc.level[1, 7]) == 0, bc_mode
     # the service ladder must not answer "unchanged" when the ONLY churn
     # is the resurrection (no prior-reached vertex is dirty)
     svc = ShardedGraphService(g, mesh, tile=16, batch_size=4)
@@ -507,6 +581,97 @@ assert np.array_equal(np.asarray(rcn.result.dist[0]), np.asarray(lcn.result.dist
 print("LADDER OK")
 """)
     assert "LADDER OK" in out
+
+
+def test_bc_ring_multidevice():
+    """Ring-rotation BC on a 4-way mesh: bit-identical level/sigma to the
+    gathered path AND the single-device batched path (full + level-cut
+    delta), delta/scores to f32 summation order, and the collective-byte
+    regression — ring-permute bytes per rotation match the O(Vp^2/n)
+    formula off the compiled HLO, alongside the existing BFS int8-pmax /
+    SSSP f32-min-merge byte formulas."""
+    out = _run_multidevice(r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import PUTE, REME, REMV, apply_ops, dense_views, queries
+from repro.core.updates import dirty_vertices
+from repro.data import load_rmat_graph
+from repro.shard import (as_graph_mesh, build_sharded_view, refresh_sharded_view,
+                         bc_batched, bfs, sssp, delta_bc_sharded,
+                         validate_incremental_sharded, query_fn)
+
+mesh = as_graph_mesh()
+assert mesh.devices.size == 4
+g = load_rmat_graph(64, 400, seed=3)
+g, _ = apply_ops(g, [(REME, int(g.esrc[5]), int(g.edst[5])),
+                     (REMV, 7), (REMV, 33)])
+view = build_sharded_view(g, mesh, tile=16)
+am, wd, alive = dense_views(g)
+srcs = jnp.asarray([0, 1, 7, 33, 12, 63, 5, 2], jnp.int32)
+
+rg = bc_batched(view, g, srcs, src_chunk=2)
+rr = bc_batched(view, g, srcs, src_chunk=2, bc_mode="ring")
+d, s, lv, ok = queries.bc_batched_dense(am, srcs, alive, src_chunk=2)
+for got, name in ((rg, "gather"), (rr, "ring")):
+    assert np.array_equal(np.asarray(got.level), np.asarray(lv)), name
+    assert np.array_equal(np.asarray(got.sigma), np.asarray(s)), name
+    assert np.array_equal(np.asarray(got.ok), np.asarray(ok)), name
+    assert np.allclose(np.asarray(got.delta), np.asarray(d),
+                       rtol=1e-5, atol=1e-5), name
+    assert bool(got.agree), name
+assert np.allclose(np.asarray(rr.scores), np.asarray(rg.scores),
+                   rtol=1e-5, atol=1e-5)
+# unchunked sweep too
+rr1 = bc_batched(view, g, srcs, bc_mode="ring")
+assert np.array_equal(np.asarray(rr1.level), np.asarray(lv))
+
+# level-cut delta under cross-shard churn, warm-started from a ring prior
+g2, _ = apply_ops(g, [(PUTE, 0, 40, 2.0), (REME, 1, int(g.edst[20])),
+                      (PUTE, 20, 55, 1.0), (REMV, 12), (PUTE, 47, 18, 3.0)])
+dirty = dirty_vertices(g, g2)
+view2 = refresh_sharded_view(g2, view, dirty)
+dr = delta_bc_sharded(view2, g2, rr, dirty, srcs, src_chunk=2, bc_mode="ring")
+assert validate_incremental_sharded(view2, g2, srcs, dr, "bc", src_chunk=2,
+                                    bc_mode="ring")
+dg = delta_bc_sharded(view2, g2, rg, dirty, srcs, src_chunk=2)
+assert np.array_equal(np.asarray(dr.level), np.asarray(dg.level))
+assert np.array_equal(np.asarray(dr.sigma), np.asarray(dg.sigma))
+assert np.allclose(np.asarray(dr.scores), np.asarray(dg.scores),
+                   rtol=1e-5, atol=1e-5)
+
+# ---- collective-byte regression off the compiled HLO ----------------
+from repro.launch.dryrun import parse_collective_bytes
+def coll(kind, extra=(), src_chunk=None):
+    fn = query_fn(mesh, kind, 16, False, src_chunk)
+    lowered = fn.lower(view.w, view.occ, g.alive, g.ecnt, srcs, g.version,
+                       *extra)
+    return parse_collective_bytes(lowered.compile().as_text())
+
+S, vp = int(srcs.shape[0]), view.vp
+band, rows, nt = view.band, view.rows_per_shard, view.n_tiles
+slack = 64  # version-agreement scalars ride the same program
+
+c = coll("bfs")
+assert S * vp <= c["all-reduce"] <= S * vp + slack, c          # int8 pmax
+c = coll("sssp")
+assert 4 * S * vp <= c["all-reduce"] <= 4 * S * vp + slack, c  # f32 min-merge
+
+# ring: one rotation = the shard's own band (f32 weights + int32 occ grid)
+# = O(Vp^2/n) bytes; the compiled program carries exactly TWO rotation
+# sites (forward loop, backward loop) per sweep
+per_rot = band * vp * 4 + rows * nt * 4
+assert per_rot == 4 * vp * vp // 4 + 4 * nt * nt // 4
+for kind, chunks in (("bc_ring", 1),):
+    c = coll(kind)
+    assert c["collective-permute"] == 2 * chunks * per_rot, (kind, c)
+# chunked: one rotation-site pair per source chunk (S/n sources per shard)
+c = coll("bc_ring", src_chunk=1)
+assert c["collective-permute"] == 2 * (S // 4) * per_rot, c
+# gather mode moves the same band bytes once per query, n-fold amplified
+c = coll("bc")
+assert c["all-gather"] == vp * vp * 4 + nt * nt * 4, c
+print("RING OK")
+""")
+    assert "RING OK" in out
 
 
 def test_sharded_service_multidevice():

@@ -1,0 +1,59 @@
+"""Randomized differential op-stream suite (see ``stream_differential``).
+
+Seeds are fixed here so CI is deterministic, and every run logs its seed
+(the harness prints it) so a failure reproduces with
+``run_differential(seed, ...)`` alone; the hypothesis-driven variant in
+``test_property.py`` roams the seed space.  The multi-device cases run
+through the shared ``conftest.run_multidevice`` subprocess helper (4
+host-platform placeholder devices set before jax imports) against the
+4-way ``ShardedGraphService`` in BOTH ``bc_mode`` values.
+"""
+from conftest import run_multidevice as _run_multidevice
+from repro.shard import as_graph_mesh
+from stream_differential import run_differential
+
+
+def test_stream_differential_local():
+    """Local GraphService vs the oracle over a mixed stream; the chosen
+    seed exercises every rung of the ladder."""
+    modes = run_differential(7, n=24, steps=8, score_every=4)
+    for mode in ("unchanged", "delta", "full"):
+        assert modes["local"][mode] > 0, (mode, modes)
+
+
+def test_stream_differential_negative_weights():
+    """Negative weights breed negative cycles mid-stream: delta SSSP must
+    fall back to the canonical full answer and flags must match the
+    oracle's Bellman-Ford verdict at every version."""
+    run_differential(11, n=24, steps=6, neg_frac=0.08)
+
+
+def test_stream_differential_sharded_single_device():
+    """1-device sharded service (in-process) rides the same ladder as the
+    local service against the oracle — ring BC mode."""
+    modes = run_differential(7, n=24, steps=5, mesh=as_graph_mesh(),
+                             bc_mode="ring")
+    assert modes["sharded"] == modes["local"]
+    for mode in ("unchanged", "delta", "full"):
+        assert modes["sharded"][mode] > 0, (mode, modes)
+
+
+def test_stream_differential_multidevice():
+    """4-way ShardedGraphService vs oracle vs local service, both bc_mode
+    values, one stream with negative weights."""
+    out = _run_multidevice(r"""
+from repro.shard import as_graph_mesh
+from stream_differential import run_differential
+
+mesh = as_graph_mesh()
+assert mesh.devices.size == 4
+for bc_mode in ("gather", "ring"):
+    modes = run_differential(7, n=32, steps=6, mesh=mesh, bc_mode=bc_mode,
+                             score_every=6)
+    for mode in ("unchanged", "delta", "full"):
+        assert modes["sharded"][mode] > 0, (bc_mode, mode, modes)
+run_differential(11, n=32, steps=4, mesh=mesh, bc_mode="ring",
+                 neg_frac=0.08)
+print("STREAM OK")
+""")
+    assert "STREAM OK" in out
