@@ -196,8 +196,10 @@ def main(n=1024, edge_factor=8, slack_factor=4, seed=0, baseline_sources=64,
           f"(slack regime): {slack['speedup_masked_vs_dense']:.2f}x over the "
           f"dense sweep", flush=True)
 
+    from report import bench_metadata
     payload = {
         "bench": "bc",
+        "meta": bench_metadata(),
         "backend": jax.default_backend(),
         "params": {"n": n, "edge_factor": edge_factor,
                    "slack_factor": slack_factor, "seed": seed,

@@ -146,10 +146,10 @@ def bench_query_paths(graph, versions, src, kind, verify=False):
     return speedup
 
 
-def bench_service_stream(graph, stream, src, batch_size=32):
-    """End-to-end GraphService: ops/sec with a query after every commit."""
+def _run_service_stream(graph, stream, src, batch_size, telemetry=None):
+    """One timed pass of the GraphService streaming loop; (dt, n_ops, svc)."""
     svc = GraphService(graph, ring_depth=max(8, len(stream) + 2),
-                       batch_size=batch_size)
+                       batch_size=batch_size, telemetry=telemetry)
     # warmup
     svc.query("bfs", src)
     n_ops = 0
@@ -160,13 +160,54 @@ def bench_service_stream(graph, stream, src, batch_size=32):
         n_ops += len(ops)
         _block(svc.query("bfs", src).result)
     dt = time.perf_counter() - t0
+    return dt, n_ops, svc
+
+
+def bench_service_stream(graph, stream, src, batch_size=32):
+    """End-to-end GraphService: ops/sec with a query after every commit.
+
+    Runs the same deterministic stream repeatedly: an UNTIMED warm pass
+    (all commit/query program shapes compile here, so no timed pass pays
+    them), then best-of-3 telemetry off (the plain timing, unchanged
+    from earlier PRs) vs best-of-3 telemetry on (tracing + the
+    ``query_wall_us`` histograms the p50/p99 fields come from — pooled
+    across the reps).  Best-of-k because single ~0.5 s stream timings
+    swing with CPU contention (the bench_shard convention); the on/off
+    overhead ratio is the telemetry acceptance gate (<= 5%).
+    """
+    from repro.obs import Telemetry
+
+    reps = 3
+    _run_service_stream(graph, stream, src, batch_size)  # warm compiles
+    offs = [_run_service_stream(graph, stream, src, batch_size)
+            for _ in range(reps)]
+    dt = min(r[0] for r in offs)
+    n_ops, svc = offs[0][1], offs[0][2]
     ops_per_s = n_ops / dt
     _row("engine_service_stream", dt / max(len(stream), 1) * 1e6,
          f"update_ops_per_s={ops_per_s:.0f};"
          f"queries_per_s={len(stream) / dt:.1f};"
          f"unchanged={svc.stats.unchanged};delta={svc.stats.delta};"
          f"full={svc.stats.full}")
-    return ops_per_s
+
+    tel = Telemetry.make(hlo=False)
+    ons = [_run_service_stream(graph, stream, src, batch_size, telemetry=tel)
+           for _ in range(reps)]
+    dt_tel, svc_tel = min(r[0] for r in ons), ons[-1][2]
+    qs = tel.registry.merged_quantiles("query_wall_us", (0.5, 0.99),
+                                       service="local", kind="bfs")
+    p50_ms = qs[0.5] / 1e3 if qs[0.5] is not None else None
+    p99_ms = qs[0.99] / 1e3 if qs[0.99] is not None else None
+    overhead = dt_tel / dt
+    _row("engine_service_stream_telemetry",
+         dt_tel / max(len(stream), 1) * 1e6,
+         f"overhead={overhead:.3f}x;p50_ms={p50_ms:.2f};p99_ms={p99_ms:.2f};"
+         f"unchanged={svc_tel.stats.unchanged};delta={svc_tel.stats.delta};"
+         f"full={svc_tel.stats.full}")
+    tel.close()
+    return {"update_ops_per_s": round(ops_per_s, 1),
+            "p50_ms": round(p50_ms, 3), "p99_ms": round(p99_ms, 3),
+            "telemetry_overhead": round(overhead, 4)}
 
 
 def bench_latency_vs_update_rate(graph, rng, n, src, hot_frac,
@@ -245,7 +286,7 @@ def main(n=2048, edge_factor=8, n_commits=32, ops_per_commit=24,
     for kind in ("bfs", "sssp", "bc"):
         speedups[kind] = bench_query_paths(graph, versions, src, kind,
                                            verify=verify)
-    ops_per_s = bench_service_stream(graph, stream, src)
+    service_stats = bench_service_stream(graph, stream, src)
     bench_latency_vs_update_rate(graph, rng, n, src, hot_frac)
     tile_speedup, tile_stats = bench_tile_view(graph, versions)
 
@@ -254,8 +295,10 @@ def main(n=2048, edge_factor=8, n_commits=32, ops_per_commit=24,
           f"BC {speedups['bc']:.2f}x over full recompute; tile refresh "
           f"{tile_speedup:.2f}x over rebuild", flush=True)
 
+    from report import bench_metadata
     payload = {
         "bench": "engine",
+        "meta": bench_metadata(),
         "backend": jax.default_backend(),
         "params": {"n": n, "edge_factor": edge_factor,
                    "n_commits": n_commits, "ops_per_commit": ops_per_commit,
@@ -265,7 +308,7 @@ def main(n=2048, edge_factor=8, n_commits=32, ops_per_commit=24,
                      "sssp_incr_vs_full": round(speedups["sssp"], 3),
                      "bc_incr_vs_full": round(speedups["bc"], 3),
                      "tileview_refresh_vs_rebuild": round(tile_speedup, 3)},
-        "service": {"update_ops_per_s": round(ops_per_s, 1)},
+        "service": service_stats,
         "tile_occupancy": tile_stats,
         "verified": bool(verify),
     }

@@ -475,8 +475,10 @@ def main(a):
           f"{incr['bc']['speedup_delta_vs_full']:.2f}x over full",
           flush=True)
 
+    from report import bench_metadata
     payload = {
         "bench": "shard",
+        "meta": bench_metadata(),
         "backend": jax.default_backend(),
         "devices": n_dev,
         "params": {"n": a.n, "edge_factor": a.edge_factor,

@@ -1,14 +1,50 @@
-"""Emit the EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts."""
+"""Emit the EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts,
+plus the shared ``bench_metadata()`` header every BENCH_*.json emitter
+stamps into its payload (schema version, git sha, device inventory)."""
+import datetime
 import glob
 import json
 import os
+import subprocess
 import sys
 
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
-import roofline  # noqa: E402
+
+BENCH_SCHEMA_VERSION = 1
+
+
+def _git_sha():
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or None
+    except Exception:
+        return None
+
+
+def bench_metadata():
+    """The provenance header shared by every BENCH_*.json payload.
+
+    One place defines the schema, so the CI gates (and any diffing of
+    bench artifacts across commits) can rely on every emitter carrying
+    the same ``meta`` block.
+    """
+    import jax
+    return {
+        "bench_schema": BENCH_SCHEMA_VERSION,
+        "git_sha": _git_sha(),
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "timestamp": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+    }
 
 
 def dryrun_table():
+    import roofline
     rows = []
     for fn in sorted(glob.glob(os.path.join(roofline.DEFAULT_DIR, "*.json"))):
         rec = json.load(open(fn))
@@ -33,6 +69,7 @@ def dryrun_table():
 
 
 def graph_table():
+    import roofline
     out = ["| cell | mesh | query | per-level coll | flops(body) | compile |",
            "|---|---|---|---|---|---|"]
     for fn in sorted(glob.glob(os.path.join(roofline.DEFAULT_DIR,
@@ -52,6 +89,7 @@ def graph_table():
 
 
 if __name__ == "__main__":
+    import roofline
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
     if which in ("all", "dryrun"):
         print(dryrun_table())

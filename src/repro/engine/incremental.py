@@ -62,6 +62,7 @@ from repro.core.queries import (
     sssp,
     sssp_tree_parents,
 )
+from repro.obs.trace import annotate as _trace_annotate
 
 
 @dataclass
@@ -269,6 +270,7 @@ def incremental_bfs(state: GraphState, prior: Optional[BFSResult],
         return bfs(state, src), IncrementalStats("full")
     n_dirty, touched = (int(x) for x in _dirty_stats(prior.reached, dirty))
     frac = n_dirty / state.vcap
+    _trace_annotate(dirty=n_dirty, dirty_frac=round(frac, 6))
     stats = IncrementalStats("delta", n_dirty, frac)
     # Unchanged beats the threshold check: churn confined outside the
     # query's reached region leaves the cached answer valid no matter how
@@ -291,6 +293,7 @@ def incremental_sssp(state: GraphState, prior: Optional[SSSPResult],
     n_dirty, touched = (int(x) for x in _dirty_stats(prior.dist < jnp.inf,
                                                      dirty))
     frac = n_dirty / state.vcap
+    _trace_annotate(dirty=n_dirty, dirty_frac=round(frac, 6))
     stats = IncrementalStats("delta", n_dirty, frac)
     if not touched:
         stats.mode = "unchanged"
@@ -325,6 +328,7 @@ def incremental_bc(state: GraphState, prior: Optional[BCResult],
         return bc_dependencies(state, src), IncrementalStats("full")
     n_dirty, touched = (int(x) for x in _dirty_stats(prior.level >= 0, dirty))
     frac = n_dirty / state.vcap
+    _trace_annotate(dirty=n_dirty, dirty_frac=round(frac, 6))
     stats = IncrementalStats("delta", n_dirty, frac)
     if not touched:
         stats.mode = "unchanged"

@@ -38,6 +38,8 @@ from dataclasses import dataclass, field
 from typing import List, Optional, Sequence, Tuple
 
 from repro.core.updates import NOP, PUTE, PUTV, REME, REMV, apply_ops
+from repro.obs import CounterStruct
+from repro.obs.trace import maybe_span
 
 from .version_ring import RingEntry, VersionRing
 
@@ -45,13 +47,13 @@ _VERTEX_OPS = (PUTV, REMV)
 _EDGE_OPS = (PUTE, REME)
 
 
-@dataclass
-class SchedulerStats:
-    ops_submitted: int = 0
-    ops_committed: int = 0
-    ops_coalesced: int = 0
-    batches_committed: int = 0
-    strict_cuts: int = 0
+class SchedulerStats(CounterStruct):
+    """Op-log tallies, as ``scheduler_*`` registry counters since PR 6
+    (attribute surface unchanged; see :class:`repro.obs.CounterStruct`)."""
+
+    _FIELDS = ("ops_submitted", "ops_committed", "ops_coalesced",
+               "batches_committed", "strict_cuts")
+    _PREFIX = "scheduler_"
 
 
 @dataclass
@@ -63,12 +65,17 @@ class StreamScheduler:
     strict_order: bool = False
     coalesce: bool = False
     auto_commit: bool = True
+    telemetry: object = None  # Optional[repro.obs.Telemetry]
     _log: List[Tuple] = field(default_factory=list)
-    stats: SchedulerStats = field(default_factory=SchedulerStats)
+    stats: SchedulerStats = None
 
     def __post_init__(self):
         if self.batch_size < 1:
             raise ValueError("batch_size must be >= 1")
+        if self.stats is None:
+            registry = (self.telemetry.registry
+                        if self.telemetry is not None else None)
+            self.stats = SchedulerStats(registry)
 
     # ------------------------------ intake -------------------------------
 
@@ -121,9 +128,13 @@ class StreamScheduler:
     def _commit_chunk(self, chunk: List[Tuple]) -> RingEntry:
         n_raw = len(chunk)
         chunk = self._coalesce_chunk(chunk)
-        state, _ = apply_ops(self.ring.latest.state, chunk,
-                             batch_size=self.batch_size)
-        entry = self.ring.commit(state)
+        tracer = self.telemetry.tracer if self.telemetry is not None else None
+        with maybe_span(tracer, "commit", batch_ops=n_raw,
+                        coalesced=n_raw - len(chunk)) as sp:
+            state, _ = apply_ops(self.ring.latest.state, chunk,
+                                 batch_size=self.batch_size)
+            entry = self.ring.commit(state)
+            sp.set(version=entry.version)
         self.stats.ops_committed += n_raw
         self.stats.batches_committed += 1
         return entry

@@ -35,15 +35,19 @@ implement how a single collect is answered.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import queries
 from repro.core.graph_state import GraphState
 from repro.core.snapshot import ScanStats
 from repro.core.tiles import TileView, refresh_tile_view
+from repro.obs import CounterStruct, ModeCounters, Telemetry
+from repro.obs.trace import maybe_span
 
 from .incremental import (
     _dirty_stats,
@@ -61,17 +65,19 @@ _FULL = {"bfs": queries.bfs, "sssp": queries.sssp,
          "bc": queries.bc_dependencies}
 
 
-@dataclass
-class ServiceStats:
+class ServiceStats(CounterStruct):
     """Per-query mode tallies: unchanged + delta + full == queries (a cn
-    query is counted once, by its final collect's mode)."""
+    query is counted once, by its final collect's mode).
 
-    queries: int = 0
-    unchanged: int = 0
-    delta: int = 0
-    full: int = 0
-    collects: int = 0
-    cn_retries: int = 0
+    Attribute names are the stable API (``svc.stats.delta`` etc.); since
+    PR 6 the values live as ``service_*`` counters in a
+    :class:`repro.obs.MetricsRegistry` — the service's telemetry registry
+    when one is attached, a private registry otherwise.
+    """
+
+    _FIELDS = ("queries", "unchanged", "delta", "full", "collects",
+               "cn_retries")
+    _PREFIX = "service_"
 
     def count(self, mode: str) -> None:
         if mode == "unchanged":
@@ -129,20 +135,29 @@ class BaseGraphService:
 
     #: query kinds this service answers (subclass attribute).
     _kinds: Tuple[str, ...] = ()
+    #: ``service`` label on every metric / trace record (subclass attr).
+    _service_name: str = "service"
 
     def _init_service(self, initial_state: GraphState, *, ring_depth: int,
                       batch_size: int, dirty_threshold: float,
                       strict_order: bool, coalesce: bool, max_collects: int,
-                      max_cached: int) -> None:
+                      max_cached: int,
+                      telemetry: Optional[Telemetry] = None) -> None:
+        self.telemetry = telemetry
+        registry = telemetry.registry if telemetry is not None else None
         self.ring = VersionRing(initial_state, depth=ring_depth)
         self.scheduler = StreamScheduler(
             self.ring, batch_size=batch_size, strict_order=strict_order,
-            coalesce=coalesce)
+            coalesce=coalesce, telemetry=telemetry)
         self.dirty_threshold = dirty_threshold
         self.max_collects = max_collects
         self.max_cached = max_cached
-        self.stats = ServiceStats()
+        self.stats = ServiceStats(registry, service=self._service_name)
         self._cache: Dict[Tuple, _CacheSlot] = {}
+        # HLO-attributed cost of the current query's device programs,
+        # summed over its collects (the sharded service charges it; the
+        # local engine has no collectives, so it reports zero bytes).
+        self._query_cost = {"coll_bytes": 0, "temp_bytes": 0}
 
     # ------------------------------ updates ------------------------------
 
@@ -197,6 +212,27 @@ class BaseGraphService:
         service carries the psum cross-shard agreement here)."""
         return False
 
+    # ----------------------------- telemetry -----------------------------
+
+    def _charge_cost(self, cost: Optional[dict]) -> None:
+        """Accumulate one collect's HLO-attributed cost into the current
+        query's trace record (sharded subclass calls this per dispatch)."""
+        if cost:
+            self._query_cost["coll_bytes"] += cost.get("collective_bytes",
+                                                       0) or 0
+            self._query_cost["temp_bytes"] = max(
+                self._query_cost["temp_bytes"], cost.get("temp_bytes") or 0)
+
+    def _traced_collect(self, kind: str, srcs, key):
+        """``_collect`` wrapped in a child span when tracing is on."""
+        tel = self.telemetry
+        if tel is None:
+            return self._collect(kind, srcs, key)
+        with tel.tracer.span("collect", kind=kind) as sp:
+            entry, res, qmode = self._collect(kind, srcs, key)
+            sp.set(version=entry.version, mode=qmode)
+        return entry, res, qmode
+
     # ------------------------------ queries ------------------------------
 
     def query(self, kind: str, srcs=None, mode: str = "icn") -> QueryReply:
@@ -206,16 +242,48 @@ class BaseGraphService:
         (a vertex id for the local service; an id or sequence — ``None`` =
         all slots, BC only — for the sharded one).
         ``mode``: ``"icn"`` (single collect) or ``"cn"`` (double collect).
+
+        With telemetry attached, every call emits one ``span == "query"``
+        trace record carrying kind / ring version / ladder mode /
+        wall+block time / collect count / HLO collective bytes, and
+        observes the wall time into the ``query_wall_us`` histogram
+        (labelled service/kind/mode) the latency benches read p50/p99
+        from.
         """
         if kind not in self._kinds:
             raise KeyError(f"unknown query kind {kind!r}")
         if mode not in ("icn", "cn"):
             raise ValueError(f"unknown mode {mode!r}")
         self._check_srcs(kind, srcs)
+        tel = self.telemetry
+        if tel is None:
+            return self._query_inner(kind, srcs, mode)
+        self._query_cost = {"coll_bytes": 0, "temp_bytes": 0}
+        with tel.tracer.span("query", service=self._service_name,
+                             kind=kind, cn=(mode == "cn")) as sp:
+            reply = self._query_inner(kind, srcs, mode)
+            block_us = 0.0
+            if tel.block:
+                t0 = time.perf_counter()
+                jax.block_until_ready(reply.result)
+                block_us = (time.perf_counter() - t0) * 1e6
+            sp.set(version=reply.version, mode=reply.mode,
+                   collects=reply.scan.collects,
+                   cn_interrupts=reply.scan.interrupting_updates,
+                   validated=reply.validated,
+                   block_us=round(block_us, 1),
+                   coll_bytes=self._query_cost["coll_bytes"],
+                   temp_bytes=self._query_cost["temp_bytes"])
+        tel.registry.histogram(
+            "query_wall_us", service=self._service_name, kind=kind,
+            mode=reply.mode).observe(sp.wall_us)
+        return reply
+
+    def _query_inner(self, kind: str, srcs, mode: str) -> QueryReply:
         self.stats.queries += 1
         key = self._key(kind, srcs)
         if mode == "icn":
-            entry, res, qmode = self._collect(kind, srcs, key)
+            entry, res, qmode = self._traced_collect(kind, srcs, key)
             self.stats.collects += 1
             self.stats.count(qmode)
             return QueryReply(res, entry.version, qmode,
@@ -234,11 +302,12 @@ class BaseGraphService:
         """
         scan = ScanStats()
         v0 = self.ring.latest.version
-        entry, prev_res, qmode = self._collect(kind, srcs, key)
+        entry, prev_res, qmode = self._traced_collect(kind, srcs, key)
         scan.collects = 1
         while scan.collects < self.max_collects:
             self.scheduler.commit_one()  # interrupting update, if pending
-            cur_entry, cur_res, cur_mode = self._collect(kind, srcs, key)
+            cur_entry, cur_res, cur_mode = self._traced_collect(kind, srcs,
+                                                               key)
             scan.collects += 1
             if cur_entry.version == entry.version or results_equal(
                     prev_res, cur_res):
@@ -261,20 +330,24 @@ class GraphService(BaseGraphService):
     """submit()/query() front end: streaming updates, incremental queries."""
 
     _kinds = ("bfs", "sssp", "bc")
+    _service_name = "local"
 
     def __init__(self, initial_state: GraphState, *, ring_depth: int = 8,
                  batch_size: int = 32, dirty_threshold: float = 0.25,
                  strict_order: bool = False, coalesce: bool = False,
-                 max_collects: int = 16, max_cached: int = 512):
+                 max_collects: int = 16, max_cached: int = 512,
+                 telemetry: Optional[Telemetry] = None):
         self._init_service(
             initial_state, ring_depth=ring_depth, batch_size=batch_size,
             dirty_threshold=dirty_threshold, strict_order=strict_order,
             coalesce=coalesce, max_collects=max_collects,
-            max_cached=max_cached)
+            max_cached=max_cached, telemetry=telemetry)
         self._tiles: Optional[TileView] = None
         self._tiles_version: int = -1
         self._bc_scores: Optional[dict] = None
-        self.bc_scores_stats = {"unchanged": 0, "delta": 0, "full": 0}
+        self.bc_scores_stats = ModeCounters(
+            self.stats.registry, "bc_scores_queries",
+            service=self._service_name)
 
     # ------------------------------ queries ------------------------------
 
@@ -313,7 +386,10 @@ class GraphService(BaseGraphService):
         dirty = None
         if self._tiles is not None:
             dirty = self.ring.dirty_between(self._tiles_version, entry.version)
-        self._tiles = refresh_tile_view(entry.state, self._tiles, dirty)
+        tracer = self.telemetry.tracer if self.telemetry else None
+        with maybe_span(tracer, "tile_refresh", service=self._service_name,
+                        full=(self._tiles is None or dirty is None)):
+            self._tiles = refresh_tile_view(entry.state, self._tiles, dirty)
         self._tiles_version = entry.version
         return self._tiles
 

@@ -1,0 +1,138 @@
+"""Render a per-kind/per-mode summary table from a JSONL trace file.
+
+    PYTHONPATH=src python -m repro.obs.report TRACE.jsonl [--check] \\
+        [--require-modes unchanged,delta,full]
+
+Aggregates the ``span == "query"`` records a traced
+``GraphService``/``ShardedGraphService`` emitted: one row per
+(service, kind, ladder mode) with query counts, wall-time quantiles,
+validated counts, and mean HLO-attributed collective bytes.  ``--check``
+turns the reader into a CI gate: every query record must carry the full
+schema (kind/version/mode/wall/collective-bytes), and with
+``--require-modes`` each named ladder mode must have a non-empty row —
+the shard-smoke job runs exactly this against a short traced stream.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+from .metrics import quantile
+from .trace import TRACE_SCHEMA
+
+#: fields every query trace record must carry (the acceptance schema).
+QUERY_FIELDS = ("schema", "span", "wall_us", "kind", "version", "mode",
+                "coll_bytes", "service")
+
+
+def load(path: str) -> list:
+    records = []
+    with open(path) as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                records.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                raise SystemExit(f"{path}:{i + 1}: invalid JSON: {e}")
+    return records
+
+
+def query_records(records: list) -> list:
+    return [r for r in records if r.get("span") == "query"]
+
+
+def validate(records: list, require_modes=()) -> list:
+    """Schema + coverage errors (empty list == valid)."""
+    errors = []
+    qrecs = query_records(records)
+    if not qrecs:
+        errors.append("no query records in trace")
+    for i, r in enumerate(qrecs):
+        missing = [f for f in QUERY_FIELDS if f not in r]
+        if missing:
+            errors.append(f"query record {i} missing fields: {missing}")
+        elif r["schema"] != TRACE_SCHEMA:
+            errors.append(f"query record {i}: schema {r['schema']} != "
+                          f"{TRACE_SCHEMA}")
+    seen_modes = {r.get("mode") for r in qrecs}
+    for mode in require_modes:
+        if mode not in seen_modes:
+            errors.append(f"required ladder mode {mode!r} has no query "
+                          f"records (saw {sorted(m for m in seen_modes if m)})")
+    return errors
+
+
+def summarize(records: list) -> list:
+    """Rows of (service, kind, mode) aggregates over the query records."""
+    groups = defaultdict(list)
+    for r in query_records(records):
+        groups[(r.get("service", "?"), r.get("kind", "?"),
+                r.get("mode", "?"))].append(r)
+    rows = []
+    for (service, kind, mode), rs in sorted(groups.items()):
+        walls = [r.get("wall_us", 0.0) for r in rs]
+        rows.append({
+            "service": service, "kind": kind, "mode": mode,
+            "queries": len(rs),
+            "p50_us": round(quantile(walls, 0.50), 1),
+            "p95_us": round(quantile(walls, 0.95), 1),
+            "p99_us": round(quantile(walls, 0.99), 1),
+            "validated": sum(bool(r.get("validated")) for r in rs),
+            "coll_bytes_mean": round(
+                sum(r.get("coll_bytes", 0) or 0 for r in rs) / len(rs)),
+        })
+    return rows
+
+
+def render(rows: list) -> str:
+    cols = ("service", "kind", "mode", "queries", "p50_us", "p95_us",
+            "p99_us", "validated", "coll_bytes_mean")
+    widths = {c: max(len(c), *(len(str(r[c])) for r in rows)) if rows
+              else len(c) for c in cols}
+    lines = ["  ".join(c.ljust(widths[c]) for c in cols),
+             "  ".join("-" * widths[c] for c in cols)]
+    for r in rows:
+        lines.append("  ".join(str(r[c]).ljust(widths[c]) for c in cols))
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.obs.report",
+        description=__doc__.splitlines()[0])
+    p.add_argument("trace", help="JSONL trace file (Tracer export)")
+    p.add_argument("--check", action="store_true",
+                   help="validate schema; non-zero exit on any error")
+    p.add_argument("--require-modes", default="",
+                   help="comma-separated ladder modes that must each have "
+                        "at least one query record (implies --check)")
+    p.add_argument("--json", action="store_true",
+                   help="print the summary rows as JSON instead of a table")
+    a = p.parse_args(argv)
+
+    records = load(a.trace)
+    rows = summarize(records)
+    if a.json:
+        print(json.dumps(rows, indent=2))
+    else:
+        print(render(rows))
+
+    require = tuple(m for m in a.require_modes.split(",") if m)
+    if a.check or require:
+        errors = validate(records, require_modes=require)
+        if errors:
+            for e in errors:
+                print(f"CHECK FAIL: {e}", file=sys.stderr)
+            return 1
+        n = len(query_records(records))
+        print(f"CHECK OK: {n} query records, {len(rows)} summary rows, "
+              f"schema {TRACE_SCHEMA}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,149 @@
+"""Span-based tracing with JSONL export.
+
+A :class:`Tracer` turns instrumented regions into flat trace records: each
+``with tracer.span("query", kind="bfs") as sp`` emits one dict carrying the
+span name, its wall time, an ``id``/``parent`` pair (nesting is tracked
+through a :mod:`contextvars` variable, so spans opened anywhere down the
+call stack — scheduler commits, tile refreshes, collect loops — attach to
+the enclosing query span without threading a handle through every layer),
+and whatever attributes the region set.  Records are kept in memory
+(``tracer.records``, bounded) and, when a path is given, appended to a
+JSONL file that ``python -m repro.obs.report`` renders into the
+per-kind/per-mode summary table.
+
+:func:`annotate` is the deliberately tiny hook the engine internals use:
+it sets attributes on the *current* span if one is active and costs one
+contextvar read otherwise — so ``engine.incremental`` can report dirty
+counts without knowing whether anyone is tracing.
+"""
+from __future__ import annotations
+
+import contextvars
+import json
+import time
+from contextlib import contextmanager
+from typing import IO, Optional
+
+__all__ = ["TRACE_SCHEMA", "Span", "Tracer", "annotate", "current_span"]
+
+#: bump when the record layout changes; readers reject unknown majors.
+TRACE_SCHEMA = 1
+
+_CURRENT: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_obs_span", default=None)
+
+
+def current_span() -> Optional["Span"]:
+    return _CURRENT.get()
+
+
+def annotate(**attrs) -> None:
+    """Attach attributes to the innermost active span (no-op untraced)."""
+    sp = _CURRENT.get()
+    if sp is not None:
+        sp.set(**attrs)
+
+
+class Span:
+    """One open region; becomes a single trace record on exit."""
+
+    __slots__ = ("name", "id", "parent", "attrs", "t0", "wall_us")
+
+    def __init__(self, name: str, span_id: int, parent: Optional[int],
+                 attrs: dict):
+        self.name = name
+        self.id = span_id
+        self.parent = parent
+        self.attrs = attrs
+        self.t0 = time.perf_counter()
+        self.wall_us = 0.0
+
+    def set(self, **attrs) -> None:
+        self.attrs.update(attrs)
+
+    def setdefault(self, **attrs) -> None:
+        for k, v in attrs.items():
+            self.attrs.setdefault(k, v)
+
+
+class Tracer:
+    """Collects span records; optionally streams them to a JSONL file.
+
+    ``max_records`` bounds the in-memory list (oldest dropped) so an
+    always-on tracer cannot grow a long-lived service without bound; the
+    JSONL sink, when given, sees every record regardless.
+    """
+
+    def __init__(self, path: Optional[str] = None, max_records: int = 100000):
+        self.path = path
+        self.max_records = max_records
+        self.records: list = []
+        self.dropped = 0
+        self._next_id = 0
+        self._t0 = time.perf_counter()
+        self._sink: Optional[IO] = open(path, "a") if path else None
+
+    @contextmanager
+    def span(self, name: str, **attrs):
+        sp = Span(name, self._next_id, getattr(_CURRENT.get(), "id", None),
+                  attrs)
+        self._next_id += 1
+        token = _CURRENT.set(sp)
+        try:
+            yield sp
+        finally:
+            _CURRENT.reset(token)
+            sp.wall_us = (time.perf_counter() - sp.t0) * 1e6
+            self._emit(sp)
+
+    def _emit(self, sp: Span) -> None:
+        rec = {"schema": TRACE_SCHEMA, "span": sp.name, "id": sp.id,
+               "parent": sp.parent,
+               "t_s": round(sp.t0 - self._t0, 6),
+               "wall_us": round(sp.wall_us, 1)}
+        rec.update(sp.attrs)
+        if len(self.records) >= self.max_records:
+            self.records.pop(0)
+            self.dropped += 1
+        self.records.append(rec)
+        if self._sink is not None:
+            self._sink.write(json.dumps(rec) + "\n")
+            self._sink.flush()
+
+    def close(self) -> None:
+        if self._sink is not None:
+            self._sink.close()
+            self._sink = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+@contextmanager
+def maybe_span(tracer: Optional[Tracer], name: str, **attrs):
+    """``tracer.span`` when tracing, a reusable null span otherwise — so
+    instrumented code writes one code path and pays a single ``None``
+    check when telemetry is off."""
+    if tracer is None:
+        yield _NULL_SPAN
+    else:
+        with tracer.span(name, **attrs) as sp:
+            yield sp
+
+
+class _NullSpan:
+    __slots__ = ()
+    id = None
+    wall_us = 0.0
+
+    def set(self, **attrs) -> None:
+        pass
+
+    def setdefault(self, **attrs) -> None:
+        pass
+
+
+_NULL_SPAN = _NullSpan()

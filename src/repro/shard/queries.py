@@ -621,8 +621,29 @@ def _mesh_replicated(view: ShardedTileView, x: jax.Array) -> jax.Array:
     return jax.device_put(x, NamedSharding(view.mesh, P()))
 
 
+def _account(accountant, kind: str, view: ShardedTileView, fn, args,
+             use_kernel: bool, src_chunk: int | None = None) -> None:
+    """Deposit the compiled program's HLO cost with the accountant.
+
+    Cached per program signature — (kind, mesh shape, tile, flags, operand
+    shapes) — so only the FIRST query of a given shape pays one extra
+    lower+compile of the very ``query_fn`` program it just ran; every
+    later query reads the cached dict (collective bytes, temp memory,
+    flops) that the service attributes to its trace record.  The result
+    lands in ``accountant.last`` (see ``repro.obs.hlo``); return types
+    stay untouched.
+    """
+    if accountant is None:
+        return
+    key = ("shard_query", kind, view.mesh.shape_tuple, view.tile,
+           use_kernel, src_chunk) + tuple(
+        (tuple(a.shape), str(a.dtype))
+        for a in args if hasattr(a, "shape"))
+    accountant.account(key, lambda: fn.lower(*args).compile())
+
+
 def bfs(view: ShardedTileView, state: GraphState, srcs, *,
-        use_kernel: bool = False) -> ShardedBFSResult:
+        use_kernel: bool = False, accountant=None) -> ShardedBFSResult:
     """Distributed multi-source BFS; ``dist`` is sliced back to ``vcap``.
 
     ``parent`` is reconstructed from the final distances on the replicated
@@ -632,15 +653,16 @@ def bfs(view: ShardedTileView, state: GraphState, srcs, *,
     """
     srcs = _srcs_array(srcs)
     fn = query_fn(view.mesh, "bfs", view.tile, use_kernel)
-    ok, dist, val_ecnt, agree = fn(view.w, view.occ, state.alive, state.ecnt,
-                                   srcs, state.version)
+    args = (view.w, view.occ, state.alive, state.ecnt, srcs, state.version)
+    ok, dist, val_ecnt, agree = fn(*args)
+    _account(accountant, "bfs", view, fn, args, use_kernel)
     dist = _host_local(view, dist)[:, :state.vcap]
     parent = bfs_tree_parents(state, dist, srcs)
     return ShardedBFSResult(ok, dist, parent, val_ecnt, agree)
 
 
 def sssp(view: ShardedTileView, state: GraphState, srcs, *,
-         use_kernel: bool = False) -> ShardedSSSPResult:
+         use_kernel: bool = False, accountant=None) -> ShardedSSSPResult:
     """Distributed multi-source Bellman-Ford with negative-cycle flags.
 
     ``parent`` follows ``queries.sssp`` (tight edges, min-source tie-break)
@@ -648,8 +670,9 @@ def sssp(view: ShardedTileView, state: GraphState, srcs, *,
     """
     srcs = _srcs_array(srcs)
     fn = query_fn(view.mesh, "sssp", view.tile, use_kernel)
-    ok, neg, dist, val_ecnt, agree = fn(view.w, view.occ, state.alive,
-                                        state.ecnt, srcs, state.version)
+    args = (view.w, view.occ, state.alive, state.ecnt, srcs, state.version)
+    ok, neg, dist, val_ecnt, agree = fn(*args)
+    _account(accountant, "sssp", view, fn, args, use_kernel)
     dist = _host_local(view, dist)[:, :state.vcap]
     parent = sssp_tree_parents(state, dist, srcs)
     return ShardedSSSPResult(ok, neg, dist, parent, val_ecnt, agree)
@@ -657,7 +680,7 @@ def sssp(view: ShardedTileView, state: GraphState, srcs, *,
 
 def bc_batched(view: ShardedTileView, state: GraphState, srcs=None, *,
                use_kernel: bool = False, src_chunk: int | None = None,
-               bc_mode: str = "gather") -> ShardedBCResult:
+               bc_mode: str = "gather", accountant=None) -> ShardedBCResult:
     """Distributed batched Brandes, source axis sharded over the mesh.
 
     ``srcs`` defaults to every vertex slot (exact all-sources BC); it is
@@ -679,8 +702,10 @@ def bc_batched(view: ShardedTileView, state: GraphState, srcs=None, *,
     srcs = _srcs_array(srcs, view.n_shards, pad_to_shards=True)
     fn = query_fn(view.mesh, _bc_kind(bc_mode, delta=False), view.tile,
                   use_kernel, src_chunk)
-    ok, delta, sigma, level, scores, val_ecnt, agree = fn(
-        view.w, view.occ, state.alive, state.ecnt, srcs, state.version)
+    args = (view.w, view.occ, state.alive, state.ecnt, srcs, state.version)
+    ok, delta, sigma, level, scores, val_ecnt, agree = fn(*args)
+    _account(accountant, _bc_kind(bc_mode, delta=False), view, fn, args,
+             use_kernel, src_chunk)
     vcap = state.vcap
     return ShardedBCResult(ok[:n_srcs], delta[:n_srcs, :vcap],
                            sigma[:n_srcs, :vcap], level[:n_srcs, :vcap],
@@ -779,7 +804,8 @@ def _bfs_delta_state0(state: GraphState, prior_dist, dirty, srcs, vp: int):
 
 def delta_bfs_sharded(view: ShardedTileView, state: GraphState,
                       prior: ShardedBFSResult, dirty, srcs, *,
-                      use_kernel: bool = False) -> ShardedBFSResult:
+                      use_kernel: bool = False,
+                      accountant=None) -> ShardedBFSResult:
     """Distributed delta BFS: level cut unsharded, warm loop on the mesh.
 
     ``prior`` must be a result for the SAME ``srcs`` at an earlier version
@@ -795,9 +821,10 @@ def delta_bfs_sharded(view: ShardedTileView, state: GraphState,
                                     vp=view.vp)
     dist0, lvl0 = (_mesh_replicated(view, x) for x in (dist0, lvl0))
     fn = query_fn(view.mesh, "bfs_delta", view.tile, use_kernel)
-    ok, dist, val_ecnt, agree = fn(view.w, view.occ, state.alive,
-                                   state.ecnt, srcs, state.version,
-                                   dist0, lvl0)
+    args = (view.w, view.occ, state.alive, state.ecnt, srcs, state.version,
+            dist0, lvl0)
+    ok, dist, val_ecnt, agree = fn(*args)
+    _account(accountant, "bfs_delta", view, fn, args, use_kernel)
     dist = _host_local(view, dist)[:, :state.vcap]
     parent = bfs_tree_parents(state, dist, srcs)
     return ShardedBFSResult(ok, dist, parent, val_ecnt, agree)
@@ -805,7 +832,8 @@ def delta_bfs_sharded(view: ShardedTileView, state: GraphState,
 
 def delta_sssp_sharded(view: ShardedTileView, state: GraphState,
                        prior: ShardedSSSPResult, dirty, srcs, *,
-                       use_kernel: bool = False) -> ShardedSSSPResult:
+                       use_kernel: bool = False,
+                       accountant=None) -> ShardedSSSPResult:
     """Distributed delta Bellman-Ford: poison unsharded, re-relax sharded.
 
     The prior must be negative-cycle-free (its distances must be converged
@@ -820,9 +848,10 @@ def delta_sssp_sharded(view: ShardedTileView, state: GraphState,
     dist0, active0 = (_mesh_replicated(view, x) for x in _sssp_delta_dist0(
         state, prior.dist, prior.parent, dirty, srcs, vp=view.vp))
     fn = query_fn(view.mesh, "sssp_delta", view.tile, use_kernel)
-    ok, changed, dist, val_ecnt, agree = fn(view.w, view.occ, state.alive,
-                                            state.ecnt, srcs, state.version,
-                                            dist0, active0)
+    args = (view.w, view.occ, state.alive, state.ecnt, srcs, state.version,
+            dist0, active0)
+    ok, changed, dist, val_ecnt, agree = fn(*args)
+    _account(accountant, "sssp_delta", view, fn, args, use_kernel)
     dist = _host_local(view, dist)[:, :state.vcap]
     parent = sssp_tree_parents(state, dist, srcs)
     return ShardedSSSPResult(ok & ~changed, changed, dist, parent,
@@ -832,7 +861,8 @@ def delta_sssp_sharded(view: ShardedTileView, state: GraphState,
 def delta_bc_sharded(view: ShardedTileView, state: GraphState,
                      prior: ShardedBCResult, dirty, srcs=None, *,
                      use_kernel: bool = False, src_chunk: int | None = None,
-                     bc_mode: str = "gather") -> ShardedBCResult:
+                     bc_mode: str = "gather",
+                     accountant=None) -> ShardedBCResult:
     """Distributed level-cut delta BC, source axis sharded as in ``bc_batched``.
 
     Each shard cuts its own sources' cached forward trees at the shallowest
@@ -861,9 +891,11 @@ def delta_bc_sharded(view: ShardedTileView, state: GraphState,
     dirty = _mesh_replicated(view, dirty)
     fn = query_fn(view.mesh, _bc_kind(bc_mode, delta=True), view.tile,
                   use_kernel, src_chunk)
-    ok, delta, sigma, level, scores, val_ecnt, agree = fn(
-        view.w, view.occ, state.alive, state.ecnt, srcs, state.version,
-        dirty, level, sigma)
+    args = (view.w, view.occ, state.alive, state.ecnt, srcs, state.version,
+            dirty, level, sigma)
+    ok, delta, sigma, level, scores, val_ecnt, agree = fn(*args)
+    _account(accountant, _bc_kind(bc_mode, delta=True), view, fn, args,
+             use_kernel, src_chunk)
     return ShardedBCResult(ok[:n_srcs], delta[:n_srcs, :vcap],
                            sigma[:n_srcs, :vcap], level[:n_srcs, :vcap],
                            scores, val_ecnt, agree)

@@ -48,12 +48,16 @@ from repro.core.tiles import TILE
 from repro.engine.incremental import _dirty_stats
 from repro.engine.service import BaseGraphService, QueryReply  # noqa: F401
 from repro.engine.service import ServiceStats  # noqa: F401  (re-export)
+from repro.obs import Telemetry
+from repro.obs.trace import annotate as _trace_annotate
+from repro.obs.trace import maybe_span
 
 from . import queries as shard_queries
 from .tile_shard import (
     ShardedTileView,
     as_graph_mesh,
     refresh_sharded_view,
+    refresh_stats,
 )
 
 _QUERIES = {"bfs": shard_queries.bfs, "sssp": shard_queries.sssp,
@@ -85,6 +89,7 @@ class ShardedGraphService(BaseGraphService):
     """
 
     _kinds = ("bfs", "sssp", "bc")
+    _service_name = "sharded"
 
     def __init__(self, initial_state: GraphState, mesh: Mesh, *,
                  tile: int = TILE, use_kernel: bool = False,
@@ -92,7 +97,8 @@ class ShardedGraphService(BaseGraphService):
                  ring_depth: int = 8, batch_size: int = 32,
                  dirty_threshold: float = 0.25, strict_order: bool = False,
                  coalesce: bool = False, max_collects: int = 16,
-                 max_cached: int = 128):
+                 max_cached: int = 128,
+                 telemetry: Optional[Telemetry] = None):
         shard_queries._bc_kind(bc_mode, delta=False)  # validate up front
         self.mesh = as_graph_mesh(mesh)
         self.tile = tile
@@ -103,7 +109,7 @@ class ShardedGraphService(BaseGraphService):
             initial_state, ring_depth=ring_depth, batch_size=batch_size,
             dirty_threshold=dirty_threshold, strict_order=strict_order,
             coalesce=coalesce, max_collects=max_collects,
-            max_cached=max_cached)
+            max_cached=max_cached, telemetry=telemetry)
         self._view: Optional[ShardedTileView] = None
         self._view_version: int = -1
 
@@ -118,8 +124,15 @@ class ShardedGraphService(BaseGraphService):
         dirty = None
         if self._view is not None:
             dirty = self.ring.dirty_between(self._view_version, entry.version)
-        self._view = refresh_sharded_view(entry.state, self._view, dirty,
-                                          mesh=self.mesh, tile=self.tile)
+        tracer = self.telemetry.tracer if self.telemetry is not None else None
+        rows0, disp0 = refresh_stats.rows, refresh_stats.dispatches
+        with maybe_span(tracer, "tile_refresh", service=self._service_name,
+                        full=(self._view is None or dirty is None)) as sp:
+            self._view = refresh_sharded_view(entry.state, self._view, dirty,
+                                              mesh=self.mesh, tile=self.tile)
+            sp.set(version=entry.version,
+                   rows=refresh_stats.rows - rows0,
+                   dispatches=refresh_stats.dispatches - disp0)
         self._view_version = entry.version
         return self._view
 
@@ -184,6 +197,9 @@ class ShardedGraphService(BaseGraphService):
                 if dirty is not None and union.shape[0] == state.vcap:
                     n_dirty, touched = (int(x) for x in
                                         _dirty_stats(union, dirty))
+                    _trace_annotate(
+                        dirty=n_dirty,
+                        dirty_frac=round(n_dirty / state.vcap, 6))
                     if not touched and self._revived_source(prior, srcs,
                                                             state):
                         touched = True
@@ -196,27 +212,51 @@ class ShardedGraphService(BaseGraphService):
                         if res is None:  # new negative cycle: canonical full
                             mode, res = "full", None
         if res is None:
+            acct = self._acct_begin()
             res = _QUERIES[kind](
                 self.view(), state, srcs,
                 **(self._bc_kwargs() if kind == "bc" else {}),
-                use_kernel=self.use_kernel)
+                use_kernel=self.use_kernel, accountant=acct)
+            self._acct_charge(acct)
         self._cache_store(key, entry.version, res)
         return entry, res, mode
 
     def _bc_kwargs(self) -> dict:
         return {"src_chunk": self.src_chunk, "bc_mode": self.bc_mode}
 
+    def _acct_begin(self):
+        """The HLO cost accountant with its deposit slot cleared, or None.
+
+        The shard query wrappers deposit their compiled program's cost
+        dict into ``accountant.last`` (``repro.obs.hlo``); the service
+        picks it up right after the dispatch and charges it to the
+        current query's trace record — wrapper return types stay exactly
+        what they were."""
+        tel = self.telemetry
+        acct = tel.accountant if tel is not None else None
+        if acct is not None:
+            acct.last = None
+        return acct
+
+    def _acct_charge(self, acct) -> None:
+        if acct is not None:
+            self._charge_cost(acct.last)
+
     def _delta_collect(self, kind: str, prior, dirty, srcs,
                        state: GraphState):
         """Run the distributed delta query; ``None`` = fall back to full
         (delta SSSP surfaced a negative cycle born since the prior)."""
         view = self.view()
+        acct = self._acct_begin()
         if kind == "bc":
-            return _DELTA[kind](view, state, prior, dirty, srcs,
-                                use_kernel=self.use_kernel,
-                                **self._bc_kwargs())
+            res = _DELTA[kind](view, state, prior, dirty, srcs,
+                               use_kernel=self.use_kernel, accountant=acct,
+                               **self._bc_kwargs())
+            self._acct_charge(acct)
+            return res
         res = _DELTA[kind](view, state, prior, dirty, srcs,
-                           use_kernel=self.use_kernel)
+                           use_kernel=self.use_kernel, accountant=acct)
+        self._acct_charge(acct)
         if kind == "sssp" and bool(res.negcycle.any()):
             return None
         return res

@@ -42,6 +42,7 @@ from repro.core.tiles import (
     dirty_row_windows,
     row_window_slab,
 )
+from repro.obs import CounterStruct
 
 GRAPH_AXIS = "graph"
 
@@ -175,16 +176,18 @@ def build_sharded_view(state: GraphState, mesh: Mesh,
 REFRESH_BATCH = 8  # max dirty tile rows fused into one shard_map dispatch
 
 
-@dataclass
-class RefreshStats:
+class RefreshStats(CounterStruct):
     """Per-process tallies of ``refresh_sharded_view``'s dispatch behavior
     (benchmarks read the deltas around a call): ``rows`` dirty tile rows
     refreshed, in ``dispatches`` shard_map program launches (the
-    pre-batching cost was one launch per row == ``rows``)."""
+    pre-batching cost was one launch per row == ``rows``).  Since PR 6 the
+    values are ``shard_refresh_*`` counters in a
+    :class:`repro.obs.MetricsRegistry`; the attribute surface (and the
+    ``refresh_stats`` module global that benches delta around calls) is
+    unchanged."""
 
-    rows: int = 0
-    dispatches: int = 0
-    rebuilds: int = 0
+    _FIELDS = ("rows", "dispatches", "rebuilds")
+    _PREFIX = "shard_refresh_"
 
 
 refresh_stats = RefreshStats()

@@ -19,6 +19,14 @@ weights (``neg_frac``) breed negative cycles mid-stream (delta SSSP must
 fall back to the canonical full answer) and REMV/PUTV pairs resurrect
 sources whose empty cached rows must restart cold.
 
+Every replay also runs with telemetry attached (one shared
+:class:`repro.obs.Telemetry` across the services): after the stream the
+harness asserts ladder-mode *conservation* — ``unchanged + delta + full ==
+stats.queries == #query trace records`` per service — and that the trace
+records agree, in order, with every oracle-validated answer's
+(kind, version, ladder mode).  ``trace_path`` additionally streams the
+records to a JSONL file for ``python -m repro.obs.report``.
+
 Everything is keyed on the integer ``seed`` (logged on entry), so any
 failure is reproducible with ``run_differential(seed, ...)`` alone.
 """
@@ -28,6 +36,7 @@ import numpy as np
 
 from repro.core import PUTE, PUTV, REME, REMV, make_graph
 from repro.engine import GraphService
+from repro.obs import Telemetry
 from oracle import GraphOracle
 
 INF = float("inf")
@@ -136,13 +145,16 @@ _CHECK = {"bfs": check_bfs, "sssp": check_sssp, "bc": check_bc}
 def run_differential(seed: int, *, n: int = 24, steps: int = 8,
                      ops_per_step: int = 8, neg_frac: float = 0.0,
                      mesh=None, tile: int = 8, bc_mode: str = "gather",
-                     batch_size: int = 4, score_every: int = 0):
+                     batch_size: int = 4, score_every: int = 0,
+                     trace_path=None):
     """Replay one seeded stream against oracle + service(s).
 
     Returns ``{service_name: {"unchanged": k, "delta": k, "full": k}}`` so
     callers can assert ladder-mode coverage.  Raises AssertionError (with
     the offending (service, kind, src, step, mode) context) on the first
-    divergence from the oracle.
+    divergence from the oracle, and at the end on any telemetry
+    inconsistency (mode-conservation or trace/answer disagreement — see
+    module docstring).  ``trace_path`` mirrors the trace to a JSONL file.
     """
     print(f"[stream-differential] seed={seed} n={n} steps={steps} "
           f"ops_per_step={ops_per_step} neg_frac={neg_frac} "
@@ -150,14 +162,19 @@ def run_differential(seed: int, *, n: int = 24, steps: int = 8,
     rng = np.random.default_rng(seed)
     g0 = make_graph(n, 16 * n)
     oracle = GraphOracle()
-    services = [("local", GraphService(g0, batch_size=batch_size), False)]
+    telemetry = Telemetry.make(trace_path, hlo=mesh is not None)
+    services = [("local", GraphService(g0, batch_size=batch_size,
+                                       telemetry=telemetry), False)]
     if mesh is not None:
         from repro.shard import ShardedGraphService
         services.append(("sharded", ShardedGraphService(
             g0, mesh, tile=tile, batch_size=batch_size, bc_mode=bc_mode,
-            src_chunk=2), True))
+            src_chunk=2, telemetry=telemetry), True))
     modes = {name: {"unchanged": 0, "delta": 0, "full": 0}
              for name, _, _ in services}
+    # Every oracle-validated explicit query's (kind, version, mode), in
+    # submission order, per service — checked against the trace at the end.
+    expected = {name: [] for name, _, _ in services}
 
     def commit(ops):
         _apply_oracle(oracle, ops)
@@ -189,9 +206,41 @@ def run_differential(seed: int, *, n: int = 24, steps: int = 8,
                     modes[name][reply.mode] += 1
                     ctx = (name, kind, src, step, reply.mode, seed)
                     _CHECK[kind](ctx, reply, oracle, src, n, sharded)
+                    expected[name].append((kind, reply.version, reply.mode))
         if score_every and (step + 1) % score_every == 0:
             for name, svc, _ in services:
                 scores, _ = svc.bc_scores()
                 check_scores((name, "bc_scores", step, seed), scores,
                              oracle, n)
+    _check_telemetry(seed, telemetry, services, modes, expected)
+    telemetry.close()
     return modes
+
+
+def _check_telemetry(seed, telemetry, services, modes, expected):
+    """Telemetry invariants over the whole replay (see module docstring)."""
+    assert telemetry.tracer.dropped == 0, seed
+    for name, svc, _ in services:
+        tally = modes[name]
+        recs = [r for r in telemetry.tracer.records
+                if r["span"] == "query" and r["service"] == name]
+        # Ladder-mode conservation: every query took exactly one rung.
+        assert (svc.stats.unchanged + svc.stats.delta + svc.stats.full
+                == svc.stats.queries), (seed, name)
+        assert len(recs) == svc.stats.queries, (seed, name)
+        # The explicit (oracle-validated) queries must appear in the trace
+        # in order with matching kind/version/mode; bc_scores() on the
+        # sharded service rides through query() and may interleave extra
+        # "bc" records, hence subsequence rather than equality.
+        it = iter(recs)
+        for want in expected[name]:
+            for rec in it:
+                if (rec["kind"], rec["version"], rec["mode"]) == want:
+                    break
+            else:
+                raise AssertionError((seed, name, "missing trace", want))
+        per_mode = {m: sum(1 for r in recs if r["mode"] == m)
+                    for m in ("unchanged", "delta", "full")}
+        for m in per_mode:
+            assert per_mode[m] >= tally[m], (seed, name, m)
+        assert sum(per_mode.values()) == len(recs), (seed, name)

@@ -1,0 +1,217 @@
+"""Unit tests for the telemetry subsystem (``repro.obs``).
+
+The integration path — a traced service stream asserting conservation and
+oracle agreement — lives in ``test_stream_differential``; here the
+instruments themselves are pinned: registry identity semantics, quantile
+math, the attribute shims the legacy stats objects became, span nesting /
+annotation, JSONL export through the ``repro.obs.report`` gate, and the
+HLO cost accountant's compile-once cache.
+"""
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.obs import (
+    CounterStruct,
+    HLOCostAccountant,
+    MetricsRegistry,
+    ModeCounters,
+    Telemetry,
+    Tracer,
+    report,
+)
+from repro.obs.metrics import quantile
+from repro.obs.trace import TRACE_SCHEMA, annotate, maybe_span
+
+
+# ------------------------------- metrics -----------------------------------
+
+def test_registry_get_or_create_identity():
+    reg = MetricsRegistry()
+    a = reg.counter("hits", service="local")
+    b = reg.counter("hits", service="local")
+    c = reg.counter("hits", service="sharded")
+    assert a is b and a is not c
+    a.inc(3)
+    assert b.value == 3 and c.value == 0
+    # same name, different instrument kind -> distinct
+    h = reg.histogram("hits")
+    assert h is not a
+
+
+def test_registry_find_and_merged_quantiles():
+    reg = MetricsRegistry()
+    for mode, vals in (("delta", [1, 2, 3]), ("full", [10, 20, 30])):
+        h = reg.histogram("wall", service="local", mode=mode)
+        for v in vals:
+            h.observe(v)
+    assert len(reg.find("wall", service="local")) == 2
+    assert reg.find("wall", mode="delta")[0].count == 3
+    pooled = reg.merged_quantiles("wall", (0.0, 0.5, 1.0), service="local")
+    assert pooled[0.0] == 1 and pooled[1.0] == 30
+    assert math.isnan(reg.merged_quantiles("absent", (0.5,))[0.5])
+
+
+def test_quantile_nearest_rank():
+    s = list(range(1, 101))
+    assert quantile(s, 0.5) == 51  # nearest rank on 0..99 index space
+    assert quantile(s, 0.0) == 1
+    assert quantile(s, 1.0) == 100
+    assert math.isnan(quantile([], 0.5))
+
+
+def test_histogram_reservoir_bounded():
+    reg = MetricsRegistry()
+    h = reg.histogram("w")
+    h._samples = type(h._samples)(maxlen=4)
+    for v in range(10):
+        h.observe(v)
+    assert h.count == 10 and h.total == sum(range(10))
+    assert h.samples == [6, 7, 8, 9]
+
+
+def test_counter_struct_shim():
+    class S(CounterStruct):
+        _FIELDS = ("a", "b")
+        _PREFIX = "test_"
+
+    reg = MetricsRegistry()
+    s = S(reg, service="x")
+    s.a += 2
+    s.a += 1
+    s.b = 7
+    assert (s.a, s.b) == (3, 7)
+    assert s.as_dict() == {"a": 3, "b": 7}
+    # the values ARE registry counters, shared by key
+    assert reg.counter("test_a", service="x").value == 3
+    # private registry when none is given
+    s2 = S()
+    s2.a += 1
+    assert s2.a == 1 and reg.counter("test_a", service="x").value == 3
+
+
+def test_mode_counters_mapping():
+    reg = MetricsRegistry()
+    d = ModeCounters(reg, "bcq", service="local")
+    d["delta"] += 2
+    d["full"] = 5
+    assert dict(d) == {"unchanged": 0, "delta": 2, "full": 5}
+    assert reg.counter("bcq", mode="delta", service="local").value == 2
+
+
+# -------------------------------- tracing ----------------------------------
+
+def test_tracer_nesting_and_annotate():
+    tr = Tracer()
+    with tr.span("query", kind="bfs") as q:
+        with tr.span("collect") as c:
+            annotate(dirty=4)  # lands on the innermost span
+        q.set(mode="delta")
+    annotate(ignored=1)  # no active span: silently dropped
+    child, parent = tr.records  # children exit (emit) first
+    assert parent["span"] == "query" and parent["parent"] is None
+    assert child["span"] == "collect" and child["parent"] == parent["id"]
+    assert child["dirty"] == 4 and "ignored" not in parent
+    assert parent["mode"] == "delta" and parent["wall_us"] >= 0
+
+
+def test_maybe_span_null_path():
+    with maybe_span(None, "query", kind="bfs") as sp:
+        sp.set(mode="full")  # must not raise
+        annotate(dirty=1)    # no tracer: no-op
+    assert sp.id is None
+
+
+def test_tracer_jsonl_and_report_gate(tmp_path):
+    path = tmp_path / "t.jsonl"
+    tr = Tracer(str(path))
+    for mode in ("unchanged", "delta", "full"):
+        with tr.span("query", service="local", kind="bfs", version=1,
+                     mode=mode, coll_bytes=0):
+            pass
+    tr.close()
+    records = report.load(str(path))
+    assert [r["schema"] for r in records] == [TRACE_SCHEMA] * 3
+    assert report.validate(
+        records, require_modes=("unchanged", "delta", "full")) == []
+    rows = report.summarize(records)
+    assert {r["mode"] for r in rows} == {"unchanged", "delta", "full"}
+    assert report.main([str(path), "--check",
+                        "--require-modes", "unchanged,delta,full"]) == 0
+    # missing mode and missing fields both trip the gate
+    assert report.validate(records, require_modes=("nope",)) != []
+    bad = [dict(r, **{"span": "query"}) for r in records]
+    del bad[0]["version"]
+    assert any("missing" in e for e in report.validate(bad))
+    assert report.main([str(path), "--require-modes", "nope"]) == 1
+
+
+# ---------------------------- HLO accounting --------------------------------
+
+def test_hlo_accountant_caches_compiles():
+    acct = HLOCostAccountant(shared=False)
+    compiles = []
+
+    def compile_fn():
+        compiles.append(1)
+        return jax.jit(lambda x: x * 2 + 1).lower(
+            jnp.zeros((8,), jnp.float32)).compile()
+
+    c1 = acct.account(("k", 1), compile_fn)
+    c2 = acct.account(("k", 1), compile_fn)
+    assert len(compiles) == 1 and c1 is c2 and acct.last is c2
+    for f in ("collective_bytes", "temp_bytes", "flops"):
+        assert f in c1
+    assert acct.account(("k", 2), compile_fn) is not c1
+    assert len(compiles) == 2
+    assert len(acct.snapshot()) == 2
+
+
+def test_hlo_accountant_shared_cache():
+    a, b = HLOCostAccountant(), HLOCostAccountant()
+    n0 = len(a.snapshot())
+    a.account(("shared-probe", n0), lambda: jax.jit(lambda x: x + 1).lower(
+        jnp.zeros((4,), jnp.float32)).compile())
+    assert b.account(("shared-probe", n0), lambda: (_ for _ in ()).throw(
+        AssertionError("cache miss"))) is a.last
+
+
+# ----------------------------- service glue ---------------------------------
+
+def test_local_service_trace_schema(tmp_path):
+    from repro.core import PUTE, PUTV, make_graph
+    from repro.engine import GraphService
+
+    path = tmp_path / "svc.jsonl"
+    tel = Telemetry.make(str(path), hlo=False)
+    svc = GraphService(make_graph(16, 64), batch_size=4, telemetry=tel)
+    for i in range(6):
+        svc.submit((PUTV, i))
+    for u, v in ((0, 1), (1, 2), (2, 3)):
+        svc.submit((PUTE, u, v, 1.0))
+    svc.flush()
+    svc.query("bfs", 0)
+    svc.query("bfs", 0)
+    svc.submit((PUTE, 3, 4, 1.0))
+    svc.flush()
+    svc.query("bfs", 0)
+    tel.close()
+
+    records = [json.loads(line) for line in open(path)]
+    qrecs = [r for r in records if r["span"] == "query"]
+    assert len(qrecs) == svc.stats.queries == 3
+    for r in qrecs:
+        for f in report.QUERY_FIELDS:
+            assert f in r, f
+        assert r["service"] == "local"
+    assert [r["mode"] for r in qrecs] == ["full", "unchanged", "delta"]
+    # commits and collects traced too, collects nested under their query
+    spans = {r["span"] for r in records}
+    assert {"commit", "collect", "query"} <= spans
+    collect = next(r for r in records if r["span"] == "collect")
+    assert any(r["id"] == collect["parent"] for r in qrecs)
+    # the latency histogram the benches read is fed once per query
+    hist = tel.registry.find("query_wall_us", service="local")
+    assert sum(h.count for h in hist) == 3

@@ -7,18 +7,34 @@ Seeds are fixed here so CI is deterministic, and every run logs its seed
 through the shared ``conftest.run_multidevice`` subprocess helper (4
 host-platform placeholder devices set before jax imports) against the
 4-way ``ShardedGraphService`` in BOTH ``bc_mode`` values.
+
+Every replay runs with telemetry attached: the harness itself asserts
+ladder-mode conservation (``unchanged + delta + full == queries == #trace
+records``) and per-query trace agreement with the oracle-validated
+answers, on both services and both ``bc_mode``s — so the telemetry
+invariants are exercised by every test below, not just the local one.
 """
 from conftest import run_multidevice as _run_multidevice
 from repro.shard import as_graph_mesh
 from stream_differential import run_differential
 
 
-def test_stream_differential_local():
+def test_stream_differential_local(tmp_path):
     """Local GraphService vs the oracle over a mixed stream; the chosen
-    seed exercises every rung of the ladder."""
-    modes = run_differential(7, n=24, steps=8, score_every=4)
+    seed exercises every rung of the ladder.  The trace is mirrored to
+    JSONL and must pass the ``repro.obs.report`` schema/coverage gate."""
+    trace = tmp_path / "trace.jsonl"
+    modes = run_differential(7, n=24, steps=8, score_every=4,
+                             trace_path=str(trace))
     for mode in ("unchanged", "delta", "full"):
         assert modes["local"][mode] > 0, (mode, modes)
+    from repro.obs import report
+    records = report.load(str(trace))
+    problems = report.validate(records,
+                               require_modes=("unchanged", "delta", "full"))
+    assert problems == [], problems
+    assert report.main([str(trace), "--check",
+                        "--require-modes", "unchanged,delta,full"]) == 0
 
 
 def test_stream_differential_negative_weights():
