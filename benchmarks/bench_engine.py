@@ -205,9 +205,14 @@ def bench_service_stream(graph, stream, src, batch_size=32):
          f"unchanged={svc_tel.stats.unchanged};delta={svc_tel.stats.delta};"
          f"full={svc_tel.stats.full}")
     tel.close()
+    # A healthy (fault-free) bench stream must finish with zero resilience
+    # events; CI pins both at 0 so a ladder regression that silently
+    # degrades answers (or swallows query errors) shows up in the bench.
     return {"update_ops_per_s": round(ops_per_s, 1),
             "p50_ms": round(p50_ms, 3), "p99_ms": round(p99_ms, 3),
-            "telemetry_overhead": round(overhead, 4)}
+            "telemetry_overhead": round(overhead, 4),
+            "errors": svc.stats.errors + svc_tel.stats.errors,
+            "degraded": svc.stats.degraded + svc_tel.stats.degraded}
 
 
 def bench_latency_vs_update_rate(graph, rng, n, src, hot_frac,

@@ -31,6 +31,22 @@ what is lost are the intermediate per-op return values and their ``ecnt``
 bumps — safe, because no reader can observe the interior of a commit.
 Vertex ops are never coalesced: RemV has side effects beyond its key
 (incident-edge invalidation).
+
+Failure semantics
+-----------------
+Commits are atomic: an exception anywhere inside ``_commit_chunk``
+(``apply_ops`` mid-batch, the ring append, an injected fault at
+``sched.apply_ops`` / ``sched.ring_commit`` / ``ring.evict``) leaves the
+ring latest AND the pending op log exactly as before — the popped chunk
+returns to the front of the log, so a retry replays the identical
+prefix.  With a :class:`repro.resil.OpJournal` attached, every submit is
+write-ahead logged and every successful commit writes a barrier;
+``repro.resil.journal.recover`` replays the file into a bit-identical
+ring latest.  An optional
+:class:`~repro.runtime.fault_tolerance.HeartbeatMonitor` watches commit
+latency: commits slower than ``factor`` x the rolling median raise the
+straggler flag, surfacing as a ``scheduler_stragglers`` counter and a
+``straggler=True`` annotation on the commit's trace span.
 """
 from __future__ import annotations
 
@@ -40,6 +56,7 @@ from typing import List, Optional, Sequence, Tuple
 from repro.core.updates import NOP, PUTE, PUTV, REME, REMV, apply_ops
 from repro.obs import CounterStruct
 from repro.obs.trace import maybe_span
+from repro.resil.faults import P_SCHED_APPLY, P_SCHED_RING_COMMIT, inject
 
 from .version_ring import RingEntry, VersionRing
 
@@ -52,7 +69,8 @@ class SchedulerStats(CounterStruct):
     (attribute surface unchanged; see :class:`repro.obs.CounterStruct`)."""
 
     _FIELDS = ("ops_submitted", "ops_committed", "ops_coalesced",
-               "batches_committed", "strict_cuts")
+               "batches_committed", "strict_cuts", "commit_failures",
+               "stragglers")
     _PREFIX = "scheduler_"
 
 
@@ -66,6 +84,8 @@ class StreamScheduler:
     coalesce: bool = False
     auto_commit: bool = True
     telemetry: object = None  # Optional[repro.obs.Telemetry]
+    journal: object = None    # Optional[repro.resil.OpJournal]
+    monitor: object = None    # Optional[repro.runtime.HeartbeatMonitor]
     _log: List[Tuple] = field(default_factory=list)
     stats: SchedulerStats = None
 
@@ -80,10 +100,17 @@ class StreamScheduler:
     # ------------------------------ intake -------------------------------
 
     def submit(self, op: Tuple) -> int:
-        """Append one ``(kind, u[, v[, w]])`` request; returns its seq no."""
+        """Append one ``(kind, u[, v[, w]])`` request; returns its seq no.
+
+        With a journal attached the op is write-ahead logged before it
+        enters the in-memory log: an acknowledged submit survives a
+        crash (as a pending op) even if its batch never committed.
+        """
         if op[0] not in _VERTEX_OPS and op[0] not in _EDGE_OPS:
             raise ValueError(f"scheduler accepts mutations only, got {op!r}")
         seq = self.stats.ops_submitted
+        if self.journal is not None:
+            self.journal.append_op(seq, op)
         self._log.append(op)
         self.stats.ops_submitted += 1
         if self.auto_commit:
@@ -127,14 +154,38 @@ class StreamScheduler:
 
     def _commit_chunk(self, chunk: List[Tuple]) -> RingEntry:
         n_raw = len(chunk)
-        chunk = self._coalesce_chunk(chunk)
+        ops = self._coalesce_chunk(list(chunk))
         tracer = self.telemetry.tracer if self.telemetry is not None else None
-        with maybe_span(tracer, "commit", batch_ops=n_raw,
-                        coalesced=n_raw - len(chunk)) as sp:
-            state, _ = apply_ops(self.ring.latest.state, chunk,
-                                 batch_size=self.batch_size)
-            entry = self.ring.commit(state)
-            sp.set(version=entry.version)
+        mon = self.monitor
+        stragglers0 = mon.stragglers if mon is not None else 0
+        try:
+            with maybe_span(tracer, "commit", batch_ops=n_raw,
+                            coalesced=n_raw - len(ops)) as sp:
+                if mon is not None:
+                    mon.start()
+                inject(P_SCHED_APPLY)
+                state, _ = apply_ops(self.ring.latest.state, ops,
+                                     batch_size=self.batch_size)
+                inject(P_SCHED_RING_COMMIT)
+                entry = self.ring.commit(state)
+                if mon is not None:
+                    mon.stop(entry.version)
+                    if mon.stragglers > stragglers0:
+                        self.stats.stragglers += 1
+                        sp.set(straggler=True)
+                sp.set(version=entry.version)
+        except BaseException:
+            # Atomic commit: a failure (incl. an injected crash) leaves
+            # the ring latest and the pending log exactly as before —
+            # the popped chunk returns to the FRONT of the log, so a
+            # retry replays the identical prefix in submission order.
+            self._log[:0] = chunk
+            self.stats.commit_failures += 1
+            raise
+        if self.journal is not None:
+            # barrier AFTER the ring append: the journal's durability
+            # point; a crash in between rolls the batch back on recovery
+            self.journal.commit_barrier(entry.version, n_raw)
         self.stats.ops_committed += n_raw
         self.stats.batches_committed += 1
         return entry
@@ -166,3 +217,35 @@ class StreamScheduler:
                 break
             entries.append(entry)
         return entries
+
+    # ------------------------------ recovery ------------------------------
+
+    def replay_commit(self, chunk: Sequence[Tuple]) -> RingEntry:
+        """Journal recovery: re-commit exactly this raw chunk.
+
+        Bypasses batching/strict-cut decisions — the chunk IS a decision
+        the original process already made (one barrier's worth of ops) —
+        but runs the same coalesce + apply + ring pipeline, so the
+        committed state and version are bit-identical.  When this
+        scheduler journals, the replayed ops are re-logged first so the
+        new journal is itself recoverable.
+        """
+        ops = [tuple(op) for op in chunk]
+        if self.journal is not None:
+            for i, op in enumerate(ops):
+                self.journal.append_op(self.stats.ops_submitted + i, op)
+        self.stats.ops_submitted += len(ops)
+        return self._commit_chunk(ops)
+
+    def replay_pending(self, ops: Sequence[Tuple]) -> None:
+        """Journal recovery: restore un-barriered tail ops as pending.
+
+        Unlike ``submit``, never auto-commits — the original process had
+        not committed these ops, and recovery must reproduce its state,
+        not improve on it."""
+        for op in ops:
+            op = tuple(op)
+            if self.journal is not None:
+                self.journal.append_op(self.stats.ops_submitted, op)
+            self._log.append(op)
+            self.stats.ops_submitted += 1

@@ -32,6 +32,18 @@ mode counters, and the icn/cn query drivers — so the local service here
 and the distributed one (``repro.shard.service.ShardedGraphService``)
 share one copy of the unchanged → delta → full ladder plumbing and only
 implement how a single collect is answered.
+
+Resilience (``repro.resil``): with a :class:`~repro.resil.ResiliencePolicy`
+attached, a raising collect walks the degrade ladder — retry as a full
+recompute from a pinned snapshot, then (budget/deadline exhausted) serve
+the last cached answer at its still-resident ring version, flagged
+``degraded=True`` with ``stale_version`` on the reply and in the trace
+record.  A degraded answer is still *correct at the version it claims*
+(the cache is only ever written after a successful collect, atomically
+from the caller's perspective), never a torn read.  Without a policy,
+collect failures propagate — but stats stay conserved: ``queries`` (and
+the per-mode tallies) count only successful collects, failures land in
+``service_errors``.
 """
 from __future__ import annotations
 
@@ -48,6 +60,14 @@ from repro.core.snapshot import ScanStats
 from repro.core.tiles import TileView, refresh_tile_view
 from repro.obs import CounterStruct, ModeCounters, Telemetry
 from repro.obs.trace import maybe_span
+from repro.resil.faults import (
+    P_CACHE_STORE,
+    P_COLLECT_DELTA,
+    P_COLLECT_DISPATCH,
+    InjectedCrash,
+    inject,
+)
+from repro.resil.policy import ResiliencePolicy
 
 from .incremental import (
     _dirty_stats,
@@ -56,7 +76,7 @@ from .incremental import (
     incremental_sssp,
     results_equal,
 )
-from .scheduler import StreamScheduler
+from .scheduler import SchedulerStats, StreamScheduler
 from .version_ring import PinnedSnapshot, VersionRing
 
 _INCREMENTAL = {"bfs": incremental_bfs, "sssp": incremental_sssp,
@@ -69,6 +89,12 @@ class ServiceStats(CounterStruct):
     """Per-query mode tallies: unchanged + delta + full == queries (a cn
     query is counted once, by its final collect's mode).
 
+    ``queries`` and the mode tallies count only *successful* collects —
+    a raising collect increments ``errors`` instead, so the conservation
+    invariant survives failure.  ``degraded`` counts stale-serve replies
+    (outside ``queries``: no collect succeeded for them), ``retries``
+    counts demoted re-collect attempts the resilience ladder ran.
+
     Attribute names are the stable API (``svc.stats.delta`` etc.); since
     PR 6 the values live as ``service_*`` counters in a
     :class:`repro.obs.MetricsRegistry` — the service's telemetry registry
@@ -76,7 +102,7 @@ class ServiceStats(CounterStruct):
     """
 
     _FIELDS = ("queries", "unchanged", "delta", "full", "collects",
-               "cn_retries")
+               "cn_retries", "errors", "degraded", "retries")
     _PREFIX = "service_"
 
     def count(self, mode: str) -> None:
@@ -114,13 +140,23 @@ def prune_result_cache(cache: Dict, max_cached: int, floor: int) -> None:
 
 @dataclass
 class QueryReply:
-    """What ``GraphService.query`` hands back."""
+    """What ``GraphService.query`` hands back.
+
+    ``degraded`` replies carry the last cached answer at ``stale_version``
+    (== ``version``, still resident in the ring) because every fresher
+    rung of the resilience ladder failed; the answer is exact at that
+    version, just not at the latest.  ``retries`` counts the demoted
+    re-collect attempts the ladder ran before this reply.
+    """
 
     result: object          # BFSResult | SSSPResult | BCResult
     version: int            # ring version the answer is valid at
-    mode: str               # "unchanged" | "delta" | "full"
+    mode: str               # "unchanged" | "delta" | "full" | "degraded"
     validated: bool         # True for cn-mode answers that double-collected
     scan: ScanStats = field(default_factory=ScanStats)
+    degraded: bool = False
+    stale_version: Optional[int] = None
+    retries: int = 0
 
 
 class BaseGraphService:
@@ -142,13 +178,22 @@ class BaseGraphService:
                       batch_size: int, dirty_threshold: float,
                       strict_order: bool, coalesce: bool, max_collects: int,
                       max_cached: int,
-                      telemetry: Optional[Telemetry] = None) -> None:
+                      telemetry: Optional[Telemetry] = None,
+                      policy: Optional[ResiliencePolicy] = None,
+                      journal=None, monitor=None) -> None:
         self.telemetry = telemetry
+        self.policy = policy
         registry = telemetry.registry if telemetry is not None else None
         self.ring = VersionRing(initial_state, depth=ring_depth)
+        # The scheduler's counters carry this service's label: two services
+        # sharing one telemetry registry (the differential harness does)
+        # must not alias their scheduler_* tallies.
+        sched_stats = (SchedulerStats(registry, service=self._service_name)
+                       if registry is not None else None)
         self.scheduler = StreamScheduler(
             self.ring, batch_size=batch_size, strict_order=strict_order,
-            coalesce=coalesce, telemetry=telemetry)
+            coalesce=coalesce, telemetry=telemetry, journal=journal,
+            monitor=monitor, stats=sched_stats)
         self.dirty_threshold = dirty_threshold
         self.max_collects = max_collects
         self.max_cached = max_cached
@@ -182,6 +227,10 @@ class BaseGraphService:
     # ------------------------------- cache -------------------------------
 
     def _cache_store(self, key, version: int, result) -> None:
+        # A planned fault here models slot corruption racing the store;
+        # firing BEFORE any mutation keeps the store atomic — the old
+        # slot (still correct at ITS version) survives intact.
+        inject(P_CACHE_STORE)
         # Delete-then-insert moves the key to the back of the dict so
         # _prune_cache's front-of-dict eviction is LRU, not FIFO.
         self._cache.pop(key, None)
@@ -203,8 +252,11 @@ class BaseGraphService:
     def _check_srcs(self, kind: str, srcs) -> None:
         """Reject source specs this service cannot answer (ValueError)."""
 
-    def _collect(self, kind: str, srcs, key):
-        """One collect at the latest ring version -> (entry, result, mode)."""
+    def _collect(self, kind: str, srcs, key, ladder: bool = True):
+        """One collect at the latest ring version -> (entry, result, mode).
+
+        ``ladder=False`` (a resilience-ladder retry) must bypass the
+        cache/delta rungs and recompute fully from a pinned snapshot."""
         raise NotImplementedError
 
     def _icn_validated(self, result) -> bool:
@@ -223,13 +275,13 @@ class BaseGraphService:
             self._query_cost["temp_bytes"] = max(
                 self._query_cost["temp_bytes"], cost.get("temp_bytes") or 0)
 
-    def _traced_collect(self, kind: str, srcs, key):
+    def _traced_collect(self, kind: str, srcs, key, ladder: bool = True):
         """``_collect`` wrapped in a child span when tracing is on."""
         tel = self.telemetry
         if tel is None:
-            return self._collect(kind, srcs, key)
+            return self._collect(kind, srcs, key, ladder=ladder)
         with tel.tracer.span("collect", kind=kind) as sp:
-            entry, res, qmode = self._collect(kind, srcs, key)
+            entry, res, qmode = self._collect(kind, srcs, key, ladder=ladder)
             sp.set(version=entry.version, mode=qmode)
         return entry, res, qmode
 
@@ -257,11 +309,17 @@ class BaseGraphService:
         self._check_srcs(kind, srcs)
         tel = self.telemetry
         if tel is None:
-            return self._query_inner(kind, srcs, mode)
+            return self._query_guarded(kind, srcs, mode)
         self._query_cost = {"coll_bytes": 0, "temp_bytes": 0}
         with tel.tracer.span("query", service=self._service_name,
                              kind=kind, cn=(mode == "cn")) as sp:
-            reply = self._query_inner(kind, srcs, mode)
+            try:
+                reply = self._query_guarded(kind, srcs, mode)
+            except BaseException as e:
+                # The record stays parseable (report skips error records):
+                # a failed query has no version/mode to claim.
+                sp.set(error=type(e).__name__)
+                raise
             block_us = 0.0
             if tel.block:
                 t0 = time.perf_counter()
@@ -273,25 +331,95 @@ class BaseGraphService:
                    validated=reply.validated,
                    block_us=round(block_us, 1),
                    coll_bytes=self._query_cost["coll_bytes"],
-                   temp_bytes=self._query_cost["temp_bytes"])
+                   temp_bytes=self._query_cost["temp_bytes"],
+                   degraded=reply.degraded,
+                   stale_version=reply.stale_version,
+                   retries=reply.retries)
         tel.registry.histogram(
             "query_wall_us", service=self._service_name, kind=kind,
             mode=reply.mode).observe(sp.wall_us)
         return reply
 
-    def _query_inner(self, kind: str, srcs, mode: str) -> QueryReply:
-        self.stats.queries += 1
+    def _query_guarded(self, kind: str, srcs, mode: str) -> QueryReply:
+        """One query under the failure policy (or bare stats accounting)."""
+        if self.policy is None:
+            try:
+                return self._query_inner(kind, srcs, mode)
+            except InjectedCrash:
+                raise  # crashes are not an error path — they end the process
+            except Exception:
+                self.stats.errors += 1
+                raise
+        return self._query_resilient(kind, srcs, mode)
+
+    def _query_resilient(self, kind: str, srcs, mode: str) -> QueryReply:
+        """Walk the degrade ladder: attempt, retry-as-full, stale serve.
+
+        The first attempt runs the normal unchanged → delta → full ladder;
+        every retry forces a full recompute from a pinned snapshot
+        (``force_full``), on the theory that the cheap rungs are what just
+        failed.  The deadline bounds *retries*, never the first attempt.
+        """
+        pol = self.policy
+        t0 = time.perf_counter()
+        last_exc: Optional[Exception] = None
+        for attempt in range(pol.max_retries + 1):
+            if attempt:
+                if pol.deadline_exceeded(t0):
+                    break
+                back = pol.backoff_s(attempt)
+                if back > 0:
+                    time.sleep(back)
+                self.stats.retries += 1
+            try:
+                reply = self._query_inner(kind, srcs, mode,
+                                          force_full=attempt > 0)
+                reply.retries = attempt
+                return reply
+            except InjectedCrash:
+                raise
+            except Exception as e:
+                self.stats.errors += 1
+                last_exc = e
+        if pol.allow_stale:
+            reply = self._stale_reply(kind, srcs)
+            if reply is not None:
+                self.stats.degraded += 1
+                return reply
+        assert last_exc is not None
+        raise last_exc
+
+    def _stale_reply(self, kind: str, srcs) -> Optional[QueryReply]:
+        """Bottom rung: last cached answer, iff its version is still
+        resident in the ring (the answer is exact at that version — the
+        cache is only written after a successful collect)."""
+        key = self._key(kind, srcs)
+        slot = self._cache.get(key)
+        if slot is None or self.ring.get_entry(slot.version) is None:
+            return None
+        return QueryReply(slot.result, slot.version, "degraded", False,
+                          ScanStats(), degraded=True,
+                          stale_version=slot.version)
+
+    def _query_inner(self, kind: str, srcs, mode: str,
+                     force_full: bool = False) -> QueryReply:
         key = self._key(kind, srcs)
         if mode == "icn":
-            entry, res, qmode = self._traced_collect(kind, srcs, key)
+            entry, res, qmode = self._traced_collect(
+                kind, srcs, key, ladder=not force_full)
+            # Success accounting only: a raising collect must leave
+            # queries (and the mode tallies) untouched so that
+            # unchanged + delta + full == queries survives failure.
+            self.stats.queries += 1
             self.stats.collects += 1
             self.stats.count(qmode)
             return QueryReply(res, entry.version, qmode,
                               self._icn_validated(res),
                               ScanStats(collects=1, validated=False))
-        return self._query_cn(kind, srcs, key)
+        return self._query_cn(kind, srcs, key, force_full=force_full)
 
-    def _query_cn(self, kind: str, srcs, key) -> QueryReply:
+    def _query_cn(self, kind: str, srcs, key,
+                  force_full: bool = False) -> QueryReply:
         """PG-Cn: double-collect over ring versions until answers match.
 
         Between collects, one pending update batch commits (the stream's
@@ -300,17 +428,20 @@ class BaseGraphService:
         CMPTREE match — so the loop terminates as soon as the collect
         window sees no interleaved commit.
         """
+        ladder = not force_full
         scan = ScanStats()
         v0 = self.ring.latest.version
-        entry, prev_res, qmode = self._traced_collect(kind, srcs, key)
+        entry, prev_res, qmode = self._traced_collect(kind, srcs, key,
+                                                      ladder=ladder)
         scan.collects = 1
         while scan.collects < self.max_collects:
             self.scheduler.commit_one()  # interrupting update, if pending
-            cur_entry, cur_res, cur_mode = self._traced_collect(kind, srcs,
-                                                               key)
+            cur_entry, cur_res, cur_mode = self._traced_collect(
+                kind, srcs, key, ladder=ladder)
             scan.collects += 1
             if cur_entry.version == entry.version or results_equal(
                     prev_res, cur_res):
+                self.stats.queries += 1
                 self.stats.collects += scan.collects
                 self.stats.count(cur_mode)
                 scan.interrupting_updates = cur_entry.version - v0
@@ -321,6 +452,7 @@ class BaseGraphService:
             entry, prev_res, qmode = cur_entry, cur_res, cur_mode
         scan.validated = False
         scan.interrupting_updates = self.ring.latest.version - v0
+        self.stats.queries += 1
         self.stats.collects += scan.collects
         self.stats.count(qmode)
         return QueryReply(prev_res, entry.version, qmode, False, scan)
@@ -336,12 +468,15 @@ class GraphService(BaseGraphService):
                  batch_size: int = 32, dirty_threshold: float = 0.25,
                  strict_order: bool = False, coalesce: bool = False,
                  max_collects: int = 16, max_cached: int = 512,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 policy: Optional[ResiliencePolicy] = None,
+                 journal=None, monitor=None):
         self._init_service(
             initial_state, ring_depth=ring_depth, batch_size=batch_size,
             dirty_threshold=dirty_threshold, strict_order=strict_order,
             coalesce=coalesce, max_collects=max_collects,
-            max_cached=max_cached, telemetry=telemetry)
+            max_cached=max_cached, telemetry=telemetry, policy=policy,
+            journal=journal, monitor=monitor)
         self._tiles: Optional[TileView] = None
         self._tiles_version: int = -1
         self._bc_scores: Optional[dict] = None
@@ -358,15 +493,31 @@ class GraphService(BaseGraphService):
         if src is None:
             raise ValueError(f"{kind!r} needs an explicit source vertex")
 
-    def _collect(self, kind: str, src, key):
+    def _collect(self, kind: str, src, key, ladder: bool = True):
         """One incremental collect against the current latest ring version:
-        the unchanged → delta → full ladder lives in ``engine.incremental``."""
+        the unchanged → delta → full ladder lives in ``engine.incremental``.
+
+        ``ladder=False`` (a resilience retry demoting past the cheap
+        rungs) pins the latest version and recomputes from scratch — no
+        cache read, no dirty-set math — so a corrupt delta path cannot
+        poison the retry."""
+        if not ladder:
+            entry = self.ring.latest
+            with self.ring.pin(entry.version):
+                inject(P_COLLECT_DISPATCH)
+                res, inc = _INCREMENTAL[kind](
+                    entry.state, None, None, src,
+                    dirty_threshold=self.dirty_threshold)
+            self._cache_store(key, entry.version, res)
+            return entry, res, inc.mode
         entry = self.ring.latest
         slot = self._cache.get(key)
         prior, dirty = None, None
         if slot is not None:
             prior = slot.result
             dirty = self.ring.dirty_between(slot.version, entry.version)
+            inject(P_COLLECT_DELTA)
+        inject(P_COLLECT_DISPATCH)
         res, inc = _INCREMENTAL[kind](
             entry.state, prior, dirty, src,
             dirty_threshold=self.dirty_threshold)

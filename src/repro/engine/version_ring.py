@@ -30,6 +30,7 @@ import jax.numpy as jnp
 
 from repro.core.graph_state import GraphState
 from repro.core.updates import dirty_vertices_padded
+from repro.resil.faults import P_RING_EVICT, inject
 
 
 class RingEntry(NamedTuple):
@@ -95,7 +96,15 @@ class VersionRing:
         return self._window[0].version
 
     def commit(self, state: GraphState) -> RingEntry:
-        """Append a new version; dirty set is derived vs the previous latest."""
+        """Append a new version; dirty set is derived vs the previous latest.
+
+        The commit is atomic: the ``ring.evict`` fault point (an eviction
+        racing an in-flight query) fires BEFORE the append, so a planned
+        eviction failure leaves the ring exactly as it was — callers
+        (the scheduler's atomic-commit path) rely on that.
+        """
+        if len(self._window) >= self.depth:
+            inject(P_RING_EVICT)
         prev = self._window[-1]
         entry = RingEntry(
             version=prev.version + 1,

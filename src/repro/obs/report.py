@@ -6,11 +6,15 @@
 Aggregates the ``span == "query"`` records a traced
 ``GraphService``/``ShardedGraphService`` emitted: one row per
 (service, kind, ladder mode) with query counts, wall-time quantiles,
-validated counts, and mean HLO-attributed collective bytes.  ``--check``
-turns the reader into a CI gate: every query record must carry the full
-schema (kind/version/mode/wall/collective-bytes), and with
-``--require-modes`` each named ladder mode must have a non-empty row —
-the shard-smoke job runs exactly this against a short traced stream.
+validated counts, degraded counts, and mean HLO-attributed collective
+bytes.  ``--check`` turns the reader into a CI gate: every completed
+query record must carry the full schema (kind/version/mode/degraded/
+wall/collective-bytes); records that ended in an error (they carry an
+``error`` field and no version/mode to claim) are exempt from the field
+check but counted.  ``--require-modes`` demands a non-empty row per
+named ladder mode; ``--require-degraded`` demands at least one degraded
+record (the chaos-smoke job's proof the ladder actually exercised its
+bottom rung).
 """
 from __future__ import annotations
 
@@ -22,9 +26,10 @@ from collections import defaultdict
 from .metrics import quantile
 from .trace import TRACE_SCHEMA
 
-#: fields every query trace record must carry (the acceptance schema).
+#: fields every completed query trace record must carry (the acceptance
+#: schema); error-terminated records carry ``error`` instead.
 QUERY_FIELDS = ("schema", "span", "wall_us", "kind", "version", "mode",
-                "coll_bytes", "service")
+                "coll_bytes", "service", "degraded")
 
 
 def load(path: str) -> list:
@@ -45,24 +50,31 @@ def query_records(records: list) -> list:
     return [r for r in records if r.get("span") == "query"]
 
 
-def validate(records: list, require_modes=()) -> list:
+def validate(records: list, require_modes=(),
+             require_degraded: bool = False) -> list:
     """Schema + coverage errors (empty list == valid)."""
     errors = []
     qrecs = query_records(records)
     if not qrecs:
         errors.append("no query records in trace")
     for i, r in enumerate(qrecs):
+        if "error" in r:
+            # the query raised: no version/mode to claim, record is exempt
+            continue
         missing = [f for f in QUERY_FIELDS if f not in r]
         if missing:
             errors.append(f"query record {i} missing fields: {missing}")
         elif r["schema"] != TRACE_SCHEMA:
             errors.append(f"query record {i}: schema {r['schema']} != "
                           f"{TRACE_SCHEMA}")
-    seen_modes = {r.get("mode") for r in qrecs}
+    seen_modes = {r.get("mode") for r in qrecs if "error" not in r}
     for mode in require_modes:
         if mode not in seen_modes:
             errors.append(f"required ladder mode {mode!r} has no query "
                           f"records (saw {sorted(m for m in seen_modes if m)})")
+    if require_degraded and not any(r.get("degraded") for r in qrecs):
+        errors.append("no degraded query records (ladder bottom rung "
+                      "never exercised)")
     return errors
 
 
@@ -82,6 +94,8 @@ def summarize(records: list) -> list:
             "p95_us": round(quantile(walls, 0.95), 1),
             "p99_us": round(quantile(walls, 0.99), 1),
             "validated": sum(bool(r.get("validated")) for r in rs),
+            "degraded": sum(bool(r.get("degraded")) for r in rs),
+            "errors": sum("error" in r for r in rs),
             "coll_bytes_mean": round(
                 sum(r.get("coll_bytes", 0) or 0 for r in rs) / len(rs)),
         })
@@ -90,7 +104,7 @@ def summarize(records: list) -> list:
 
 def render(rows: list) -> str:
     cols = ("service", "kind", "mode", "queries", "p50_us", "p95_us",
-            "p99_us", "validated", "coll_bytes_mean")
+            "p99_us", "validated", "degraded", "errors", "coll_bytes_mean")
     widths = {c: max(len(c), *(len(str(r[c])) for r in rows)) if rows
               else len(c) for c in cols}
     lines = ["  ".join(c.ljust(widths[c]) for c in cols),
@@ -110,6 +124,9 @@ def main(argv=None) -> int:
     p.add_argument("--require-modes", default="",
                    help="comma-separated ladder modes that must each have "
                         "at least one query record (implies --check)")
+    p.add_argument("--require-degraded", action="store_true",
+                   help="fail unless at least one query record is degraded "
+                        "(implies --check)")
     p.add_argument("--json", action="store_true",
                    help="print the summary rows as JSON instead of a table")
     a = p.parse_args(argv)
@@ -122,8 +139,9 @@ def main(argv=None) -> int:
         print(render(rows))
 
     require = tuple(m for m in a.require_modes.split(",") if m)
-    if a.check or require:
-        errors = validate(records, require_modes=require)
+    if a.check or require or a.require_degraded:
+        errors = validate(records, require_modes=require,
+                          require_degraded=a.require_degraded)
         if errors:
             for e in errors:
                 print(f"CHECK FAIL: {e}", file=sys.stderr)

@@ -15,6 +15,12 @@ per-kind/per-mode summary table.
 it sets attributes on the *current* span if one is active and costs one
 contextvar read otherwise — so ``engine.incremental`` can report dirty
 counts without knowing whether anyone is tracing.
+
+Telemetry is best-effort by design: a failing JSONL sink (disk full,
+rotated-away file, or the injected ``obs.sink`` fault) must never fail
+the query it was observing.  ``_emit`` swallows sink ``OSError``s and
+injected faults, keeps the in-memory record, and counts the loss in
+``tracer.sink_errors``.
 """
 from __future__ import annotations
 
@@ -23,6 +29,8 @@ import json
 import time
 from contextlib import contextmanager
 from typing import IO, Optional
+
+from repro.resil.faults import P_OBS_SINK, InjectedFault, inject
 
 __all__ = ["TRACE_SCHEMA", "Span", "Tracer", "annotate", "current_span"]
 
@@ -79,6 +87,7 @@ class Tracer:
         self.max_records = max_records
         self.records: list = []
         self.dropped = 0
+        self.sink_errors = 0
         self._next_id = 0
         self._t0 = time.perf_counter()
         self._sink: Optional[IO] = open(path, "a") if path else None
@@ -107,8 +116,14 @@ class Tracer:
             self.dropped += 1
         self.records.append(rec)
         if self._sink is not None:
-            self._sink.write(json.dumps(rec) + "\n")
-            self._sink.flush()
+            try:
+                inject(P_OBS_SINK)
+                self._sink.write(json.dumps(rec) + "\n")
+                self._sink.flush()
+            except (OSError, InjectedFault):
+                # Best-effort sink: losing a trace line must never fail
+                # the observed operation.  The in-memory record survives.
+                self.sink_errors += 1
 
     def close(self) -> None:
         if self._sink is not None:

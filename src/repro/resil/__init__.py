@@ -1,0 +1,49 @@
+"""Resilient serving: deterministic faults, degrade ladder, WAL recovery.
+
+The paper's core guarantee — a stalled or failed operation never corrupts
+shared state or blocks other readers — needs a *failure story* to be
+testable.  This package supplies it, in four pieces the serving stack
+(`repro.engine` / `repro.shard`) threads through its hot paths:
+
+  * :mod:`repro.resil.faults` — seeded deterministic fault injection at
+    named points (``inject``/``FaultPlan``/``fault_scope``): every
+    failure mode is a replayable schedule, not a flake;
+  * :mod:`repro.resil.policy` — per-query deadline + bounded retry where
+    each retry demotes down the ladder (delta failed → full from a
+    pinned snapshot → last cached answer flagged ``degraded=True`` at a
+    still-resident ``stale_version``);
+  * :mod:`repro.resil.journal` — append-only JSONL op WAL with commit
+    barriers; ``recover()`` replays it into a bit-identical ring latest,
+    with batch commits atomic across any crash point;
+  * :mod:`repro.resil.invariants` — ``verify_service()``: ring
+    monotonicity, pin/parked and cache consistency, stats conservation —
+    run after every injected fault in the chaos suites.
+"""
+from .faults import (  # noqa: F401
+    FAULT_POINTS,
+    P_CACHE_STORE,
+    P_COLLECT_DELTA,
+    P_COLLECT_DISPATCH,
+    P_JOURNAL_BARRIER,
+    P_JOURNAL_TORN,
+    P_OBS_SINK,
+    P_RING_EVICT,
+    P_SCHED_APPLY,
+    P_SCHED_RING_COMMIT,
+    FaultPlan,
+    InjectedCrash,
+    InjectedFault,
+    active_plan,
+    fault_scope,
+    inject,
+)
+from .invariants import assert_service_ok, verify_service  # noqa: F401
+from .journal import (  # noqa: F401
+    JOURNAL_SCHEMA,
+    JournalError,
+    OpJournal,
+    journal_meta,
+    read_journal,
+    recover,
+)
+from .policy import ResiliencePolicy  # noqa: F401

@@ -1,0 +1,201 @@
+"""Crash-consistent op journal (WAL) for the streaming scheduler.
+
+The scheduler's op log is in-memory only: a process crash loses every
+uncommitted op, and — worse — leaves no record of *which* batches made it
+into the ring.  :class:`OpJournal` is the durable twin: an append-only
+JSONL file the :class:`~repro.engine.scheduler.StreamScheduler` writes
+
+  * one ``op`` record per ``submit()`` (write-ahead: the intent is on
+    disk before the op enters the in-memory log), and
+  * one ``commit`` barrier per committed batch, written only AFTER the
+    ring append succeeded — the barrier is the durability point.
+
+Because the scheduler always commits a *prefix* of its log (strict-order
+cuts included), a barrier needs only the raw op count of its chunk; the
+journal therefore replays into exactly the batch boundaries the original
+process cut, and :func:`recover` rebuilds a service whose ring latest is
+**bit-identical** (``apply_ops`` is deterministic) with the un-barriered
+tail ops back in the pending log.  Batch commits are atomic against
+recovery: a crash anywhere between the first op of a batch and its
+barrier yields a recovered ring WITHOUT that batch and a pending log
+WITH it — all-or-nothing, never a torn prefix.
+
+A torn final line (the classic crash-mid-write) is tolerated: JSONL is
+self-synchronizing at newlines, so recovery parses up to the last
+complete record and treats the fragment as never written.  Torn or
+unparsable *interior* lines mean real corruption and raise
+:class:`JournalError` — silently skipping history would un-order the
+stream.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .faults import P_JOURNAL_BARRIER, P_JOURNAL_TORN, InjectedCrash, \
+    active_plan, inject
+
+__all__ = ["JOURNAL_SCHEMA", "JournalError", "OpJournal", "read_journal",
+           "recover"]
+
+#: bump when the record layout changes; readers reject unknown majors.
+JOURNAL_SCHEMA = 1
+
+
+class JournalError(RuntimeError):
+    """Unrecoverable journal corruption (torn interior line, bad schema,
+    barrier counting more ops than were journaled)."""
+
+
+class OpJournal:
+    """Append-only JSONL WAL: ``meta`` header, ``op`` records, ``commit``
+    barriers.  ``sync=True`` fsyncs every barrier (durability against OS
+    crash, not just process crash) at the obvious latency cost."""
+
+    def __init__(self, path: str, *, meta: Optional[dict] = None,
+                 sync: bool = False):
+        self.path = str(path)
+        self.sync = sync
+        self.ops_logged = 0
+        self.barriers_logged = 0
+        fresh = not (os.path.exists(self.path)
+                     and os.path.getsize(self.path) > 0)
+        self._f = open(self.path, "a")
+        if fresh:
+            self._write({"t": "meta", "schema": JOURNAL_SCHEMA,
+                         **(meta or {})})
+
+    def _write(self, rec: dict) -> None:
+        self._f.write(json.dumps(rec) + "\n")
+        self._f.flush()
+        if self.sync:
+            os.fsync(self._f.fileno())
+
+    def append_op(self, seq: int, op: Sequence) -> None:
+        """Write-ahead one ``(kind, u[, v[, w]])`` request."""
+        self._write({"t": "op", "seq": int(seq), "op": list(op)})
+        self.ops_logged += 1
+
+    def commit_barrier(self, version: int, n_ops: int) -> None:
+        """Durability point of one committed batch of ``n_ops`` raw ops.
+
+        Carries two injected crash points: ``journal.barrier`` (die with
+        the barrier unwritten — the batch must roll back on recovery) and
+        ``journal.torn`` (die mid-write, half a record on disk — recovery
+        must shrug the fragment off)."""
+        inject(P_JOURNAL_BARRIER)
+        line = json.dumps({"t": "commit", "version": int(version),
+                           "ops": int(n_ops)})
+        plan = active_plan()
+        if plan is not None and plan.check(P_JOURNAL_TORN):
+            self._f.write(line[:max(1, len(line) // 2)])
+            self._f.flush()
+            raise InjectedCrash(P_JOURNAL_TORN,
+                                plan.hits[P_JOURNAL_TORN] - 1)
+        self._f.write(line + "\n")
+        self._f.flush()
+        if self.sync:
+            os.fsync(self._f.fileno())
+        self.barriers_logged += 1
+
+    def close(self) -> None:
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def read_journal(path: str) -> Tuple[Dict, List[List[tuple]], List[tuple]]:
+    """Parse a journal into ``(meta, committed_batches, pending_ops)``.
+
+    A torn FINAL line is treated as never written; torn interior lines
+    raise :class:`JournalError`.  Each committed batch is the exact raw
+    (pre-coalesce) chunk its barrier covered, in commit order.
+    """
+    with open(path) as f:
+        raw = f.read()
+    lines = raw.split("\n")
+    # a complete journal ends with "\n" -> last split element is ""; any
+    # trailing fragment is a torn final record, dropped here
+    if lines and lines[-1] != "":
+        lines = lines[:-1]
+    lines = [ln for ln in lines if ln]
+    meta: Dict = {}
+    pending: List[tuple] = []
+    batches: List[List[tuple]] = []
+    for i, line in enumerate(lines):
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError as e:
+            if i == len(lines) - 1:
+                break  # torn final line despite its newline: ignore
+            raise JournalError(f"{path}:{i + 1}: torn interior record: {e}")
+        t = rec.get("t")
+        if t == "meta":
+            if rec.get("schema") != JOURNAL_SCHEMA:
+                raise JournalError(
+                    f"{path}: schema {rec.get('schema')} != {JOURNAL_SCHEMA}")
+            meta = {k: v for k, v in rec.items() if k not in ("t", "schema")}
+        elif t == "op":
+            pending.append(tuple(rec["op"]))
+        elif t == "commit":
+            n = int(rec["ops"])
+            if n > len(pending):
+                raise JournalError(
+                    f"{path}:{i + 1}: barrier covers {n} ops but only "
+                    f"{len(pending)} are journaled")
+            batches.append(pending[:n])
+            pending = pending[n:]
+        else:
+            raise JournalError(f"{path}:{i + 1}: unknown record type {t!r}")
+    return meta, batches, pending
+
+
+def recover(path: str, initial_state, *, make_service=None, **service_kwargs):
+    """Replay a journal into a fresh service: bit-identical ring latest.
+
+    ``initial_state`` must be the same :class:`GraphState` the journaled
+    service started from (the journal records ops, not base state), and
+    ``service_kwargs`` must reproduce the scheduler configuration
+    (``batch_size`` / ``strict_order`` / ``coalesce``) — recovery
+    cross-checks both against the journal's ``meta`` header when the
+    writer recorded them.  Committed batches re-commit through the same
+    scheduler pipeline (identical coalescing, identical ring versions);
+    un-barriered tail ops land back in the pending log, uncommitted.
+    Pass ``journal=OpJournal(new_path)`` in ``service_kwargs`` to resume
+    journaling: the replay is re-logged into the new journal.
+    """
+    if make_service is None:
+        from repro.engine import GraphService as make_service
+    meta, batches, pending = read_journal(path)
+    svc = make_service(initial_state, **service_kwargs)
+    sched = svc.scheduler
+    for key, got in (("vcap", initial_state.vcap),
+                     ("ecap", initial_state.ecap),
+                     ("batch_size", sched.batch_size),
+                     ("strict_order", sched.strict_order),
+                     ("coalesce", sched.coalesce)):
+        want = meta.get(key)
+        if want is not None and want != got:
+            raise JournalError(
+                f"{path}: journal written with {key}={want}, recovering "
+                f"with {key}={got}")
+    for chunk in batches:
+        sched.replay_commit(chunk)
+    sched.replay_pending(pending)
+    return svc
+
+
+def journal_meta(initial_state, scheduler_kwargs: dict) -> dict:
+    """The ``meta`` header a service should stamp: enough to cross-check
+    a recovery's configuration."""
+    return {"vcap": int(initial_state.vcap), "ecap": int(initial_state.ecap),
+            **{k: scheduler_kwargs[k] for k in
+               ("batch_size", "strict_order", "coalesce")
+               if k in scheduler_kwargs}}

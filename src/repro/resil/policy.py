@@ -1,0 +1,69 @@
+"""Deadline / retry-ladder degradation policy for the serving stack.
+
+The paper's posture — a failed writer never blocks a reader — becomes,
+for a serving front end: a failed *collect* never takes down a query
+that has anything correct left to say.  :class:`ResiliencePolicy`
+parameterizes the ladder the services walk when a collect raises:
+
+  1. the first attempt runs the normal unchanged → delta → full ladder;
+  2. each retry **demotes**: the collect re-runs with the delta ladder
+     disabled — a full recompute from a *pinned* snapshot of the latest
+     ring version (delta failed → retry full; sharded dispatch failed →
+     recompute from the pinned snapshot), after an optional exponential
+     backoff;
+  3. once the retry budget or the per-query deadline is exhausted, the
+     service serves the last cached answer at its still-resident ring
+     version, flagged ``degraded=True`` with ``stale_version`` on the
+     reply — correct *at the version it claims*, never a torn read.
+     With no resident cached answer, the failure propagates: there is
+     nothing correct to serve, and a loud error beats a silent lie.
+
+The policy object is pure data + arithmetic; the ladder itself lives in
+:meth:`repro.engine.service.BaseGraphService._query_resilient` so both
+the local and sharded services walk the identical rungs.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+__all__ = ["ResiliencePolicy"]
+
+
+@dataclass(frozen=True)
+class ResiliencePolicy:
+    """How a service degrades when collects fail or deadlines pass.
+
+    ``deadline_ms`` bounds the *retry* budget, not the first attempt: a
+    slow-but-successful first collect still returns fresh (better than
+    stale); the deadline decides whether another rung is attempted.
+    ``max_retries`` counts demoted re-collects after the first attempt.
+    ``backoff_ms`` sleeps ``backoff_ms * backoff_factor**(attempt-1)``
+    before retry ``attempt`` (keep 0 in tests).  ``allow_stale`` gates
+    rung 3; with it off, an exhausted ladder re-raises the last error.
+    """
+
+    deadline_ms: float = float("inf")
+    max_retries: int = 1
+    backoff_ms: float = 0.0
+    backoff_factor: float = 2.0
+    allow_stale: bool = True
+
+    def __post_init__(self):
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if self.backoff_ms < 0 or self.deadline_ms < 0:
+            raise ValueError("backoff_ms / deadline_ms must be >= 0")
+
+    def deadline_exceeded(self, t0: float) -> bool:
+        """True when the budget that started at ``t0`` (perf_counter) is
+        spent — no further rungs should be attempted."""
+        if self.deadline_ms == float("inf"):
+            return False
+        return (time.perf_counter() - t0) * 1e3 >= self.deadline_ms
+
+    def backoff_s(self, attempt: int) -> float:
+        """Sleep before retry ``attempt`` (1-based), in seconds."""
+        if self.backoff_ms <= 0.0:
+            return 0.0
+        return (self.backoff_ms * self.backoff_factor ** (attempt - 1)) / 1e3

@@ -8,10 +8,16 @@ posture here:
     preemption) anywhere re-enters at the last committed version with
     deterministic data (see data/pipeline.py).
   * **Straggler detection** — `HeartbeatMonitor` keeps a rolling window of
-    step latencies; steps slower than ``factor`` x the rolling median raise a
-    straggler flag.  On a real fleet the flag feeds the scheduler (recreate
-    the slow host / shrink the mesh); here it is surfaced via callbacks and
-    counted, and the *elastic restart* path it would trigger is exactly the
+    latencies; a measurement slower than ``factor`` x the rolling median
+    raises a straggler flag.  Its primary consumer is the serving stack:
+    pass one as ``StreamScheduler(monitor=...)`` (or the ``monitor=``
+    kwarg of either graph service) and it watches **commit latency** —
+    a slow ``apply_ops``/ring append flags the commit, bumps the
+    ``scheduler_stragglers`` counter, and annotates the commit's trace
+    span with ``straggler=True``.  The training loop below wires the
+    same monitor around its step function.  On a real fleet the flag
+    feeds the cluster scheduler (recreate the slow host / shrink the
+    mesh); the *elastic restart* path it would trigger is exactly the
     mesh-resharding restore in checkpoint/ (tested in tests/test_checkpoint).
   * **Elastic scaling** — nothing in the checkpoint format mentions the
     mesh: restore onto more/fewer chips = `restore_checkpoint(mesh=new)`.
@@ -28,6 +34,11 @@ from repro.checkpoint import Checkpointer
 
 
 class HeartbeatMonitor:
+    """Rolling-median latency watchdog (``start()``/``stop(step)`` around
+    each unit of work).  ``stop`` returns the measured seconds and, once
+    the window has >= 8 samples, counts/calls back on measurements over
+    ``factor`` x the median."""
+
     def __init__(self, window: int = 32, factor: float = 3.0,
                  on_straggler: Optional[Callable] = None):
         self.window = deque(maxlen=window)

@@ -51,6 +51,8 @@ from repro.engine.service import ServiceStats  # noqa: F401  (re-export)
 from repro.obs import Telemetry
 from repro.obs.trace import annotate as _trace_annotate
 from repro.obs.trace import maybe_span
+from repro.resil.faults import P_COLLECT_DELTA, P_COLLECT_DISPATCH, inject
+from repro.resil.policy import ResiliencePolicy
 
 from . import queries as shard_queries
 from .tile_shard import (
@@ -98,7 +100,9 @@ class ShardedGraphService(BaseGraphService):
                  dirty_threshold: float = 0.25, strict_order: bool = False,
                  coalesce: bool = False, max_collects: int = 16,
                  max_cached: int = 128,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 policy: Optional[ResiliencePolicy] = None,
+                 journal=None, monitor=None):
         shard_queries._bc_kind(bc_mode, delta=False)  # validate up front
         self.mesh = as_graph_mesh(mesh)
         self.tile = tile
@@ -109,7 +113,8 @@ class ShardedGraphService(BaseGraphService):
             initial_state, ring_depth=ring_depth, batch_size=batch_size,
             dirty_threshold=dirty_threshold, strict_order=strict_order,
             coalesce=coalesce, max_collects=max_collects,
-            max_cached=max_cached, telemetry=telemetry)
+            max_cached=max_cached, telemetry=telemetry, policy=policy,
+            journal=journal, monitor=monitor)
         self._view: Optional[ShardedTileView] = None
         self._view_version: int = -1
 
@@ -180,9 +185,20 @@ class ShardedGraphService(BaseGraphService):
                      & (idx >= 0) & (idx < state.vcap))
         return bool((~prior.ok & alive_now).any())
 
-    def _collect(self, kind: str, srcs, key):
+    def _collect(self, kind: str, srcs, key, ladder: bool = True):
         """One collect against the latest ring version, climbing the
-        unchanged → delta → full ladder (see module docstring)."""
+        unchanged → delta → full ladder (see module docstring).
+
+        ``ladder=False`` (a resilience retry) pins the latest version and
+        dispatches the full distributed query directly — no cache read,
+        no dirty-set math — so a failed delta path cannot poison the
+        retry."""
+        if not ladder:
+            entry = self.ring.latest
+            with self.ring.pin(entry.version):
+                res = self._full_collect(kind, srcs, entry.state)
+            self._cache_store(key, entry.version, res)
+            return entry, res, "full"
         entry = self.ring.latest
         state = entry.state
         slot = self._cache.get(key)
@@ -212,14 +228,20 @@ class ShardedGraphService(BaseGraphService):
                         if res is None:  # new negative cycle: canonical full
                             mode, res = "full", None
         if res is None:
-            acct = self._acct_begin()
-            res = _QUERIES[kind](
-                self.view(), state, srcs,
-                **(self._bc_kwargs() if kind == "bc" else {}),
-                use_kernel=self.use_kernel, accountant=acct)
-            self._acct_charge(acct)
+            res = self._full_collect(kind, srcs, state)
         self._cache_store(key, entry.version, res)
         return entry, res, mode
+
+    def _full_collect(self, kind: str, srcs, state: GraphState):
+        """Dispatch the full distributed query (the ladder's bottom rung)."""
+        inject(P_COLLECT_DISPATCH)
+        acct = self._acct_begin()
+        res = _QUERIES[kind](
+            self.view(), state, srcs,
+            **(self._bc_kwargs() if kind == "bc" else {}),
+            use_kernel=self.use_kernel, accountant=acct)
+        self._acct_charge(acct)
+        return res
 
     def _bc_kwargs(self) -> dict:
         return {"src_chunk": self.src_chunk, "bc_mode": self.bc_mode}
@@ -246,6 +268,7 @@ class ShardedGraphService(BaseGraphService):
                        state: GraphState):
         """Run the distributed delta query; ``None`` = fall back to full
         (delta SSSP surfaced a negative cycle born since the prior)."""
+        inject(P_COLLECT_DELTA)
         view = self.view()
         acct = self._acct_begin()
         if kind == "bc":

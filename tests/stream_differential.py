@@ -27,8 +27,26 @@ records agree, in order, with every oracle-validated answer's
 (kind, version, ladder mode).  ``trace_path`` additionally streams the
 records to a JSONL file for ``python -m repro.obs.report``.
 
+**Chaos mode** (``fault_plan=...``): the replay runs inside a
+``repro.resil.fault_scope`` with a :class:`~repro.resil.ResiliencePolicy`
+attached to every service, so injected faults hit the scheduler commits,
+the collect ladder, ring eviction, and the result-cache stores mid-
+stream.  The contract is **degraded-or-correct, never silently wrong**:
+
+  * a commit that faults is retried until it lands — the scheduler's
+    atomicity guarantee means the retry replays the identical prefix;
+  * a successful (non-degraded) answer is checked against the oracle
+    exactly as in a clean run;
+  * a ``degraded=True`` answer must reproduce, bit-for-bit
+    (``results_equal``), a previously oracle-validated answer at its
+    still-resident ``stale_version``;
+  * a query that raises (ladder exhausted, nothing cached) is counted —
+    and ``verify_service`` must pass after EVERY injected fault.
+
 Everything is keyed on the integer ``seed`` (logged on entry), so any
-failure is reproducible with ``run_differential(seed, ...)`` alone.
+failure is reproducible with ``run_differential(seed, ...)`` alone; a
+chaos failure additionally reproduces from
+``FaultPlan(plan.to_schedule())``.
 """
 from __future__ import annotations
 
@@ -36,7 +54,14 @@ import numpy as np
 
 from repro.core import PUTE, PUTV, REME, REMV, make_graph
 from repro.engine import GraphService
+from repro.engine.incremental import results_equal
 from repro.obs import Telemetry
+from repro.resil import (
+    InjectedFault,
+    ResiliencePolicy,
+    assert_service_ok,
+    fault_scope,
+)
 from oracle import GraphOracle
 
 INF = float("inf")
@@ -146,101 +171,176 @@ def run_differential(seed: int, *, n: int = 24, steps: int = 8,
                      ops_per_step: int = 8, neg_frac: float = 0.0,
                      mesh=None, tile: int = 8, bc_mode: str = "gather",
                      batch_size: int = 4, score_every: int = 0,
-                     trace_path=None):
+                     trace_path=None, fault_plan=None, policy=None):
     """Replay one seeded stream against oracle + service(s).
 
-    Returns ``{service_name: {"unchanged": k, "delta": k, "full": k}}`` so
-    callers can assert ladder-mode coverage.  Raises AssertionError (with
+    Returns ``{service_name: {"unchanged": k, "delta": k, "full": k,
+    "degraded": k, "raised": k}}`` so callers can assert ladder-mode (and,
+    in chaos runs, degradation) coverage.  Raises AssertionError (with
     the offending (service, kind, src, step, mode) context) on the first
     divergence from the oracle, and at the end on any telemetry
     inconsistency (mode-conservation or trace/answer disagreement — see
     module docstring).  ``trace_path`` mirrors the trace to a JSONL file.
+
+    ``fault_plan`` (a ``repro.resil.FaultPlan``) turns on chaos mode: the
+    whole replay runs inside its ``fault_scope`` and every service gets
+    ``policy`` (default: 2 retries, stale serving on) — see the module
+    docstring for the degraded-or-correct contract enforced per query.
     """
     print(f"[stream-differential] seed={seed} n={n} steps={steps} "
           f"ops_per_step={ops_per_step} neg_frac={neg_frac} "
-          f"bc_mode={bc_mode}", flush=True)
+          f"bc_mode={bc_mode} chaos={fault_plan is not None}", flush=True)
     rng = np.random.default_rng(seed)
     g0 = make_graph(n, 16 * n)
     oracle = GraphOracle()
     telemetry = Telemetry.make(trace_path, hlo=mesh is not None)
+    if fault_plan is not None and policy is None:
+        policy = ResiliencePolicy(max_retries=2)
     services = [("local", GraphService(g0, batch_size=batch_size,
-                                       telemetry=telemetry), False)]
+                                       telemetry=telemetry, policy=policy),
+                 False)]
     if mesh is not None:
         from repro.shard import ShardedGraphService
         services.append(("sharded", ShardedGraphService(
             g0, mesh, tile=tile, batch_size=batch_size, bc_mode=bc_mode,
-            src_chunk=2, telemetry=telemetry), True))
-    modes = {name: {"unchanged": 0, "delta": 0, "full": 0}
+            src_chunk=2, telemetry=telemetry, policy=policy), True))
+    modes = {name: {"unchanged": 0, "delta": 0, "full": 0, "degraded": 0,
+                    "raised": 0}
              for name, _, _ in services}
     # Every oracle-validated explicit query's (kind, version, mode), in
     # submission order, per service — checked against the trace at the end.
     expected = {name: [] for name, _, _ in services}
+    # Every oracle-validated answer, keyed (kind, src, version), per
+    # service — the reference a degraded reply must reproduce exactly.
+    validated = {name: {} for name, _, _ in services}
 
     def commit(ops):
         _apply_oracle(oracle, ops)
-        for _, svc, _ in services:
-            svc.submit_many(ops)
-            svc.flush()
+        for name, svc, _ in services:
+            for op in ops:
+                # A submit can fault in its auto-commit; the op itself is
+                # already in the log (append precedes commit), and the
+                # failed chunk went back — a later commit drains both.
+                try:
+                    svc.submit(op)
+                except InjectedFault:
+                    assert_service_ok(svc)
+            # Under faults a commit may fail mid-flush; atomicity puts the
+            # chunk back, so retrying drains the identical prefix.  The
+            # service must verify clean after EVERY injected failure.
+            # (Progress is monotone: every retry that lands >= 1 batch
+            # shrinks the log, so the bound only guards a pathological
+            # plan that fails every single attempt.)
+            for _ in range(256):
+                try:
+                    svc.flush()
+                    break
+                except InjectedFault:
+                    assert_service_ok(svc)
+            else:
+                raise AssertionError(
+                    (seed, name, "commit never succeeded under faults"))
 
-    # Base population: every vertex alive, a random edge set per HALF of
-    # the range — churn then alternates halves, so queries pinned in the
-    # lower half see far commits (unchanged), near commits (delta), and
-    # their own cold collects (full).
-    half = n // 2
-    base = [(PUTV, i) for i in range(n)]
-    for lo, hi in ((0, half), (half, n)):
-        for _ in range(3 * half):
-            base.append((PUTE, int(rng.integers(lo, hi)),
-                         int(rng.integers(lo, hi)),
-                         float(WEIGHTS[int(rng.integers(0, len(WEIGHTS)))])))
-    commit(base)
+    def run_query(name, svc, sharded, kind, src, step):
+        ctx = (name, kind, src, step, seed)
+        try:
+            reply = svc.query(kind, [src] if sharded else src)
+        except InjectedFault:
+            # ladder exhausted with nothing servable cached: a LOUD
+            # failure (never a wrong answer); service must still verify
+            modes[name]["raised"] += 1
+            assert_service_ok(svc)
+            return
+        if reply.degraded:
+            modes[name]["degraded"] += 1
+            assert reply.stale_version == reply.version, (ctx, reply)
+            assert svc.ring.get_entry(reply.stale_version) is not None, ctx
+            prev = validated[name].get((kind, src, reply.stale_version))
+            assert prev is not None, (ctx, "degraded reply at a version "
+                                      "that was never validated")
+            assert results_equal(reply.result, prev), (
+                ctx, "degraded reply differs from the validated answer "
+                "at its claimed version")  # the no-torn-reads check
+        else:
+            modes[name][reply.mode] += 1
+            _CHECK[kind]((*ctx, reply.mode), reply, oracle, src, n, sharded)
+            validated[name][(kind, src, reply.version)] = reply.result
+            expected[name].append((kind, reply.version, reply.mode))
+        if fault_plan is not None:
+            assert_service_ok(svc)
 
-    pinned = [0, 1]
-    for step in range(steps):
-        lo, hi = ((half, n) if step % 2 else (0, half))
-        commit(gen_ops(rng, lo, hi, ops_per_step, neg_frac))
-        for src in pinned + [int(rng.integers(0, n))]:
-            for kind in ("bfs", "sssp", "bc"):
-                for name, svc, sharded in services:
-                    reply = svc.query(kind, [src] if sharded else src)
-                    modes[name][reply.mode] += 1
-                    ctx = (name, kind, src, step, reply.mode, seed)
-                    _CHECK[kind](ctx, reply, oracle, src, n, sharded)
-                    expected[name].append((kind, reply.version, reply.mode))
-        if score_every and (step + 1) % score_every == 0:
-            for name, svc, _ in services:
-                scores, _ = svc.bc_scores()
-                check_scores((name, "bc_scores", step, seed), scores,
-                             oracle, n)
+    with fault_scope(fault_plan):
+        # Base population: every vertex alive, a random edge set per HALF
+        # of the range — churn then alternates halves, so queries pinned
+        # in the lower half see far commits (unchanged), near commits
+        # (delta), and their own cold collects (full).
+        half = n // 2
+        base = [(PUTV, i) for i in range(n)]
+        for lo, hi in ((0, half), (half, n)):
+            for _ in range(3 * half):
+                base.append((PUTE, int(rng.integers(lo, hi)),
+                             int(rng.integers(lo, hi)),
+                             float(WEIGHTS[int(
+                                 rng.integers(0, len(WEIGHTS)))])))
+        commit(base)
+
+        pinned = [0, 1]
+        for step in range(steps):
+            lo, hi = ((half, n) if step % 2 else (0, half))
+            commit(gen_ops(rng, lo, hi, ops_per_step, neg_frac))
+            for src in pinned + [int(rng.integers(0, n))]:
+                for kind in ("bfs", "sssp", "bc"):
+                    for name, svc, sharded in services:
+                        run_query(name, svc, sharded, kind, src, step)
+            if score_every and (step + 1) % score_every == 0:
+                for name, svc, _ in services:
+                    scores, _ = svc.bc_scores()
+                    check_scores((name, "bc_scores", step, seed), scores,
+                                 oracle, n)
     _check_telemetry(seed, telemetry, services, modes, expected)
     telemetry.close()
     return modes
 
 
 def _check_telemetry(seed, telemetry, services, modes, expected):
-    """Telemetry invariants over the whole replay (see module docstring)."""
+    """Telemetry invariants over the whole replay (see module docstring).
+
+    Records partition into *clean* (a successful collect — one per
+    ``stats.queries``), *degraded* (stale serves — one per
+    ``stats.degraded``), and *error* (the query raised; the record
+    carries ``error`` and no version/mode) — each reconciled against its
+    own counter, so the conservation invariants survive chaos runs.
+    """
     assert telemetry.tracer.dropped == 0, seed
     for name, svc, _ in services:
         tally = modes[name]
         recs = [r for r in telemetry.tracer.records
                 if r["span"] == "query" and r["service"] == name]
-        # Ladder-mode conservation: every query took exactly one rung.
+        err_recs = [r for r in recs if "error" in r]
+        deg_recs = [r for r in recs if r.get("degraded")]
+        clean = [r for r in recs
+                 if "error" not in r and not r.get("degraded")]
+        # Ladder-mode conservation: every successful query took exactly
+        # one rung; degraded and error replies tally separately.
         assert (svc.stats.unchanged + svc.stats.delta + svc.stats.full
                 == svc.stats.queries), (seed, name)
-        assert len(recs) == svc.stats.queries, (seed, name)
+        assert len(clean) == svc.stats.queries, (seed, name)
+        assert len(deg_recs) == svc.stats.degraded == tally["degraded"], \
+            (seed, name)
+        assert len(err_recs) == tally["raised"], (seed, name)
         # The explicit (oracle-validated) queries must appear in the trace
         # in order with matching kind/version/mode; bc_scores() on the
         # sharded service rides through query() and may interleave extra
         # "bc" records, hence subsequence rather than equality.
-        it = iter(recs)
+        it = iter(clean)
         for want in expected[name]:
             for rec in it:
                 if (rec["kind"], rec["version"], rec["mode"]) == want:
                     break
             else:
                 raise AssertionError((seed, name, "missing trace", want))
-        per_mode = {m: sum(1 for r in recs if r["mode"] == m)
+        per_mode = {m: sum(1 for r in clean if r["mode"] == m)
                     for m in ("unchanged", "delta", "full")}
         for m in per_mode:
             assert per_mode[m] >= tally[m], (seed, name, m)
-        assert sum(per_mode.values()) == len(recs), (seed, name)
+        assert sum(per_mode.values()) == len(clean), (seed, name)

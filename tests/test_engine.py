@@ -517,3 +517,111 @@ def test_service_bc_scores_incremental_tile_view():
             assert np.isnan(got)
         else:
             assert got == pytest.approx(ref, rel=1e-4, abs=1e-4)
+
+
+# ------------------------- ring edge semantics ----------------------------
+
+def test_ring_release_is_idempotent_and_tolerates_unpinned():
+    """Double release of a pin and release of a never-pinned version are
+    both no-ops: counts never go negative, residency never changes."""
+    rng = np.random.default_rng(20)
+    state = _seed_graph(rng)
+    ring = VersionRing(state, depth=3)
+    ring.release(0)     # never pinned: no-op
+    ring.release(99)    # never existed: no-op
+    assert ring.pinned_versions() == [] and ring.get(0) is not None
+
+    pin = ring.pin(0)
+    pin.release()
+    pin.release()       # handle-level idempotence
+    ring.release(0)     # and a third, direct, release: still a no-op
+    assert ring.pinned_versions() == []
+    assert ring.get(0) is not None  # still resident: release != evict
+
+    # two pins on one version need two releases
+    ring.pin(0)
+    ring.pin(0)
+    ring.release(0)
+    assert ring.pinned_versions() == [0]
+    ring.release(0)
+    assert ring.pinned_versions() == []
+
+
+def test_ring_parked_entry_keeps_serving_after_rotation():
+    """A pinned version rotated out of the window parks: get/get_entry and
+    snapshot reads keep working until the last release, which evicts it."""
+    rng = np.random.default_rng(21)
+    state = _seed_graph(rng)
+    ring = VersionRing(state, depth=2)
+    pin = ring.pin(0)
+    for _ in range(4):
+        state, _ = apply_ops(state, _random_commit(rng))
+        ring.commit(state)
+    assert ring.oldest_version == 3        # 0 long gone from the window
+    entry = ring.get_entry(0)
+    assert entry is not None and entry.version == 0
+    assert _edge_set(pin.state) == _edge_set(entry.state)
+    # dirty history is window-only: parked entries never resurrect spans
+    assert ring.dirty_between(0, ring.latest.version) is None
+    evictions = ring.evictions
+    pin.release()
+    assert ring.get_entry(0) is None and ring.evictions == evictions + 1
+
+
+def test_ring_dirty_between_across_vcap_growth():
+    """A span that crosses a vertex-table growth pads the narrower masks:
+    the result is sized to the newest state's vcap with no phantom dirt in
+    the grown region."""
+    from repro.core import grow_vertices
+    rng = np.random.default_rng(22)
+    state = _seed_graph(rng)
+    vcap0 = state.vcap
+    ring = VersionRing(state, depth=8)
+    state, _ = apply_ops(state, _random_commit(rng))
+    ring.commit(state)                         # v1 @ vcap0
+    state = grow_vertices(state)
+    state, _ = apply_ops(state, _random_commit(rng))
+    ring.commit(state)                         # v2 @ 2*vcap0
+    assert state.vcap > vcap0
+    span = ring.dirty_between(0, 2)
+    assert span is not None and span.shape[0] == state.vcap
+    # commits only touched ids < vcap0: the grown region must be clean
+    assert not bool(np.asarray(span)[vcap0:].any())
+    # the padded span still covers the end-to-end dirty set
+    per = [np.asarray(ring.get_entry(v).dirty) for v in (1, 2)]
+    ored = np.zeros((state.vcap,), bool)
+    for m in per:
+        ored[: m.shape[0]] |= m
+    assert np.array_equal(np.asarray(span), ored)
+    # an empty span anchored at the narrow version sizes to THAT vcap
+    assert np.asarray(ring.dirty_between(1, 1)).shape[0] == vcap0
+
+
+# ----------------------- heartbeat / straggler wiring ----------------------
+
+def test_scheduler_heartbeat_flags_slow_commits():
+    """A HeartbeatMonitor handed to the scheduler watches commit latency:
+    with factor=0 every commit after the 8-sample warmup is a straggler —
+    counted on the monitor, mirrored into scheduler_stragglers, and
+    annotated on the commit's trace span."""
+    from repro.obs import Telemetry
+    from repro.runtime.fault_tolerance import HeartbeatMonitor
+
+    rng = np.random.default_rng(23)
+    flagged = []
+    mon = HeartbeatMonitor(window=32, factor=0.0,
+                           on_straggler=lambda v, dt, med: flagged.append(v))
+    tel = Telemetry.make(None)
+    svc = GraphService(_seed_graph(rng), batch_size=4, telemetry=tel,
+                       monitor=mon)
+    for _ in range(6):
+        svc.submit_many(_random_commit(rng, n_ops=8))
+        svc.flush()
+    n = svc.scheduler.stats.batches_committed
+    assert n >= 10
+    assert mon.stragglers == n - 8 == svc.scheduler.stats.stragglers
+    assert flagged and flagged[0] == 9  # ring version of the 9th commit
+    commits = [r for r in tel.tracer.records if r["span"] == "commit"]
+    assert sum(bool(r.get("straggler")) for r in commits) == mon.stragglers
+    assert len(mon.window) == n
+    tel.close()

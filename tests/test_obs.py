@@ -129,7 +129,7 @@ def test_tracer_jsonl_and_report_gate(tmp_path):
     tr = Tracer(str(path))
     for mode in ("unchanged", "delta", "full"):
         with tr.span("query", service="local", kind="bfs", version=1,
-                     mode=mode, coll_bytes=0):
+                     mode=mode, coll_bytes=0, degraded=False):
             pass
     tr.close()
     records = report.load(str(path))

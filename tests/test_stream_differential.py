@@ -73,3 +73,60 @@ run_differential(11, n=32, steps=4, mesh=mesh, bc_mode="ring",
 print("STREAM OK")
 """)
     assert "STREAM OK" in out
+
+
+# --------------------------------- chaos -----------------------------------
+
+def test_stream_differential_chaos_local(tmp_path):
+    """Seeded-random faults over the scheduler commits, the collect
+    ladder, ring eviction and the cache stores: every answer is degraded-
+    or-correct (the harness cross-checks degraded replies bit-for-bit
+    against previously oracle-validated answers), ``verify_service``
+    passes after every fault, and the traced stream passes the report
+    gate including the new degraded/error fields."""
+    from repro.obs import report
+    from repro.resil import FaultPlan, ResiliencePolicy
+
+    trace = tmp_path / "chaos.jsonl"
+    plan = FaultPlan(seed=1, rate=0.3)
+    modes = run_differential(7, n=24, steps=6, fault_plan=plan,
+                             policy=ResiliencePolicy(max_retries=1),
+                             trace_path=str(trace))
+    assert plan.fired > 0
+    local = modes["local"]
+    assert local["degraded"] > 0, local   # the bottom rung was exercised
+    assert local["full"] > 0 and local["unchanged"] > 0, local
+    assert report.main([str(trace), "--check", "--require-degraded"]) == 0
+
+
+def test_stream_differential_chaos_replays_from_schedule():
+    """A random chaos run converts to an explicit schedule that replays
+    the identical degraded/raised pattern — chaos flakes become
+    regression tests."""
+    from repro.resil import FaultPlan, ResiliencePolicy
+
+    pol = ResiliencePolicy(max_retries=1)
+    plan = FaultPlan(seed=2, rate=0.3)
+    m1 = run_differential(7, n=24, steps=4, fault_plan=plan, policy=pol)
+    replay = FaultPlan(plan.to_schedule())
+    m2 = run_differential(7, n=24, steps=4, fault_plan=replay, policy=pol)
+    assert m1 == m2
+    assert replay.fired == plan.fired
+
+
+def test_stream_differential_chaos_sharded_single_device():
+    """The sharded service walks the same degrade ladder: dispatch/delta
+    faults on the shard_map paths retry from a pinned snapshot and
+    degrade to validated stale answers, never silently diverging."""
+    from repro.resil import FaultPlan, ResiliencePolicy
+
+    plan = FaultPlan(seed=3, rate=0.2)
+    modes = run_differential(7, n=24, steps=4, mesh=as_graph_mesh(),
+                             bc_mode="ring", fault_plan=plan,
+                             policy=ResiliencePolicy(max_retries=1))
+    assert plan.fired > 0
+    assert modes["sharded"]["full"] > 0
+    total = sum(modes["sharded"][m] for m in
+                ("unchanged", "delta", "full", "degraded", "raised"))
+    assert total == sum(modes["local"][m] for m in
+                        ("unchanged", "delta", "full", "degraded", "raised"))
