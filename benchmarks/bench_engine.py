@@ -215,6 +215,63 @@ def bench_service_stream(graph, stream, src, batch_size=32):
             "degraded": svc.stats.degraded + svc_tel.stats.degraded}
 
 
+def bench_service_adaptive(graph, stream, src, batch_size=32,
+                           base_stats=None):
+    """The self-tuning ladder on a live stream (``repro.obs.adaptive``).
+
+    Same deterministic commit stream, but the service consults an
+    aggressive :class:`AdaptiveThresholds` controller (short period,
+    frequent probes — a bench-scale stream must actually move the
+    thresholds) and queries all three kinds per commit so every per-kind
+    controller sees samples.  Emits the before/after thresholds, the
+    controller's adjustment/probe counts, and the bfs p50/p99 deltas
+    against the static-threshold telemetry run (``base_stats``) — the
+    number that says what self-tuning bought (or cost) on this workload.
+    """
+    from repro.obs import AdaptiveThresholds, Telemetry
+
+    tel = Telemetry.make(hlo=False)
+    ctl = AdaptiveThresholds(period=8, min_full=1, min_delta=4,
+                             probe_every=8)
+    before = ctl.thresholds()
+    svc = GraphService(graph, ring_depth=max(8, len(stream) + 2),
+                       batch_size=batch_size, telemetry=tel, adaptive=ctl)
+    kinds = ("bfs", "sssp", "bc")
+    for kind in kinds:
+        _block(svc.query(kind, src).result)  # warm compiles
+    t0 = time.perf_counter()
+    for ops in stream:
+        svc.submit_many(ops)
+        svc.flush()
+        for kind in kinds:
+            _block(svc.query(kind, src).result)
+    dt = time.perf_counter() - t0
+
+    snap = ctl.snapshot()
+    qs = tel.registry.merged_quantiles("query_wall_us", (0.5, 0.99),
+                                       service="local", kind="bfs")
+    p50_ms, p99_ms = qs[0.5] / 1e3, qs[0.99] / 1e3
+    d50 = d99 = None
+    if base_stats:
+        d50 = round(p50_ms - base_stats["p50_ms"], 3)
+        d99 = round(p99_ms - base_stats["p99_ms"], 3)
+    thr = ";".join(f"{k}={snap['thresholds'][k]:.3f}" for k in kinds)
+    _row("engine_service_stream_adaptive",
+         dt / max(len(stream), 1) * 1e6,
+         f"adjustments={snap['adjustments']};probes={snap['probes']};{thr};"
+         f"p50_ms={p50_ms:.2f};p99_ms={p99_ms:.2f}")
+    tel.close()
+    return {"thresholds_before": before,
+            "thresholds_after": snap["thresholds"],
+            "clamps": snap["clamps"],
+            "adjustments": snap["adjustments"],
+            "probes": snap["probes"],
+            "samples": snap["samples"],
+            "p50_ms": round(p50_ms, 3), "p99_ms": round(p99_ms, 3),
+            "p50_delta_ms": d50, "p99_delta_ms": d99,
+            "errors": svc.stats.errors, "degraded": svc.stats.degraded}
+
+
 def bench_latency_vs_update_rate(graph, rng, n, src, hot_frac,
                                  rates=(8, 32, 128), n_commits=24):
     """Query latency as more update ops land between consecutive queries."""
@@ -292,6 +349,8 @@ def main(n=2048, edge_factor=8, n_commits=32, ops_per_commit=24,
         speedups[kind] = bench_query_paths(graph, versions, src, kind,
                                            verify=verify)
     service_stats = bench_service_stream(graph, stream, src)
+    service_stats["adaptive"] = bench_service_adaptive(
+        graph, stream, src, base_stats=service_stats)
     bench_latency_vs_update_rate(graph, rng, n, src, hot_frac)
     tile_speedup, tile_stats = bench_tile_view(graph, versions)
 

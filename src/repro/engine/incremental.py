@@ -62,6 +62,7 @@ from repro.core.queries import (
     sssp,
     sssp_tree_parents,
 )
+from repro.obs.hlo import account_jit
 from repro.obs.trace import annotate as _trace_annotate
 
 
@@ -258,15 +259,25 @@ def _prior_usable(state: GraphState, prior, prior_ok) -> bool:
             and prior.dist.shape[0] == state.vcap)
 
 
+def _acct_key(kind: str, state: GraphState) -> tuple:
+    """Program signature of a local jitted query: ``src`` is a traced
+    scalar, so the compiled program depends only on the table capacities."""
+    return ("local", kind, state.vcap, state.ecap)
+
+
 def incremental_bfs(state: GraphState, prior: Optional[BFSResult],
                     dirty: Optional[jax.Array], src, *,
-                    dirty_threshold: float = 0.25):
+                    dirty_threshold: float = 0.25, accountant=None):
     """BFS on ``state`` reusing ``prior`` where possible.
 
     Returns ``(BFSResult, IncrementalStats)``; the result is always exactly
-    what ``queries.bfs(state, src)`` would return.
+    what ``queries.bfs(state, src)`` would return.  With an ``accountant``
+    (``repro.obs.hlo``), the cost dict of whichever compiled program
+    produced the answer is deposited in ``accountant.last`` — the
+    *unchanged* shortcut runs no program and deposits nothing.
     """
     if dirty is None or not _prior_usable(state, prior, prior.ok if prior else False):
+        account_jit(accountant, _acct_key("bfs", state), bfs, state, src)
         return bfs(state, src), IncrementalStats("full")
     n_dirty, touched = (int(x) for x in _dirty_stats(prior.reached, dirty))
     frac = n_dirty / state.vcap
@@ -280,15 +291,19 @@ def incremental_bfs(state: GraphState, prior: Optional[BFSResult],
         return prior, stats
     if frac > dirty_threshold:
         stats.mode = "full"
+        account_jit(accountant, _acct_key("bfs", state), bfs, state, src)
         return bfs(state, src), stats
+    account_jit(accountant, _acct_key("bfs_delta", state), delta_bfs,
+                state, prior, dirty, src)
     return delta_bfs(state, prior, dirty, src), stats
 
 
 def incremental_sssp(state: GraphState, prior: Optional[SSSPResult],
                      dirty: Optional[jax.Array], src, *,
-                     dirty_threshold: float = 0.25):
+                     dirty_threshold: float = 0.25, accountant=None):
     """SSSP analogue of ``incremental_bfs``."""
     if dirty is None or not _prior_usable(state, prior, prior.ok if prior else False):
+        account_jit(accountant, _acct_key("sssp", state), sssp, state, src)
         return sssp(state, src), IncrementalStats("full")
     n_dirty, touched = (int(x) for x in _dirty_stats(prior.dist < jnp.inf,
                                                      dirty))
@@ -300,19 +315,23 @@ def incremental_sssp(state: GraphState, prior: Optional[SSSPResult],
         return prior, stats
     if frac > dirty_threshold:
         stats.mode = "full"
+        account_jit(accountant, _acct_key("sssp", state), sssp, state, src)
         return sssp(state, src), stats
     res = delta_sssp(state, prior, dirty, src)
     if bool(res.negcycle):
         # Negative cycle: the full query's non-converged distances depend on
         # relaxation order; rerun it so callers see the canonical answer.
         stats.mode = "full"
+        account_jit(accountant, _acct_key("sssp", state), sssp, state, src)
         return sssp(state, src), stats
+    account_jit(accountant, _acct_key("sssp_delta", state), delta_sssp,
+                state, prior, dirty, src)
     return res, stats
 
 
 def incremental_bc(state: GraphState, prior: Optional[BCResult],
                    dirty: Optional[jax.Array], src, *,
-                   dirty_threshold: float = 0.25):
+                   dirty_threshold: float = 0.25, accountant=None):
     """BC dependencies with the engine's unchanged → delta → full ladder.
 
     Same *unchanged* shortcut as BFS/SSSP — churn that never touches the
@@ -325,6 +344,8 @@ def incremental_bc(state: GraphState, prior: Optional[BCResult],
     usable = (prior is not None and bool(prior.ok)
               and prior.level.shape[0] == state.vcap)
     if dirty is None or not usable:
+        account_jit(accountant, _acct_key("bc", state), bc_dependencies,
+                    state, src)
         return bc_dependencies(state, src), IncrementalStats("full")
     n_dirty, touched = (int(x) for x in _dirty_stats(prior.level >= 0, dirty))
     frac = n_dirty / state.vcap
@@ -335,11 +356,17 @@ def incremental_bc(state: GraphState, prior: Optional[BCResult],
         return prior, stats
     if frac > dirty_threshold:
         stats.mode = "full"
+        account_jit(accountant, _acct_key("bc", state), bc_dependencies,
+                    state, src)
         return bc_dependencies(state, src), stats
     cut = bc_level_cut(prior.level, dirty, state.alive)
     if int(cut) < 1:
         stats.mode = "full"
+        account_jit(accountant, _acct_key("bc", state), bc_dependencies,
+                    state, src)
         return bc_dependencies(state, src), stats
+    account_jit(accountant, _acct_key("bc_delta", state), _delta_bc_at_cut,
+                state, prior, cut, src)
     return _delta_bc_at_cut(state, prior, cut, src), stats
 
 

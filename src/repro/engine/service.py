@@ -58,7 +58,9 @@ from repro.core import queries
 from repro.core.graph_state import GraphState
 from repro.core.snapshot import ScanStats
 from repro.core.tiles import TileView, refresh_tile_view
-from repro.obs import CounterStruct, ModeCounters, Telemetry
+from repro.obs import AdaptiveThresholds, CounterStruct, ModeCounters, \
+    Telemetry
+from repro.obs.hlo import account_jit
 from repro.obs.trace import maybe_span
 from repro.resil.faults import (
     P_CACHE_STORE,
@@ -83,6 +85,10 @@ _INCREMENTAL = {"bfs": incremental_bfs, "sssp": incremental_sssp,
                 "bc": incremental_bc}
 _FULL = {"bfs": queries.bfs, "sssp": queries.sssp,
          "bc": queries.bc_dependencies}
+
+#: per-query cost scratch template (reset at every traced query() entry).
+_QUERY_COST_ZERO = {"coll_bytes": 0, "temp_bytes": 0, "flops": 0.0,
+                    "device_us": 0.0}
 
 
 class ServiceStats(CounterStruct):
@@ -180,10 +186,24 @@ class BaseGraphService:
                       max_cached: int,
                       telemetry: Optional[Telemetry] = None,
                       policy: Optional[ResiliencePolicy] = None,
-                      journal=None, monitor=None) -> None:
+                      journal=None, monitor=None, adaptive=None) -> None:
         self.telemetry = telemetry
         self.policy = policy
         registry = telemetry.registry if telemetry is not None else None
+        # Adaptive dirty-threshold control (repro.obs.adaptive): pass an
+        # AdaptiveThresholds (or True for defaults seeded from the static
+        # threshold) to have the ladder consult a self-tuned per-kind
+        # crossover instead of the fixed dirty_threshold.  The controller
+        # feeds on the traced wall times, so it requires telemetry.
+        if adaptive is True:
+            adaptive = AdaptiveThresholds(base=dirty_threshold)
+        if adaptive is not None:
+            if telemetry is None:
+                raise ValueError("adaptive thresholds require telemetry= "
+                                 "(the controller feeds on traced query "
+                                 "wall times)")
+            adaptive.bind(registry, telemetry.tracer, self._service_name)
+        self.adaptive: Optional[AdaptiveThresholds] = adaptive
         self.ring = VersionRing(initial_state, depth=ring_depth)
         # The scheduler's counters carry this service's label: two services
         # sharing one telemetry registry (the differential harness does)
@@ -199,10 +219,14 @@ class BaseGraphService:
         self.max_cached = max_cached
         self.stats = ServiceStats(registry, service=self._service_name)
         self._cache: Dict[Tuple, _CacheSlot] = {}
-        # HLO-attributed cost of the current query's device programs,
-        # summed over its collects (the sharded service charges it; the
-        # local engine has no collectives, so it reports zero bytes).
-        self._query_cost = {"coll_bytes": 0, "temp_bytes": 0}
+        # Per-query observation scratch, reset at query() entry: the
+        # HLO-attributed cost of the query's device programs summed over
+        # its collects (local collects have no collectives, so they
+        # report zero bytes but real flops), the attributed device time,
+        # and the dirty fraction the ladder decision saw (fed to the
+        # adaptive controller).
+        self._query_cost = dict(_QUERY_COST_ZERO)
+        self._query_dirty_frac: Optional[float] = None
 
     # ------------------------------ updates ------------------------------
 
@@ -268,21 +292,60 @@ class BaseGraphService:
 
     def _charge_cost(self, cost: Optional[dict]) -> None:
         """Accumulate one collect's HLO-attributed cost into the current
-        query's trace record (sharded subclass calls this per dispatch)."""
+        query's trace record (both services call this per dispatch)."""
         if cost:
             self._query_cost["coll_bytes"] += cost.get("collective_bytes",
                                                        0) or 0
             self._query_cost["temp_bytes"] = max(
                 self._query_cost["temp_bytes"], cost.get("temp_bytes") or 0)
+            self._query_cost["flops"] += cost.get("flops") or 0.0
+
+    def _acct_begin(self):
+        """The HLO cost accountant with its deposit slot cleared, or None.
+
+        The query wrappers (``shard.queries`` sharded, ``account_jit`` in
+        ``engine.incremental`` locally) deposit their compiled program's
+        cost dict into ``accountant.last`` (``repro.obs.hlo``); the
+        service picks it up right after the dispatch and charges it to
+        the current query's trace record — wrapper return types stay
+        exactly what they were."""
+        tel = self.telemetry
+        acct = tel.accountant if tel is not None else None
+        if acct is not None:
+            acct.last = None
+        return acct
+
+    def _acct_charge(self, acct) -> None:
+        if acct is not None:
+            self._charge_cost(acct.last)
+
+    def _threshold(self, kind: str) -> float:
+        """The ladder's delta-vs-full crossover for ``kind``: the adaptive
+        controller's current (possibly probing) value when one is bound,
+        else the static ``dirty_threshold``."""
+        if self.adaptive is not None:
+            return self.adaptive.threshold(kind)
+        return self.dirty_threshold
+
+    def _note_dirty_frac(self, frac) -> None:
+        """Record the dirty fraction the ladder decision just saw, feeding
+        the adaptive controller's crossover fit after the query closes."""
+        if frac is not None:
+            self._query_dirty_frac = float(frac)
 
     def _traced_collect(self, kind: str, srcs, key, ladder: bool = True):
-        """``_collect`` wrapped in a child span when tracing is on."""
+        """``_collect`` wrapped in a child span when tracing is on; the
+        device timer blocks the fresh result to attribute its dispatch
+        gap (≈0 for an unchanged cache hit — nothing was dispatched)."""
         tel = self.telemetry
         if tel is None:
             return self._collect(kind, srcs, key, ladder=ladder)
         with tel.tracer.span("collect", kind=kind) as sp:
             entry, res, qmode = self._collect(kind, srcs, key, ladder=ladder)
-            sp.set(version=entry.version, mode=qmode)
+            dev = tel.profiler.measure(res, name=f"collect:{kind}")
+            self._query_cost["device_us"] += dev
+            sp.set(version=entry.version, mode=qmode,
+                   device_us=round(dev, 1))
         return entry, res, qmode
 
     # ------------------------------ queries ------------------------------
@@ -310,7 +373,8 @@ class BaseGraphService:
         tel = self.telemetry
         if tel is None:
             return self._query_guarded(kind, srcs, mode)
-        self._query_cost = {"coll_bytes": 0, "temp_bytes": 0}
+        self._query_cost = dict(_QUERY_COST_ZERO)
+        self._query_dirty_frac = None
         with tel.tracer.span("query", service=self._service_name,
                              kind=kind, cn=(mode == "cn")) as sp:
             try:
@@ -330,14 +394,25 @@ class BaseGraphService:
                    cn_interrupts=reply.scan.interrupting_updates,
                    validated=reply.validated,
                    block_us=round(block_us, 1),
+                   device_us=round(self._query_cost["device_us"], 1),
                    coll_bytes=self._query_cost["coll_bytes"],
                    temp_bytes=self._query_cost["temp_bytes"],
+                   flops=self._query_cost["flops"],
                    degraded=reply.degraded,
                    stale_version=reply.stale_version,
                    retries=reply.retries)
         tel.registry.histogram(
             "query_wall_us", service=self._service_name, kind=kind,
             mode=reply.mode).observe(sp.wall_us)
+        if self._query_cost["device_us"] > 0:
+            tel.registry.histogram(
+                "query_device_us", service=self._service_name, kind=kind,
+                mode=reply.mode).observe(self._query_cost["device_us"])
+        # Feed the controller after the span closed so any resulting
+        # threshold_adjust span is a sibling, not a child, of the query.
+        if self.adaptive is not None and not reply.degraded:
+            self.adaptive.observe(kind, reply.mode, sp.wall_us,
+                                  self._query_dirty_frac)
         return reply
 
     def _query_guarded(self, kind: str, srcs, mode: str) -> QueryReply:
@@ -470,13 +545,13 @@ class GraphService(BaseGraphService):
                  max_collects: int = 16, max_cached: int = 512,
                  telemetry: Optional[Telemetry] = None,
                  policy: Optional[ResiliencePolicy] = None,
-                 journal=None, monitor=None):
+                 journal=None, monitor=None, adaptive=None):
         self._init_service(
             initial_state, ring_depth=ring_depth, batch_size=batch_size,
             dirty_threshold=dirty_threshold, strict_order=strict_order,
             coalesce=coalesce, max_collects=max_collects,
             max_cached=max_cached, telemetry=telemetry, policy=policy,
-            journal=journal, monitor=monitor)
+            journal=journal, monitor=monitor, adaptive=adaptive)
         self._tiles: Optional[TileView] = None
         self._tiles_version: int = -1
         self._bc_scores: Optional[dict] = None
@@ -505,9 +580,11 @@ class GraphService(BaseGraphService):
             entry = self.ring.latest
             with self.ring.pin(entry.version):
                 inject(P_COLLECT_DISPATCH)
+                acct = self._acct_begin()
                 res, inc = _INCREMENTAL[kind](
                     entry.state, None, None, src,
-                    dirty_threshold=self.dirty_threshold)
+                    dirty_threshold=self.dirty_threshold, accountant=acct)
+                self._acct_charge(acct)
             self._cache_store(key, entry.version, res)
             return entry, res, inc.mode
         entry = self.ring.latest
@@ -518,9 +595,12 @@ class GraphService(BaseGraphService):
             dirty = self.ring.dirty_between(slot.version, entry.version)
             inject(P_COLLECT_DELTA)
         inject(P_COLLECT_DISPATCH)
+        acct = self._acct_begin()
         res, inc = _INCREMENTAL[kind](
             entry.state, prior, dirty, src,
-            dirty_threshold=self.dirty_threshold)
+            dirty_threshold=self._threshold(kind), accountant=acct)
+        self._acct_charge(acct)
+        self._note_dirty_frac(inc.dirty_fraction)
         self._cache_store(key, entry.version, res)
         return entry, res, inc.mode
 
@@ -581,7 +661,7 @@ class GraphService(BaseGraphService):
                     touched = True
                 if not touched:
                     mode = "unchanged"
-                elif n_dirty / state.vcap <= self.dirty_threshold:
+                elif n_dirty / state.vcap <= self._threshold("bc"):
                     mode = "delta"
         self.bc_scores_stats[mode] += 1
         if mode == "unchanged":

@@ -1,4 +1,4 @@
-"""Unified telemetry: metrics registry, span tracing, HLO cost accounting.
+"""Unified telemetry: metrics, tracing, cost accounting, and control.
 
 One instrument surface for the whole serving ladder (ROADMAP: the
 measurement substrate the serving/ingest work is judged against):
@@ -8,20 +8,32 @@ measurement substrate the serving/ingest work is judged against):
     (``ServiceStats``, ``bc_scores_stats``, ``refresh_stats``,
     ``SchedulerStats``) are now attribute shims over it;
   * :mod:`repro.obs.trace` — span-based tracing with contextvar nesting
-    and JSONL export; every ``query()`` through either service emits a
-    record carrying kind / ring version / ladder mode / wall time /
-    collective bytes, with child spans for scheduler commits, tile
-    refresh, and each collect of the PG-Cn loop;
+    and size-rotated JSONL export; every ``query()`` through either
+    service emits a record carrying kind / ring version / ladder mode /
+    wall time / device time / collective bytes, with child spans for
+    scheduler commits, tile refresh, and each collect of the PG-Cn loop;
   * :mod:`repro.obs.hlo` — compiled-program cost accounting
     (``cost_analysis`` / ``memory_analysis`` / HLO collective-byte
     parsing) cached per program signature and attributed to every
-    sharded query;
+    query — sharded *and* local since PR 8;
+  * :mod:`repro.obs.profile` — per-span device-time attribution
+    (dispatch-gap ``block_until_ready`` deltas, ``jax.profiler``
+    annotations when a profiler session is live) behind a null-object
+    default;
+  * :mod:`repro.obs.expo` — OpenMetrics exposition of the registry,
+    served live (:meth:`Telemetry.serve`) or one-shot
+    (``python -m repro.obs.expo``), so scrapes and ``BENCH_*.json``
+    read the same surface;
+  * :mod:`repro.obs.adaptive` — the :class:`AdaptiveThresholds`
+    controller that closes the loop: it fits the delta-vs-full crossover
+    from the service's own latency/dirty-fraction observations and tunes
+    the ladder's ``dirty_threshold`` per kind within clamps;
   * :mod:`repro.obs.report` — ``python -m repro.obs.report TRACE.jsonl``
     renders the per-kind/per-mode summary table (and is the CI gate over
     traced streams).
 
-:class:`Telemetry` bundles the three runtime pieces; pass one to a
-service (``GraphService(..., telemetry=Telemetry.make())``) to turn the
+:class:`Telemetry` bundles the runtime pieces; pass one to a service
+(``GraphService(..., telemetry=Telemetry.make())``) to turn the
 instruments on.  Without one, services still tally their shim counters
 (each shim owns a private registry) but trace nothing and never compile
 for accounting — the off path stays a single ``None`` check per query.
@@ -31,7 +43,13 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Optional
 
-from .hlo import HLOCostAccountant, analyze_compiled, parse_collective_bytes  # noqa: F401
+from .adaptive import AdaptiveThresholds  # noqa: F401
+from .hlo import (  # noqa: F401
+    HLOCostAccountant,
+    account_jit,
+    analyze_compiled,
+    parse_collective_bytes,
+)
 from .metrics import (  # noqa: F401
     LADDER_MODES,
     Counter,
@@ -42,18 +60,26 @@ from .metrics import (  # noqa: F401
     ModeCounters,
     quantile,
 )
+from .profile import DeviceTimer, NullDeviceTimer  # noqa: F401
 from .trace import TRACE_SCHEMA, Span, Tracer, annotate, current_span, maybe_span  # noqa: F401
 
 
 @dataclass
 class Telemetry:
-    """The bundle a service consumes: registry + tracer + HLO accountant.
+    """The bundle a service consumes: registry + tracer + accountant +
+    device timer.
 
     ``block``: when True (default) a traced query blocks its result before
     the span closes, so the histogram / trace wall times are end-to-end
     device latencies (what a serving benchmark quotes as p50/p99), not
     dispatch times.  Callers that pipeline async dispatches can turn it
     off and keep tracing.
+
+    ``profiler``: the device-time attributor (``repro.obs.profile``).
+    The default :class:`DeviceTimer` blocks each collect's result to
+    measure its dispatch gap — every query span then carries
+    ``device_us``; :class:`NullDeviceTimer` (``make(profile=False)``)
+    reports 0.0 without synchronizing.
     """
 
     registry: MetricsRegistry = field(default_factory=MetricsRegistry)
@@ -61,17 +87,40 @@ class Telemetry:
     accountant: Optional[HLOCostAccountant] = field(
         default_factory=HLOCostAccountant)
     block: bool = True
+    profiler: object = field(default_factory=DeviceTimer)
 
     @classmethod
     def make(cls, trace_path: Optional[str] = None, *, block: bool = True,
-             hlo: bool = True) -> "Telemetry":
+             hlo: bool = True, profile: bool = True,
+             trace_max_bytes: Optional[int] = None,
+             trace_keep: int = 3) -> "Telemetry":
         """One-call construction: in-memory by default, JSONL-sinking when
-        ``trace_path`` is given; ``hlo=False`` skips cost accounting (no
-        extra compiles — e.g. compile-latency-sensitive tests)."""
+        ``trace_path`` is given (size-rotated at ``trace_max_bytes``,
+        keeping ``trace_keep`` rotated files); ``hlo=False`` skips cost
+        accounting (no extra compiles — e.g. compile-latency-sensitive
+        tests); ``profile=False`` skips device-time attribution (no
+        per-collect synchronization)."""
         return cls(registry=MetricsRegistry(),
-                   tracer=Tracer(path=trace_path),
+                   tracer=Tracer(path=trace_path, max_bytes=trace_max_bytes,
+                                 keep=trace_keep),
                    accountant=HLOCostAccountant() if hlo else None,
-                   block=block)
+                   block=block,
+                   profiler=DeviceTimer() if profile else NullDeviceTimer())
+
+    def serve(self, port: int = 0, *, host: str = "127.0.0.1",
+              journal=None):
+        """Start the OpenMetrics scrape endpoint (``GET /metrics``) on a
+        daemon thread; returns the :class:`repro.obs.expo.ExpoServer`
+        (``.url``, ``.port``, ``.close()``).  ``journal`` additionally
+        exposes the WAL depth gauge."""
+        from .expo import ExpoServer
+        return ExpoServer(self, port=port, host=host, journal=journal)
+
+    def exposition(self, journal=None) -> str:
+        """The current OpenMetrics exposition text (what a scrape of
+        :meth:`serve` returns right now)."""
+        from .expo import telemetry_exposition
+        return telemetry_exposition(self, journal=journal)
 
     def close(self) -> None:
         self.tracer.close()

@@ -25,7 +25,8 @@ from __future__ import annotations
 import re
 from typing import Callable, Dict, Optional
 
-__all__ = ["HLOCostAccountant", "analyze_compiled", "parse_collective_bytes"]
+__all__ = ["HLOCostAccountant", "account_jit", "analyze_compiled",
+           "parse_collective_bytes"]
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -127,3 +128,20 @@ class HLOCostAccountant:
 
     def snapshot(self) -> dict:
         return {repr(k): v for k, v in self._cache.items()}
+
+
+def account_jit(accountant: Optional[HLOCostAccountant], key: tuple,
+                fn, *args) -> Optional[dict]:
+    """Deposit the cost of one jitted program with the accountant.
+
+    The local-engine twin of ``shard.queries._account``: ``fn`` is the
+    ``jax.jit``-wrapped callable the caller just ran with ``args``; the
+    first time ``key`` (the program signature — kind/mode plus the
+    shape-determining dims) is seen, the program is re-lowered and
+    compiled once for ``cost_analysis``, then every later call is a cache
+    hit that only refreshes ``accountant.last``.  No-op without an
+    accountant, so the untelemetered path pays one ``None`` check.
+    """
+    if accountant is None:
+        return None
+    return accountant.account(key, lambda: fn.lower(*args).compile())

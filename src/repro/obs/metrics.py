@@ -152,6 +152,11 @@ class MetricsRegistry:
     def histogram(self, name: str, **labels) -> Histogram:
         return self._get(Histogram, name, labels)
 
+    def instruments(self) -> list:
+        """Every registered instrument, in registration order (the
+        exposition renderer groups them into OpenMetrics families)."""
+        return list(self._metrics.values())
+
     def find(self, name: str, **label_filter) -> list:
         """Every instrument called ``name`` whose labels cover the filter."""
         out = []

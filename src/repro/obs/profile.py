@@ -1,0 +1,115 @@
+"""Per-span device-time attribution.
+
+The query spans measure host wall time; ``block_us`` measures one final
+``block_until_ready`` at the end of the query.  Neither says how much of
+a query was *device execution*: an unchanged-shortcut reply does zero
+device work but still pays host time for the dirty-set check, while a
+full sharded collect is almost all device time hidden behind jax's async
+dispatch.
+
+:class:`DeviceTimer` closes that gap with the dispatch-gap method: a
+collect returns as soon as its programs are enqueued, so the time spent
+blocking on the result *from that moment* is device execution that had
+not finished when the host moved on — per collect
+
+    t0 = now();  jax.block_until_ready(result);  device_us += now() - t0
+
+Summed over a query's collects this is the query's attributable device
+time: ~0 for unchanged replies (the cached result is already concrete),
+and asymptotically the program runtime for compute-bound collects (exact
+up to whatever device execution overlapped the host's return path, which
+the dispatch gap cannot see — it is a lower bound, where ``wall_us`` is
+the upper).  When a `jax.profiler
+<https://docs.jax.dev/en/latest/profiling.html>`_ trace is active, every
+measured region is additionally wrapped in a
+``jax.profiler.TraceAnnotation`` named after its span, so offline
+profiler timelines carry the same attribution boundaries the JSONL trace
+does.
+
+:class:`NullDeviceTimer` is the null object: ``measure`` neither blocks
+nor times (device_us 0.0), for callers that pipeline async dispatches
+and must not introduce synchronization points.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import nullcontext
+from typing import Optional
+
+__all__ = ["DeviceTimer", "NullDeviceTimer", "profiler_trace"]
+
+
+def _trace_annotation(name: str):
+    """A ``jax.profiler.TraceAnnotation`` when available, else a no-op.
+
+    Guarded per call: the annotation itself is cheap (a TraceMe that is
+    inert unless a profiler session is collecting), but older/stubbed jax
+    builds may lack it entirely.
+    """
+    try:
+        import jax.profiler
+        return jax.profiler.TraceAnnotation(name)
+    except Exception:
+        return nullcontext()
+
+
+class DeviceTimer:
+    """Blocking device-time attribution (the default).
+
+    ``measure(result, name)`` blocks ``result`` and returns the dispatch
+    gap in microseconds; ``total_us`` accumulates across calls so a
+    service can difference it per query without threading a handle
+    through every collect.
+    """
+
+    blocking = True
+
+    def __init__(self, annotate: bool = True):
+        self.annotate = annotate
+        self.total_us = 0.0
+        self.measures = 0
+
+    def measure(self, result, name: str = "device") -> float:
+        import jax
+        t0 = time.perf_counter()
+        with _trace_annotation(name) if self.annotate else nullcontext():
+            jax.block_until_ready(result)
+        us = (time.perf_counter() - t0) * 1e6
+        self.total_us += us
+        self.measures += 1
+        return us
+
+
+class NullDeviceTimer:
+    """No synchronization, no timing: ``measure`` returns 0.0 untouched."""
+
+    blocking = False
+    total_us = 0.0
+    measures = 0
+
+    def measure(self, result, name: str = "device") -> float:
+        return 0.0
+
+
+def profiler_trace(logdir: str) -> Optional[object]:
+    """Start a jax profiler trace session when the backend supports one.
+
+    Returns a closer with ``.close()`` (calls ``stop_trace``), or ``None``
+    when profiling is unavailable — callers treat the session as
+    best-effort extra visibility, never a dependency.
+    """
+    try:
+        import jax.profiler
+        jax.profiler.start_trace(logdir)
+    except Exception:
+        return None
+
+    class _Session:
+        def close(self):
+            try:
+                jax.profiler.stop_trace()
+            except Exception:
+                pass
+
+    import jax.profiler  # noqa: F811 (close over the module, post-start)
+    return _Session()

@@ -1,20 +1,24 @@
-"""Render a per-kind/per-mode summary table from a JSONL trace file.
+"""Render a per-kind/per-mode summary table from JSONL trace file(s).
 
-    PYTHONPATH=src python -m repro.obs.report TRACE.jsonl [--check] \\
-        [--require-modes unchanged,delta,full]
+    PYTHONPATH=src python -m repro.obs.report TRACE.jsonl [MORE.jsonl ...] \\
+        [--check] [--require-modes unchanged,delta,full] [--format json]
 
 Aggregates the ``span == "query"`` records a traced
 ``GraphService``/``ShardedGraphService`` emitted: one row per
 (service, kind, ladder mode) with query counts, wall-time quantiles,
-validated counts, degraded counts, and mean HLO-attributed collective
-bytes.  ``--check`` turns the reader into a CI gate: every completed
-query record must carry the full schema (kind/version/mode/degraded/
-wall/collective-bytes); records that ended in an error (they carry an
-``error`` field and no version/mode to claim) are exempt from the field
-check but counted.  ``--require-modes`` demands a non-empty row per
-named ladder mode; ``--require-degraded`` demands at least one degraded
-record (the chaos-smoke job's proof the ladder actually exercised its
-bottom rung).
+device-time medians, validated counts, degraded counts, and mean
+HLO-attributed collective bytes.  Multiple trace files (a rotated sink's
+``trace.jsonl.N`` siblings, or per-process traces) are merged and sorted
+by span id before aggregation.  ``--check`` turns the reader into a CI
+gate: every completed query record must carry the full schema
+(kind/version/mode/degraded/wall/device-time/collective-bytes/flops);
+records that ended in an error (they carry an ``error`` field and no
+version/mode to claim) are exempt from the field check but counted.
+``--require-modes`` demands a non-empty row per named ladder mode;
+``--require-degraded`` demands at least one degraded record (the
+chaos-smoke job's proof the ladder actually exercised its bottom rung).
+``--format json`` emits the summary rows as machine-readable JSON for
+CI consumers (``--json`` is the legacy spelling).
 """
 from __future__ import annotations
 
@@ -22,6 +26,7 @@ import argparse
 import json
 import sys
 from collections import defaultdict
+from typing import Sequence
 
 from .metrics import quantile
 from .trace import TRACE_SCHEMA
@@ -29,7 +34,7 @@ from .trace import TRACE_SCHEMA
 #: fields every completed query trace record must carry (the acceptance
 #: schema); error-terminated records carry ``error`` instead.
 QUERY_FIELDS = ("schema", "span", "wall_us", "kind", "version", "mode",
-                "coll_bytes", "service", "degraded")
+                "coll_bytes", "service", "degraded", "device_us", "flops")
 
 
 def load(path: str) -> list:
@@ -43,6 +48,16 @@ def load(path: str) -> list:
                 records.append(json.loads(line))
             except json.JSONDecodeError as e:
                 raise SystemExit(f"{path}:{i + 1}: invalid JSON: {e}")
+    return records
+
+
+def load_many(paths: Sequence[str]) -> list:
+    """Merge several trace files, sorted by span id (stable, so records
+    from different tracers with colliding ids keep their file order)."""
+    records = []
+    for path in paths:
+        records.extend(load(path))
+    records.sort(key=lambda r: r.get("id", 0))
     return records
 
 
@@ -87,12 +102,14 @@ def summarize(records: list) -> list:
     rows = []
     for (service, kind, mode), rs in sorted(groups.items()):
         walls = [r.get("wall_us", 0.0) for r in rs]
+        devs = [r.get("device_us", 0.0) or 0.0 for r in rs]
         rows.append({
             "service": service, "kind": kind, "mode": mode,
             "queries": len(rs),
             "p50_us": round(quantile(walls, 0.50), 1),
             "p95_us": round(quantile(walls, 0.95), 1),
             "p99_us": round(quantile(walls, 0.99), 1),
+            "device_p50_us": round(quantile(devs, 0.50), 1),
             "validated": sum(bool(r.get("validated")) for r in rs),
             "degraded": sum(bool(r.get("degraded")) for r in rs),
             "errors": sum("error" in r for r in rs),
@@ -104,7 +121,8 @@ def summarize(records: list) -> list:
 
 def render(rows: list) -> str:
     cols = ("service", "kind", "mode", "queries", "p50_us", "p95_us",
-            "p99_us", "validated", "degraded", "errors", "coll_bytes_mean")
+            "p99_us", "device_p50_us", "validated", "degraded", "errors",
+            "coll_bytes_mean")
     widths = {c: max(len(c), *(len(str(r[c])) for r in rows)) if rows
               else len(c) for c in cols}
     lines = ["  ".join(c.ljust(widths[c]) for c in cols),
@@ -118,7 +136,9 @@ def main(argv=None) -> int:
     p = argparse.ArgumentParser(
         prog="python -m repro.obs.report",
         description=__doc__.splitlines()[0])
-    p.add_argument("trace", help="JSONL trace file (Tracer export)")
+    p.add_argument("traces", nargs="+",
+                   help="JSONL trace file(s) (Tracer export); several are "
+                        "merged and sorted by span id")
     p.add_argument("--check", action="store_true",
                    help="validate schema; non-zero exit on any error")
     p.add_argument("--require-modes", default="",
@@ -127,13 +147,16 @@ def main(argv=None) -> int:
     p.add_argument("--require-degraded", action="store_true",
                    help="fail unless at least one query record is degraded "
                         "(implies --check)")
+    p.add_argument("--format", choices=("table", "json"), default="table",
+                   help="summary output format (json = machine output "
+                        "for CI)")
     p.add_argument("--json", action="store_true",
-                   help="print the summary rows as JSON instead of a table")
+                   help="legacy alias for --format json")
     a = p.parse_args(argv)
 
-    records = load(a.trace)
+    records = load_many(a.traces)
     rows = summarize(records)
-    if a.json:
+    if a.json or a.format == "json":
         print(json.dumps(rows, indent=2))
     else:
         print(render(rows))

@@ -21,11 +21,18 @@ rotated-away file, or the injected ``obs.sink`` fault) must never fail
 the query it was observing.  ``_emit`` swallows sink ``OSError``s and
 injected faults, keeps the in-memory record, and counts the loss in
 ``tracer.sink_errors``.
+
+The sink itself is bounded (the WAL's bug class: an append-only file on
+a long stream grows without limit): with ``max_bytes`` set, a write that
+would cross the limit first rotates ``trace.jsonl`` → ``trace.jsonl.1``
+(shifting older rotations up to ``keep``, dropping the oldest) and
+reopens fresh — counted in ``tracer.rotations``.
 """
 from __future__ import annotations
 
 import contextvars
 import json
+import os
 import time
 from contextlib import contextmanager
 from typing import IO, Optional
@@ -35,7 +42,8 @@ from repro.resil.faults import P_OBS_SINK, InjectedFault, inject
 __all__ = ["TRACE_SCHEMA", "Span", "Tracer", "annotate", "current_span"]
 
 #: bump when the record layout changes; readers reject unknown majors.
-TRACE_SCHEMA = 1
+#: 2: query spans additionally carry device_us + flops (PR 8).
+TRACE_SCHEMA = 2
 
 _CURRENT: contextvars.ContextVar = contextvars.ContextVar(
     "repro_obs_span", default=None)
@@ -82,15 +90,21 @@ class Tracer:
     JSONL sink, when given, sees every record regardless.
     """
 
-    def __init__(self, path: Optional[str] = None, max_records: int = 100000):
+    def __init__(self, path: Optional[str] = None, max_records: int = 100000,
+                 max_bytes: Optional[int] = None, keep: int = 3):
         self.path = path
         self.max_records = max_records
+        self.max_bytes = max_bytes
+        self.keep = max(1, keep)
         self.records: list = []
         self.dropped = 0
         self.sink_errors = 0
+        self.rotations = 0
         self._next_id = 0
         self._t0 = time.perf_counter()
         self._sink: Optional[IO] = open(path, "a") if path else None
+        self._sink_bytes = (os.path.getsize(path)
+                            if path and os.path.exists(path) else 0)
 
     @contextmanager
     def span(self, name: str, **attrs):
@@ -118,12 +132,41 @@ class Tracer:
         if self._sink is not None:
             try:
                 inject(P_OBS_SINK)
-                self._sink.write(json.dumps(rec) + "\n")
+                line = json.dumps(rec) + "\n"
+                if (self.max_bytes is not None and self._sink_bytes > 0
+                        and self._sink_bytes + len(line) > self.max_bytes):
+                    self._rotate()
+                self._sink.write(line)
                 self._sink.flush()
-            except (OSError, InjectedFault):
+                self._sink_bytes += len(line)
+            except (OSError, ValueError, InjectedFault):
                 # Best-effort sink: losing a trace line must never fail
                 # the observed operation.  The in-memory record survives.
                 self.sink_errors += 1
+
+    def _rotate(self) -> None:
+        """Shift ``path`` → ``path.1`` → ... → ``path.keep`` (oldest
+        dropped) and reopen fresh.  A failing rename is swallowed — the
+        sink reopens on whatever file is there (possibly still the
+        oversized one) and the caller's record is appended regardless, so
+        a stuck filesystem degrades to an unrotated file, never to a
+        dead or lossy trace stream."""
+        self._sink.close()
+        try:
+            oldest = f"{self.path}.{self.keep}"
+            if os.path.exists(oldest):
+                os.remove(oldest)
+            for i in range(self.keep - 1, 0, -1):
+                src = f"{self.path}.{i}"
+                if os.path.exists(src):
+                    os.replace(src, f"{self.path}.{i + 1}")
+            os.replace(self.path, f"{self.path}.1")
+            self.rotations += 1
+        except OSError:
+            pass
+        finally:
+            self._sink = open(self.path, "a")
+            self._sink_bytes = os.path.getsize(self.path)
 
     def close(self) -> None:
         if self._sink is not None:

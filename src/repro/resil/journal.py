@@ -59,6 +59,7 @@ class OpJournal:
         self.sync = sync
         self.ops_logged = 0
         self.barriers_logged = 0
+        self.ops_barriered = 0
         fresh = not (os.path.exists(self.path)
                      and os.path.getsize(self.path) > 0)
         self._f = open(self.path, "a")
@@ -98,6 +99,14 @@ class OpJournal:
         if self.sync:
             os.fsync(self._f.fileno())
         self.barriers_logged += 1
+        self.ops_barriered += int(n_ops)
+
+    @property
+    def depth(self) -> int:
+        """Ops written ahead but not yet covered by a commit barrier — the
+        replay exposure if the process died right now (the ``journal_depth``
+        gauge on the OpenMetrics exposition)."""
+        return max(0, self.ops_logged - self.ops_barriered)
 
     def close(self) -> None:
         if self._f is not None:

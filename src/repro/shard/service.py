@@ -102,7 +102,7 @@ class ShardedGraphService(BaseGraphService):
                  max_cached: int = 128,
                  telemetry: Optional[Telemetry] = None,
                  policy: Optional[ResiliencePolicy] = None,
-                 journal=None, monitor=None):
+                 journal=None, monitor=None, adaptive=None):
         shard_queries._bc_kind(bc_mode, delta=False)  # validate up front
         self.mesh = as_graph_mesh(mesh)
         self.tile = tile
@@ -114,7 +114,7 @@ class ShardedGraphService(BaseGraphService):
             dirty_threshold=dirty_threshold, strict_order=strict_order,
             coalesce=coalesce, max_collects=max_collects,
             max_cached=max_cached, telemetry=telemetry, policy=policy,
-            journal=journal, monitor=monitor)
+            journal=journal, monitor=monitor, adaptive=adaptive)
         self._view: Optional[ShardedTileView] = None
         self._view_version: int = -1
 
@@ -213,15 +213,16 @@ class ShardedGraphService(BaseGraphService):
                 if dirty is not None and union.shape[0] == state.vcap:
                     n_dirty, touched = (int(x) for x in
                                         _dirty_stats(union, dirty))
-                    _trace_annotate(
-                        dirty=n_dirty,
-                        dirty_frac=round(n_dirty / state.vcap, 6))
+                    frac = n_dirty / state.vcap
+                    _trace_annotate(dirty=n_dirty,
+                                    dirty_frac=round(frac, 6))
+                    self._note_dirty_frac(frac)
                     if not touched and self._revived_source(prior, srcs,
                                                             state):
                         touched = True
                     if not touched:
                         mode, res = "unchanged", prior
-                    elif (n_dirty / state.vcap <= self.dirty_threshold
+                    elif (frac <= self._threshold(kind)
                           and self._delta_usable(kind, prior, state)):
                         mode, res = "delta", self._delta_collect(
                             kind, prior, dirty, srcs, state)
@@ -245,24 +246,6 @@ class ShardedGraphService(BaseGraphService):
 
     def _bc_kwargs(self) -> dict:
         return {"src_chunk": self.src_chunk, "bc_mode": self.bc_mode}
-
-    def _acct_begin(self):
-        """The HLO cost accountant with its deposit slot cleared, or None.
-
-        The shard query wrappers deposit their compiled program's cost
-        dict into ``accountant.last`` (``repro.obs.hlo``); the service
-        picks it up right after the dispatch and charges it to the
-        current query's trace record — wrapper return types stay exactly
-        what they were."""
-        tel = self.telemetry
-        acct = tel.accountant if tel is not None else None
-        if acct is not None:
-            acct.last = None
-        return acct
-
-    def _acct_charge(self, acct) -> None:
-        if acct is not None:
-            self._charge_cost(acct.last)
 
     def _delta_collect(self, kind: str, prior, dirty, srcs,
                        state: GraphState):

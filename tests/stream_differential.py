@@ -55,7 +55,7 @@ import numpy as np
 from repro.core import PUTE, PUTV, REME, REMV, make_graph
 from repro.engine import GraphService
 from repro.engine.incremental import results_equal
-from repro.obs import Telemetry
+from repro.obs import AdaptiveThresholds, Telemetry
 from repro.resil import (
     InjectedFault,
     ResiliencePolicy,
@@ -171,7 +171,8 @@ def run_differential(seed: int, *, n: int = 24, steps: int = 8,
                      ops_per_step: int = 8, neg_frac: float = 0.0,
                      mesh=None, tile: int = 8, bc_mode: str = "gather",
                      batch_size: int = 4, score_every: int = 0,
-                     trace_path=None, fault_plan=None, policy=None):
+                     trace_path=None, fault_plan=None, policy=None,
+                     adaptive: bool = False):
     """Replay one seeded stream against oracle + service(s).
 
     Returns ``{service_name: {"unchanged": k, "delta": k, "full": k,
@@ -186,6 +187,16 @@ def run_differential(seed: int, *, n: int = 24, steps: int = 8,
     whole replay runs inside its ``fault_scope`` and every service gets
     ``policy`` (default: 2 retries, stale serving on) — see the module
     docstring for the degraded-or-correct contract enforced per query.
+
+    ``adaptive=True`` attaches an aggressive per-service
+    :class:`~repro.obs.AdaptiveThresholds` controller (tight period,
+    frequent probes) so the per-kind ``dirty_threshold`` actually moves
+    mid-stream — every per-query oracle check then doubles as the proof
+    that a moving threshold only re-routes queries between (bit-identical)
+    ladder rungs.  The harness additionally asserts the controller
+    invariants at the end (thresholds within clamps, one
+    ``threshold_adjust`` span per adjustment) and returns each
+    controller's snapshot under ``modes[name]["adaptive"]``.
     """
     print(f"[stream-differential] seed={seed} n={n} steps={steps} "
           f"ops_per_step={ops_per_step} neg_frac={neg_frac} "
@@ -196,14 +207,23 @@ def run_differential(seed: int, *, n: int = 24, steps: int = 8,
     telemetry = Telemetry.make(trace_path, hlo=mesh is not None)
     if fault_plan is not None and policy is None:
         policy = ResiliencePolicy(max_retries=2)
+
+    def make_adaptive():
+        # Aggressive settings: small graphs + short streams must still see
+        # adjustments and probes, or the adaptive assertions test nothing.
+        return (AdaptiveThresholds(period=6, min_full=1, min_delta=3,
+                                   probe_every=7) if adaptive else None)
+
     services = [("local", GraphService(g0, batch_size=batch_size,
-                                       telemetry=telemetry, policy=policy),
+                                       telemetry=telemetry, policy=policy,
+                                       adaptive=make_adaptive()),
                  False)]
     if mesh is not None:
         from repro.shard import ShardedGraphService
         services.append(("sharded", ShardedGraphService(
             g0, mesh, tile=tile, batch_size=batch_size, bc_mode=bc_mode,
-            src_chunk=2, telemetry=telemetry, policy=policy), True))
+            src_chunk=2, telemetry=telemetry, policy=policy,
+            adaptive=make_adaptive()), True))
     modes = {name: {"unchanged": 0, "delta": 0, "full": 0, "degraded": 0,
                     "raised": 0}
              for name, _, _ in services}
@@ -298,6 +318,8 @@ def run_differential(seed: int, *, n: int = 24, steps: int = 8,
                     check_scores((name, "bc_scores", step, seed), scores,
                                  oracle, n)
     _check_telemetry(seed, telemetry, services, modes, expected)
+    if adaptive:
+        _check_adaptive(seed, telemetry, services, modes)
     telemetry.close()
     return modes
 
@@ -344,3 +366,32 @@ def _check_telemetry(seed, telemetry, services, modes, expected):
         for m in per_mode:
             assert per_mode[m] >= tally[m], (seed, name, m)
         assert sum(per_mode.values()) == len(clean), (seed, name)
+
+
+def _check_adaptive(seed, telemetry, services, modes):
+    """Controller invariants after an ``adaptive=True`` replay: every
+    tuned threshold within its clamps, one ``threshold_adjust`` trace
+    span per counted adjustment (carrying the decision inputs), and the
+    gauge on the scrape surface agreeing with the controller."""
+    for name, svc, _ in services:
+        ctl = svc.adaptive
+        assert ctl is not None, (seed, name)
+        snap = ctl.snapshot()
+        for kind, thr in snap["thresholds"].items():
+            assert ctl.lo <= thr <= ctl.hi, (seed, name, kind, thr)
+        adj_recs = [r for r in telemetry.tracer.records
+                    if r["span"] == "threshold_adjust"
+                    and r["service"] == name]
+        assert len(adj_recs) == snap["adjustments"], (seed, name)
+        for r in adj_recs:
+            for f in ("old", "new", "t_full_us", "fit_slope_us",
+                      "crossover", "n_full", "n_delta"):
+                assert f in r, (seed, name, f)
+            assert ctl.lo <= r["new"] <= ctl.hi, (seed, name, r)
+        for kind in ctl.kinds:
+            g = telemetry.registry.find("adaptive_dirty_threshold",
+                                        service=name, kind=kind)
+            assert len(g) == 1, (seed, name, kind)
+            assert abs(g[0].value - snap["thresholds"][kind]) < 1e-9, \
+                (seed, name, kind)
+        modes[name]["adaptive"] = snap

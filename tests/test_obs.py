@@ -129,7 +129,8 @@ def test_tracer_jsonl_and_report_gate(tmp_path):
     tr = Tracer(str(path))
     for mode in ("unchanged", "delta", "full"):
         with tr.span("query", service="local", kind="bfs", version=1,
-                     mode=mode, coll_bytes=0, degraded=False):
+                     mode=mode, coll_bytes=0, degraded=False,
+                     device_us=12.5, flops=100.0):
             pass
     tr.close()
     records = report.load(str(path))
@@ -215,3 +216,447 @@ def test_local_service_trace_schema(tmp_path):
     # the latency histogram the benches read is fed once per query
     hist = tel.registry.find("query_wall_us", service="local")
     assert sum(h.count for h in hist) == 3
+
+
+def test_local_service_device_and_flops_attribution(tmp_path):
+    """With the accountant on, every local query span carries ``flops``
+    from the compiled program that answered it (and zero collective
+    bytes — the local engine has no collectives), and ``device_us`` from
+    the per-collect dispatch-gap measurement.  The unchanged shortcut
+    runs no program, so its span legitimately reports zero flops."""
+    from repro.core import PUTE, PUTV, make_graph
+    from repro.engine import GraphService
+
+    path = tmp_path / "svc.jsonl"
+    tel = Telemetry.make(str(path))
+    svc = GraphService(make_graph(16, 64), batch_size=4, telemetry=tel)
+    for i in range(6):
+        svc.submit((PUTV, i))
+    for u, v in ((0, 1), (1, 2), (2, 3)):
+        svc.submit((PUTE, u, v, 1.0))
+    svc.flush()
+    svc.query("bfs", 0)   # full
+    svc.query("bfs", 0)   # unchanged
+    svc.submit((PUTE, 3, 4, 1.0))
+    svc.flush()
+    svc.query("bfs", 0)   # delta
+    tel.close()
+
+    qrecs = [json.loads(l) for l in open(path)]
+    qrecs = [r for r in qrecs if r["span"] == "query"]
+    assert [r["mode"] for r in qrecs] == ["full", "unchanged", "delta"]
+    full, unchanged, delta = qrecs
+    assert full["flops"] > 0 and delta["flops"] > 0
+    assert unchanged["flops"] == 0        # no program dispatched
+    for r in qrecs:
+        assert r["coll_bytes"] == 0       # local engine: no collectives
+        assert r["device_us"] >= 0
+    assert full["device_us"] > 0          # the full sweep really ran
+    # the device-time histogram only sees queries that dispatched work
+    hists = tel.registry.find("query_device_us", service="local")
+    assert sum(h.count for h in hists) == sum(
+        1 for r in qrecs if r["device_us"] > 0)
+
+
+# ------------------------- metrics edge cases (PR 8) ------------------------
+
+def test_merged_quantiles_empty_reservoirs():
+    """Histograms that exist but have no samples pool to NaN quantiles,
+    and mixing an empty histogram into a populated pool is a no-op."""
+    reg = MetricsRegistry()
+    reg.histogram("w", mode="delta")          # registered, never observed
+    pooled = reg.merged_quantiles("w", (0.5, 0.99))
+    assert math.isnan(pooled[0.5]) and math.isnan(pooled[0.99])
+    reg.histogram("w", mode="full").observe(7.0)
+    pooled = reg.merged_quantiles("w", (0.5, 0.99))
+    assert pooled[0.5] == 7.0 and pooled[0.99] == 7.0
+
+
+def test_single_sample_quantiles():
+    reg = MetricsRegistry()
+    h = reg.histogram("w")
+    h.observe(42.0)
+    qs = h.quantiles((0.0, 0.5, 0.95, 0.99, 1.0))
+    assert all(v == 42.0 for v in qs.values())
+
+
+def test_counter_struct_label_collision():
+    """Two shims over the same registry with identical labels share the
+    underlying counters (keyed identity), while one distinct label splits
+    them — so two services sharing one registry can never alias."""
+    class S(CounterStruct):
+        _FIELDS = ("a",)
+        _PREFIX = "col_"
+
+    reg = MetricsRegistry()
+    s1 = S(reg, service="x")
+    s2 = S(reg, service="x")
+    s3 = S(reg, service="y")
+    s1.a += 2
+    assert s2.a == 2          # same (name, labels) -> same counter
+    assert s3.a == 0
+    s2.a += 1
+    assert s1.a == 3
+
+
+# ------------------------- OpenMetrics exposition ---------------------------
+
+def test_openmetrics_render_and_validate():
+    from repro.obs.expo import render_openmetrics, validate_openmetrics
+
+    reg = MetricsRegistry()
+    reg.counter("service_queries", service="local").inc(5)
+    reg.gauge("adaptive_dirty_threshold", service="local", kind="bfs").set(
+        0.25)
+    h = reg.histogram("query_wall_us", service="local", kind="bfs",
+                      mode="full")
+    for v in (10.0, 20.0, 30.0):
+        h.observe(v)
+    text = render_openmetrics(reg, extra_counters={"trace_rotations": 2},
+                              extra_gauges={"journal_depth": 7})
+    assert validate_openmetrics(text) == []
+    assert "# TYPE service_queries counter" in text
+    assert 'service_queries_total{service="local"} 5' in text
+    assert "# TYPE query_wall_us summary" in text
+    assert 'quantile="0.5"' in text
+    assert 'query_wall_us_count{kind="bfs",mode="full",service="local"} 3' \
+        in text
+    assert "trace_rotations_total 2" in text
+    assert "journal_depth 7" in text
+    assert text.rstrip().endswith("# EOF")
+
+
+def test_openmetrics_label_escaping():
+    """Label values containing ``"``, ``\\`` and newlines must round-trip
+    through the escaper and still validate."""
+    from repro.obs.expo import render_openmetrics, validate_openmetrics
+
+    reg = MetricsRegistry()
+    reg.counter("esc", what='say "hi"\nplease\\now').inc()
+    text = render_openmetrics(reg)
+    assert validate_openmetrics(text) == []
+    assert r'what="say \"hi\"\nplease\\now"' in text
+
+
+def test_openmetrics_validator_catches_breakage():
+    from repro.obs.expo import validate_openmetrics
+
+    good = ("# TYPE x counter\n# HELP x a counter.\nx_total 1\n# EOF\n")
+    assert validate_openmetrics(good) == []
+    # counter sample without _total
+    bad = good.replace("x_total 1", "x 1")
+    assert any("_total" in e for e in validate_openmetrics(bad))
+    # missing EOF
+    assert any("EOF" in e for e in validate_openmetrics(
+        "# TYPE x counter\n# HELP x a.\nx_total 1\n"))
+    # sample with no TYPE declaration
+    assert any("TYPE" in e for e in validate_openmetrics(
+        "y_total 1\n# EOF\n"))
+    # non-numeric value
+    assert any("non-numeric" in e for e in validate_openmetrics(
+        "# TYPE x counter\n# HELP x a.\nx_total one\n# EOF\n"))
+    # duplicate family
+    assert any("twice" in e for e in validate_openmetrics(
+        "# TYPE x counter\n# HELP x a.\n# TYPE x counter\nx_total 1\n"
+        "# EOF\n"))
+
+
+def test_expo_server_scrape_and_journal_depth(tmp_path):
+    import urllib.request
+
+    from repro.obs.expo import validate_openmetrics
+    from repro.resil.journal import OpJournal
+
+    jr = OpJournal(str(tmp_path / "wal.jsonl"))
+    jr.append_op(0, ("pute", 0, 1, 1.0))
+    jr.append_op(1, ("pute", 1, 2, 1.0))
+    jr.commit_barrier(1, 2)
+    jr.append_op(2, ("remv", 2))      # not yet barriered -> depth 1
+    assert jr.depth == 1
+
+    tel = Telemetry.make()
+    tel.registry.counter("service_queries", service="local").inc(3)
+    srv = tel.serve(port=0, journal=jr)
+    try:
+        body = urllib.request.urlopen(srv.url, timeout=10).read().decode()
+    finally:
+        srv.close()
+        jr.close()
+    assert validate_openmetrics(body) == []
+    assert "journal_depth 1" in body
+    assert "journal_ops_logged_total 3" in body
+    assert 'service_queries_total{service="local"} 3' in body
+    # a closed server refuses further scrapes (no dangling daemon port)
+    tel.close()
+
+
+def test_expo_cli_one_shot(tmp_path, capsys):
+    """The offline twin: rebuild the exposition from trace JSONL and pass
+    the same validator CI scrapes through."""
+    from repro.obs import expo
+
+    path = tmp_path / "t.jsonl"
+    tr = Tracer(str(path))
+    for mode, dev in (("full", 500.0), ("delta", 50.0), ("unchanged", 0.0)):
+        with tr.span("query", service="local", kind="bfs", version=1,
+                     mode=mode, coll_bytes=0, degraded=False,
+                     device_us=dev, flops=1000.0):
+            pass
+    with tr.span("query", service="local", kind="bfs", error="Boom"):
+        pass
+    tr.close()
+    assert expo.main([str(path), "--check"]) == 0
+    out = capsys.readouterr().out
+    assert "query_wall_us" in out and "query_device_us" in out
+    assert 'service_errors_total{service="local"} 1' in out
+
+
+# --------------------------- trace sink rotation ----------------------------
+
+def test_trace_sink_rotation(tmp_path):
+    """S1: a bounded JSONL sink rotates ``t.jsonl`` -> ``.1`` -> ``.2``
+    (oldest dropped at ``keep``), counts rotations, keeps every record
+    across the rotated set, and never interleaves a torn line."""
+    import os
+
+    path = tmp_path / "t.jsonl"
+    tr = Tracer(str(path), max_bytes=2000, keep=2)
+    n = 120
+    for i in range(n):
+        with tr.span("query", idx=i, pad="x" * 40):
+            pass
+    tr.close()
+    assert tr.rotations > 1
+    files = [str(path)] + [f"{path}.{i}" for i in (1, 2)]
+    for f in files:
+        assert os.path.exists(f), f
+        assert os.path.getsize(f) <= 2000 + 200  # one record of slack
+    assert not os.path.exists(f"{path}.3")       # keep=2 drops the rest
+    survivors = []
+    for f in files:
+        for line in open(f):
+            survivors.append(json.loads(line))   # no torn lines
+    kept_idx = sorted(r["idx"] for r in survivors)
+    # the newest records always survive; only the oldest rotated out
+    assert kept_idx == list(range(n - len(kept_idx), n))
+    # in-memory list saw everything regardless
+    assert len(tr.records) == n and tr.sink_errors == 0
+
+
+def test_trace_rotation_failure_keeps_stream(tmp_path, monkeypatch):
+    """A failing rename must not kill the sink: the tracer reopens and
+    keeps writing (best-effort telemetry, the WAL lesson)."""
+    import os
+
+    path = tmp_path / "t.jsonl"
+    tr = Tracer(str(path), max_bytes=500, keep=2)
+
+    real_replace = os.replace
+
+    def boom(src, dst):
+        raise OSError("disk says no")
+
+    monkeypatch.setattr(os, "replace", boom)
+    for i in range(40):
+        with tr.span("query", idx=i, pad="y" * 40):
+            pass
+    assert tr.rotations == 0          # every rename failed...
+    assert tr.sink_errors == 0        # ...yet no record was lost:
+    lines = [json.loads(l) for l in open(path)]
+    assert [r["idx"] for r in lines] == list(range(40))  # all appended
+    monkeypatch.setattr(os, "replace", real_replace)
+    with tr.span("query", idx=99):
+        pass                          # oversized file: now rotates for real
+    tr.close()
+    assert tr.rotations == 1
+    assert [json.loads(l)["idx"] for l in open(path)] == [99]
+    assert json.loads(open(f"{path}.1").readlines()[-1])["idx"] == 39
+
+
+# ------------------------------ report (PR 8) -------------------------------
+
+def test_report_multi_file_and_json_format(tmp_path, capsys):
+    """S2: rotated trace siblings merge (sorted by span id), ``--format
+    json`` emits machine-readable rows, and the summary carries the
+    device-time column."""
+    p1, p2 = tmp_path / "t.jsonl.1", tmp_path / "t.jsonl"
+    tr = Tracer(str(p1))
+    common = dict(service="local", kind="bfs", version=1, coll_bytes=0,
+                  degraded=False, flops=10.0)
+    with tr.span("query", mode="full", device_us=400.0, **common):
+        pass
+    tr.close()
+    tr2 = Tracer(str(p2))
+    tr2._next_id = 50                  # rotated continuation: later ids
+    with tr2.span("query", mode="delta", device_us=40.0, **common):
+        pass
+    tr2.close()
+
+    records = report.load_many([str(p2), str(p1)])  # any order in
+    assert [r["mode"] for r in records] == ["full", "delta"]  # id-sorted
+    assert report.validate(records) == []
+    rows = report.summarize(records)
+    assert {r["mode"] for r in rows} == {"full", "delta"}
+    by_mode = {r["mode"]: r for r in rows}
+    assert by_mode["full"]["device_p50_us"] == 400.0
+    assert by_mode["delta"]["device_p50_us"] == 40.0
+
+    assert report.main([str(p2), str(p1), "--format", "json",
+                        "--check"]) == 0
+    out = capsys.readouterr().out
+    data = json.loads(out[:out.rindex("]") + 1])
+    assert len(data) == 2 and {r["mode"] for r in data} == {"full", "delta"}
+
+
+def test_report_error_span_exemption():
+    """Error-terminated query records stay exempt from the field check
+    but are counted in the summary's errors column."""
+    recs = [
+        {"schema": TRACE_SCHEMA, "span": "query", "id": 0, "wall_us": 5.0,
+         "service": "local", "kind": "bfs", "error": "Boom"},
+        {"schema": TRACE_SCHEMA, "span": "query", "id": 1, "wall_us": 9.0,
+         "service": "local", "kind": "bfs", "version": 1, "mode": "full",
+         "coll_bytes": 0, "degraded": False, "device_us": 1.0,
+         "flops": 2.0},
+    ]
+    assert report.validate(recs) == []
+    rows = report.summarize(recs)
+    err_row = next(r for r in rows if r["errors"])
+    assert err_row["errors"] == 1
+
+
+# --------------------------- device-time profiler ---------------------------
+
+def test_device_timer_measures_and_accumulates():
+    from repro.obs.profile import DeviceTimer, NullDeviceTimer
+
+    t = DeviceTimer()
+    x = jnp.arange(1024.0)
+    y = jnp.dot(x, x)
+    us = t.measure(y, name="dot")
+    assert us >= 0.0 and t.measures == 1 and t.total_us == us
+    t.measure(None, name="empty")          # nothing to block: fine
+    assert t.measures == 2
+
+    n = NullDeviceTimer()
+    assert n.measure(y, name="dot") == 0.0
+    assert not n.blocking and t.blocking
+
+
+# ------------------------- adaptive thresholds ------------------------------
+
+def _drive(ctl, kind, *, full_us, delta):
+    """Feed synthetic observations: ``delta`` is (frac, wall_us) pairs."""
+    for w in full_us:
+        ctl.observe(kind, "full", w, None)
+    for f, w in delta:
+        ctl.observe(kind, "delta", w, f)
+
+
+def test_adaptive_fits_crossover_and_steps():
+    from repro.obs import AdaptiveThresholds
+
+    ctl = AdaptiveThresholds(base=0.25, lo=0.02, hi=0.75, alpha=1.0,
+                             period=8, min_full=2, min_delta=4,
+                             probe_every=0)
+    # delta cost = 100 + 1000*frac us; full cost = 600 us -> crossover 0.5
+    _drive(ctl, "bfs", full_us=[600.0] * 3,
+           delta=[(f, 100.0 + 1000.0 * f)
+                  for f in (0.1, 0.2, 0.3, 0.4, 0.5)])
+    thr = ctl.thresholds()["bfs"]
+    assert abs(thr - 0.5) < 1e-6, thr
+    assert ctl.adjustments == 1
+    # other kinds untouched
+    assert ctl.thresholds()["sssp"] == 0.25
+
+
+def test_adaptive_clamps_and_damping():
+    from repro.obs import AdaptiveThresholds
+
+    # crossover far above hi -> clamp at hi even with alpha=1
+    ctl = AdaptiveThresholds(base=0.25, lo=0.05, hi=0.4, alpha=1.0,
+                             period=6, min_full=1, min_delta=3,
+                             probe_every=0)
+    _drive(ctl, "bfs", full_us=[10000.0] * 2,
+           delta=[(f, 10.0 + 100.0 * f) for f in (0.1, 0.2, 0.3, 0.4)])
+    assert ctl.thresholds()["bfs"] == 0.4
+    # alpha damps the step: halfway to the target
+    ctl2 = AdaptiveThresholds(base=0.25, lo=0.02, hi=0.75, alpha=0.5,
+                              period=8, min_full=1, min_delta=4,
+                              probe_every=0)
+    _drive(ctl2, "bfs", full_us=[600.0] * 3,
+           delta=[(f, 100.0 + 1000.0 * f)
+                  for f in (0.1, 0.2, 0.3, 0.4, 0.5)])
+    assert abs(ctl2.thresholds()["bfs"] - 0.375) < 1e-6  # 0.25 + 0.5*0.25
+
+
+def test_adaptive_no_movement_without_signal():
+    from repro.obs import AdaptiveThresholds
+
+    ctl = AdaptiveThresholds(period=4, min_full=1, min_delta=2,
+                             probe_every=0)
+    # degenerate fit: every delta at the same fraction -> no movement
+    _drive(ctl, "bfs", full_us=[500.0] * 2,
+           delta=[(0.2, 100.0), (0.2, 120.0), (0.2, 90.0)])
+    assert ctl.thresholds()["bfs"] == ctl.base and ctl.adjustments == 0
+    # negative slope (delta CHEAPER when dirtier - noise): no movement
+    _drive(ctl, "sssp", full_us=[500.0] * 2,
+           delta=[(0.1, 300.0), (0.3, 200.0), (0.5, 100.0)])
+    assert ctl.thresholds()["sssp"] == ctl.base
+    # unchanged observations carry no crossover signal at all
+    for _ in range(64):
+        ctl.observe("bc", "unchanged", 1.0, None)
+    assert ctl.adjustments == 0
+
+
+def test_adaptive_probe_cadence():
+    from repro.obs import AdaptiveThresholds
+
+    ctl = AdaptiveThresholds(probe_every=4)
+    got = [ctl.threshold("bfs") for _ in range(12)]
+    assert got.count(0.0) == 3 and ctl.probes == 3
+    assert all(t == ctl.base for t in got if t != 0.0)
+    # probing disabled
+    ctl2 = AdaptiveThresholds(probe_every=0)
+    assert all(ctl2.threshold("bfs") != 0.0 for _ in range(20))
+    # unknown kind: static base, never probed
+    assert ctl.threshold("nope") == ctl.base
+
+
+def test_adaptive_emits_spans_and_gauges():
+    from repro.obs import AdaptiveThresholds
+
+    reg, tr = MetricsRegistry(), Tracer()
+    ctl = AdaptiveThresholds(alpha=1.0, period=8, min_full=1, min_delta=4,
+                             probe_every=0).bind(reg, tr, "local")
+    assert reg.gauge("adaptive_dirty_threshold", service="local",
+                     kind="bfs").value == ctl.base
+    _drive(ctl, "bfs", full_us=[600.0] * 3,
+           delta=[(f, 100.0 + 1000.0 * f)
+                  for f in (0.1, 0.2, 0.3, 0.4, 0.5)])
+    assert ctl.adjustments == 1
+    assert reg.gauge("adaptive_dirty_threshold", service="local",
+                     kind="bfs").value == ctl.thresholds()["bfs"]
+    assert reg.counter("adaptive_adjustments", service="local",
+                       kind="bfs").value == 1
+    adj = [r for r in tr.records if r["span"] == "threshold_adjust"]
+    assert len(adj) == 1
+    r = adj[0]
+    assert r["old"] == 0.25 and abs(r["new"] - 0.5) < 1e-6
+    assert r["t_full_us"] == 600.0 and r["n_full"] == 3 and r["n_delta"] == 5
+    assert not r["clamped"]
+
+
+def test_adaptive_validation_and_telemetry_requirement():
+    import pytest
+
+    from repro.core import make_graph
+    from repro.engine import GraphService
+    from repro.obs import AdaptiveThresholds
+
+    with pytest.raises(ValueError):
+        AdaptiveThresholds(lo=0.5, base=0.25)   # lo > base
+    with pytest.raises(ValueError):
+        AdaptiveThresholds(alpha=0.0)
+    with pytest.raises(ValueError):
+        GraphService(make_graph(8, 16), adaptive=True)  # needs telemetry
