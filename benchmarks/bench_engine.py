@@ -272,6 +272,83 @@ def bench_service_adaptive(graph, stream, src, batch_size=32,
             "errors": svc.stats.errors, "degraded": svc.stats.degraded}
 
 
+def bench_service_recovery(graph, stream, src, batch_size=32):
+    """Durable-recovery path: WAL replay throughput + compaction payoff.
+
+    Runs the deterministic commit stream twice through journaled
+    services: once against a plain single-file WAL, where recovery is a
+    full-history replay (the ``replay_ops_per_s`` number), and once with
+    segment rotation + periodic snapshot compaction, where recovery is
+    snapshot-restore + replay-of-tail (the ``cold_recover_wall_ms``
+    number, plus the snapshot size and how many sealed segments the
+    compactions truncated).  Both recoveries are asserted bit-identical
+    to their survivor's ring latest before any number is reported.
+    """
+    import shutil
+    import tempfile
+
+    from repro.resil import OpJournal, journal_meta, recover
+
+    def _same_state(a, b):
+        return all(np.array_equal(np.asarray(x), np.asarray(y))
+                   for x, y in zip(jax.tree_util.tree_leaves(a),
+                                   jax.tree_util.tree_leaves(b)))
+
+    d = tempfile.mkdtemp(prefix="bench_recovery_")
+    try:
+        # ---- plain WAL: recovery == full-history replay ----
+        p1 = os.path.join(d, "plain.jsonl")
+        svc1 = GraphService(graph, batch_size=batch_size,
+                            journal=OpJournal(p1, meta=journal_meta(
+                                graph, {"batch_size": batch_size})))
+        n_ops = 0
+        for ops in stream:
+            svc1.submit_many(ops)
+            svc1.flush()
+            n_ops += len(ops)
+        t0 = time.perf_counter()
+        rec1 = recover(p1, graph, batch_size=batch_size)
+        dt_replay = time.perf_counter() - t0
+        assert rec1.version == svc1.version
+        assert _same_state(rec1.ring.latest.state, svc1.ring.latest.state)
+        replay_ops_per_s = n_ops / dt_replay
+
+        # ---- rotated + compacted WAL: recovery == snapshot + tail ----
+        p2 = os.path.join(d, "compacted.jsonl")
+        j2 = OpJournal(p2, meta=journal_meta(
+            graph, {"batch_size": batch_size}), segment_bytes=2048)
+        svc2 = GraphService(graph, batch_size=batch_size, journal=j2,
+                            compact_every=max(1, len(stream) // 4))
+        for ops in stream:
+            svc2.submit_many(ops)
+            svc2.flush()
+        report = svc2.compact_wal()
+        t0 = time.perf_counter()
+        rec2 = recover(p2, batch_size=batch_size)  # snapshot: no g0 needed
+        dt_cold = time.perf_counter() - t0
+        assert rec2.version == svc2.version
+        assert _same_state(rec2.ring.latest.state, svc2.ring.latest.state)
+
+        n = max(len(stream), 1)
+        _row("engine_service_recovery_replay", dt_replay / n * 1e6,
+             f"replay_ops_per_s={replay_ops_per_s:.0f};ops={n_ops}")
+        _row("engine_service_recovery_cold", dt_cold / n * 1e6,
+             f"cold_recover_ms={dt_cold * 1e3:.1f};"
+             f"snapshot_bytes={report['snapshot_bytes']};"
+             f"segments_truncated={j2.segments_dropped}")
+        return {"replay_ops_per_s": round(replay_ops_per_s, 1),
+                "replay_wall_ms": round(dt_replay * 1e3, 2),
+                "cold_recover_wall_ms": round(dt_cold * 1e3, 2),
+                "snapshot_bytes": int(report["snapshot_bytes"]),
+                "segments_truncated": int(j2.segments_dropped),
+                "rotations": int(j2.rotations),
+                "compactions": int(j2.compactions),
+                "recovered_version": int(rec2.version),
+                "recovered_matches": True}
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
 def bench_latency_vs_update_rate(graph, rng, n, src, hot_frac,
                                  rates=(8, 32, 128), n_commits=24):
     """Query latency as more update ops land between consecutive queries."""
@@ -351,6 +428,7 @@ def main(n=2048, edge_factor=8, n_commits=32, ops_per_commit=24,
     service_stats = bench_service_stream(graph, stream, src)
     service_stats["adaptive"] = bench_service_adaptive(
         graph, stream, src, base_stats=service_stats)
+    service_stats["recovery"] = bench_service_recovery(graph, stream, src)
     bench_latency_vs_update_rate(graph, rng, n, src, hot_frac)
     tile_speedup, tile_stats = bench_tile_view(graph, versions)
 

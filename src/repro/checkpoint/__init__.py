@@ -1,3 +1,4 @@
 from .checkpointer import (  # noqa: F401
-    Checkpointer, latest_step, save_checkpoint, restore_checkpoint,
+    Checkpointer, latest_step, read_manifest, save_checkpoint,
+    restore_checkpoint,
 )

@@ -59,12 +59,19 @@ def _checksum(arr: np.ndarray) -> str:
 
 
 def save_checkpoint(ckpt_dir: str, step: int, tree, *, version: int,
-                    verify: bool = False) -> dict:
-    """Write one checkpoint; returns the manifest."""
+                    verify: bool = False, extra: Optional[dict] = None) -> dict:
+    """Write one checkpoint; returns the manifest.
+
+    ``extra`` is an optional JSON-serializable dict stored verbatim in the
+    manifest (and thus committed atomically with it) — side-car state that
+    must travel with the snapshot, e.g. learned serving thresholds.
+    """
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
     os.makedirs(d, exist_ok=True)
     manifest = {"step": step, "version": version, "leaves": {},
                 "time": time.time()}
+    if extra:
+        manifest["extra"] = extra
     for name, leaf in _leaf_files(tree).items():
         arr = np.asarray(jax.device_get(leaf))
         fn = name.replace("/", ".") + ".npy"
@@ -101,6 +108,11 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
 def _read_manifest(ckpt_dir: str, step: int) -> dict:
     with open(os.path.join(ckpt_dir, f"step_{step:08d}", "manifest.json")) as f:
         return json.load(f)
+
+
+def read_manifest(ckpt_dir: str, step: int) -> dict:
+    """The committed manifest of one step (the atomically-renamed file)."""
+    return _read_manifest(ckpt_dir, step)
 
 
 def restore_checkpoint(ckpt_dir: str, step: int, tree_like, *,

@@ -70,7 +70,7 @@ class SchedulerStats(CounterStruct):
 
     _FIELDS = ("ops_submitted", "ops_committed", "ops_coalesced",
                "batches_committed", "strict_cuts", "commit_failures",
-               "stragglers")
+               "stragglers", "compacts", "compact_failures")
     _PREFIX = "scheduler_"
 
 
@@ -86,6 +86,8 @@ class StreamScheduler:
     telemetry: object = None  # Optional[repro.obs.Telemetry]
     journal: object = None    # Optional[repro.resil.OpJournal]
     monitor: object = None    # Optional[repro.runtime.HeartbeatMonitor]
+    compact_every: Optional[int] = None  # journal.compact cadence (batches)
+    compact_extra: object = None  # Optional[Callable[[], dict]] manifest extra
     _log: List[Tuple] = field(default_factory=list)
     stats: SchedulerStats = None
 
@@ -188,7 +190,20 @@ class StreamScheduler:
             self.journal.commit_barrier(entry.version, n_raw)
         self.stats.ops_committed += n_raw
         self.stats.batches_committed += 1
+        if (self.journal is not None and self.compact_every
+                and self.stats.batches_committed % self.compact_every == 0):
+            self._auto_compact(entry)
         return entry
+
+    def _auto_compact(self, entry: RingEntry) -> None:
+        """Best-effort journal compaction after a commit: a failed
+        snapshot must never fail the (already durable) commit."""
+        try:
+            extra = self.compact_extra() if self.compact_extra else None
+            self.journal.compact(entry.state, entry.version, extra=extra)
+            self.stats.compacts += 1
+        except Exception:
+            self.stats.compact_failures += 1
 
     def _commit_ready(self) -> List[RingEntry]:
         """Commit every full batch currently in the log."""

@@ -69,7 +69,7 @@ from repro.resil.faults import (
     InjectedCrash,
     inject,
 )
-from repro.resil.policy import ResiliencePolicy
+from repro.resil.policy import CircuitBreaker, ResiliencePolicy
 
 from .incremental import (
     _dirty_stats,
@@ -186,7 +186,9 @@ class BaseGraphService:
                       max_cached: int,
                       telemetry: Optional[Telemetry] = None,
                       policy: Optional[ResiliencePolicy] = None,
-                      journal=None, monitor=None, adaptive=None) -> None:
+                      journal=None, monitor=None, adaptive=None,
+                      breaker=None, compact_every: Optional[int] = None
+                      ) -> None:
         self.telemetry = telemetry
         self.policy = policy
         registry = telemetry.registry if telemetry is not None else None
@@ -204,6 +206,18 @@ class BaseGraphService:
                                  "wall times)")
             adaptive.bind(registry, telemetry.tracer, self._service_name)
         self.adaptive: Optional[AdaptiveThresholds] = adaptive
+        # Circuit-breaker fault domains (repro.resil.policy): pass a
+        # CircuitBreaker (or True for defaults) to quarantine a kind's
+        # delta path after consecutive delta-collect failures — the
+        # ladder pins at full until half-open probes succeed.  Works
+        # without telemetry; with it, trips/restores are traced.
+        if breaker is True:
+            breaker = CircuitBreaker()
+        if breaker is not None:
+            breaker.bind(registry,
+                         telemetry.tracer if telemetry is not None else None,
+                         self._service_name)
+        self.breaker: Optional[CircuitBreaker] = breaker
         self.ring = VersionRing(initial_state, depth=ring_depth)
         # The scheduler's counters carry this service's label: two services
         # sharing one telemetry registry (the differential harness does)
@@ -213,7 +227,8 @@ class BaseGraphService:
         self.scheduler = StreamScheduler(
             self.ring, batch_size=batch_size, strict_order=strict_order,
             coalesce=coalesce, telemetry=telemetry, journal=journal,
-            monitor=monitor, stats=sched_stats)
+            monitor=monitor, compact_every=compact_every,
+            compact_extra=self._wal_extra, stats=sched_stats)
         self.dirty_threshold = dirty_threshold
         self.max_collects = max_collects
         self.max_cached = max_cached
@@ -247,6 +262,48 @@ class BaseGraphService:
 
     def pin(self, version: Optional[int] = None) -> PinnedSnapshot:
         return self.ring.pin(version)
+
+    # ---------------------------- WAL compaction --------------------------
+
+    def _wal_extra(self) -> dict:
+        """Side-car state a compaction snapshot must carry: the op ledger
+        (so recovery can seed the scheduler stats) and, when the adaptive
+        controller is bound, its learned per-kind thresholds — a recovered
+        service resumes tuned, not cold."""
+        extra = {"ops_committed": int(self.scheduler.stats.ops_committed)}
+        if self.adaptive is not None:
+            extra["adaptive_thresholds"] = self.adaptive.thresholds()
+        return extra
+
+    def compact_wal(self) -> dict:
+        """Snapshot the latest committed state into the journal's
+        checkpoint store and drop covered WAL segments (see
+        :meth:`repro.resil.OpJournal.compact`); returns the report."""
+        journal = self.scheduler.journal
+        if journal is None:
+            raise ValueError("compact_wal() requires a journal= on the "
+                             "service")
+        entry = self.ring.latest
+        return journal.compact(entry.state, entry.version,
+                               extra=self._wal_extra())
+
+    # ------------------------------ breaker ------------------------------
+
+    def _breaker_allows(self, kind: str) -> bool:
+        """May this collect touch its cached prior (the delta path)?
+        Consulted once per collect that HAS a usable prior — open
+        breakers quarantine it and force the clean full path."""
+        return self.breaker is None or self.breaker.allow_delta(kind)
+
+    def _breaker_failure(self, kind: str) -> None:
+        if self.breaker is not None:
+            self.breaker.record_failure(kind)
+
+    def _breaker_success(self, kind: str, mode: str) -> None:
+        # only an actual delta collect says anything about the delta
+        # path's health (an unchanged hit never ran it)
+        if self.breaker is not None and mode == "delta":
+            self.breaker.record_success(kind)
 
     # ------------------------------- cache -------------------------------
 
@@ -545,13 +602,15 @@ class GraphService(BaseGraphService):
                  max_collects: int = 16, max_cached: int = 512,
                  telemetry: Optional[Telemetry] = None,
                  policy: Optional[ResiliencePolicy] = None,
-                 journal=None, monitor=None, adaptive=None):
+                 journal=None, monitor=None, adaptive=None, breaker=None,
+                 compact_every: Optional[int] = None):
         self._init_service(
             initial_state, ring_depth=ring_depth, batch_size=batch_size,
             dirty_threshold=dirty_threshold, strict_order=strict_order,
             coalesce=coalesce, max_collects=max_collects,
             max_cached=max_cached, telemetry=telemetry, policy=policy,
-            journal=journal, monitor=monitor, adaptive=adaptive)
+            journal=journal, monitor=monitor, adaptive=adaptive,
+            breaker=breaker, compact_every=compact_every)
         self._tiles: Optional[TileView] = None
         self._tiles_version: int = -1
         self._bc_scores: Optional[dict] = None
@@ -590,15 +649,30 @@ class GraphService(BaseGraphService):
         entry = self.ring.latest
         slot = self._cache.get(key)
         prior, dirty = None, None
-        if slot is not None:
-            prior = slot.result
-            dirty = self.ring.dirty_between(slot.version, entry.version)
-            inject(P_COLLECT_DELTA)
-        inject(P_COLLECT_DISPATCH)
-        acct = self._acct_begin()
-        res, inc = _INCREMENTAL[kind](
-            entry.state, prior, dirty, src,
-            dirty_threshold=self._threshold(kind), accountant=acct)
+        # A tripped breaker quarantines the cached prior entirely: the
+        # collect below sees no prior, runs the clean full path, and
+        # never executes the (possibly poisoned) delta rungs.
+        use_prior = slot is not None and self._breaker_allows(kind)
+        try:
+            if use_prior:
+                prior = slot.result
+                dirty = self.ring.dirty_between(slot.version, entry.version)
+                inject(P_COLLECT_DELTA)
+            inject(P_COLLECT_DISPATCH)
+            acct = self._acct_begin()
+            res, inc = _INCREMENTAL[kind](
+                entry.state, prior, dirty, src,
+                dirty_threshold=self._threshold(kind), accountant=acct)
+        except InjectedCrash:
+            raise
+        except Exception:
+            # conservative attribution: any failure while a usable prior
+            # was in play counts against the kind's delta path
+            if use_prior:
+                self._breaker_failure(kind)
+            raise
+        if use_prior:
+            self._breaker_success(kind, inc.mode)
         self._acct_charge(acct)
         self._note_dirty_frac(inc.dirty_fraction)
         self._cache_store(key, entry.version, res)

@@ -129,6 +129,21 @@ class AdaptiveThresholds:
     def thresholds(self) -> Dict[str, float]:
         return dict(self._thr)
 
+    def restore(self, thresholds: Dict[str, float]) -> "AdaptiveThresholds":
+        """Adopt previously learned per-kind thresholds (e.g. off a
+        compaction snapshot's manifest), clamped to ``[lo, hi]``; unknown
+        kinds are ignored, missing kinds keep their current value.
+        Bound gauges are refreshed so the scrape surface agrees."""
+        for k, v in thresholds.items():
+            if k not in self._thr:
+                continue
+            self._thr[k] = min(self.hi, max(self.lo, float(v)))
+            if self._registry is not None:
+                self._registry.gauge("adaptive_dirty_threshold",
+                                     service=self._service,
+                                     kind=k).set(self._thr[k])
+        return self
+
     # ---------------------------- observations ---------------------------
 
     def observe(self, kind: str, mode: str, wall_us: float,

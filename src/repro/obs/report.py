@@ -16,7 +16,9 @@ records that ended in an error (they carry an ``error`` field and no
 version/mode to claim) are exempt from the field check but counted.
 ``--require-modes`` demands a non-empty row per named ladder mode;
 ``--require-degraded`` demands at least one degraded record (the
-chaos-smoke job's proof the ladder actually exercised its bottom rung).
+chaos-smoke job's proof the ladder actually exercised its bottom rung);
+``--require-spans ladder_pinned`` demands each named span appear at
+least once anywhere in the trace (the breaker-trip gate).
 ``--format json`` emits the summary rows as machine-readable JSON for
 CI consumers (``--json`` is the legacy spelling).
 """
@@ -66,12 +68,17 @@ def query_records(records: list) -> list:
 
 
 def validate(records: list, require_modes=(),
-             require_degraded: bool = False) -> list:
+             require_degraded: bool = False, require_spans=()) -> list:
     """Schema + coverage errors (empty list == valid)."""
     errors = []
     qrecs = query_records(records)
     if not qrecs:
         errors.append("no query records in trace")
+    seen_spans = {r.get("span") for r in records}
+    for span in require_spans:
+        if span not in seen_spans:
+            errors.append(f"required span {span!r} has no trace records "
+                          f"(saw {sorted(s for s in seen_spans if s)})")
     for i, r in enumerate(qrecs):
         if "error" in r:
             # the query raised: no version/mode to claim, record is exempt
@@ -147,6 +154,10 @@ def main(argv=None) -> int:
     p.add_argument("--require-degraded", action="store_true",
                    help="fail unless at least one query record is degraded "
                         "(implies --check)")
+    p.add_argument("--require-spans", default="",
+                   help="comma-separated span names that must each appear "
+                        "at least once in the trace, e.g. ladder_pinned "
+                        "(implies --check)")
     p.add_argument("--format", choices=("table", "json"), default="table",
                    help="summary output format (json = machine output "
                         "for CI)")
@@ -162,9 +173,11 @@ def main(argv=None) -> int:
         print(render(rows))
 
     require = tuple(m for m in a.require_modes.split(",") if m)
-    if a.check or require or a.require_degraded:
+    require_spans = tuple(s for s in a.require_spans.split(",") if s)
+    if a.check or require or a.require_degraded or require_spans:
         errors = validate(records, require_modes=require,
-                          require_degraded=a.require_degraded)
+                          require_degraded=a.require_degraded,
+                          require_spans=require_spans)
         if errors:
             for e in errors:
                 print(f"CHECK FAIL: {e}", file=sys.stderr)

@@ -11,10 +11,14 @@ testable.  This package supplies it, in four pieces the serving stack
   * :mod:`repro.resil.policy` — per-query deadline + bounded retry where
     each retry demotes down the ladder (delta failed → full from a
     pinned snapshot → last cached answer flagged ``degraded=True`` at a
-    still-resident ``stale_version``);
+    still-resident ``stale_version``), plus :class:`CircuitBreaker`
+    fault domains: consecutive delta-collect failures trip a kind's
+    ladder to ``full`` until half-open probes restore it;
   * :mod:`repro.resil.journal` — append-only JSONL op WAL with commit
-    barriers; ``recover()`` replays it into a bit-identical ring latest,
-    with batch commits atomic across any crash point;
+    barriers, segment rotation, and snapshot compaction (the validated
+    checkpoint is the truncation barrier); ``recover()`` restores the
+    snapshot and replays the tail into a bit-identical ring latest, with
+    batch commits atomic across any crash point;
   * :mod:`repro.resil.invariants` — ``verify_service()``: ring
     monotonicity, pin/parked and cache consistency, stats conservation —
     run after every injected fault in the chaos suites.
@@ -44,6 +48,9 @@ from .journal import (  # noqa: F401
     OpJournal,
     journal_meta,
     read_journal,
+    read_journal_versions,
     recover,
+    segment_files,
+    snapshot_dir,
 )
-from .policy import ResiliencePolicy  # noqa: F401
+from .policy import CircuitBreaker, ResiliencePolicy  # noqa: F401

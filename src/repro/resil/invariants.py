@@ -106,6 +106,41 @@ def verify_service(svc) -> List[str]:
         problems.append(
             f"ring version {ring.latest.version} != batches committed "
             f"{ss.batches_committed}")
+
+    # ------------------------------ journal ------------------------------
+    journal = getattr(sched, "journal", None)
+    if journal is not None:
+        if journal.depth != sched.pending():
+            problems.append(
+                f"journal depth {journal.depth} != scheduler pending "
+                f"{sched.pending()} (write-ahead ledger out of step)")
+        for f in ("rotations", "compactions", "segments_dropped"):
+            v = getattr(journal, f, 0)
+            if v < 0:
+                problems.append(f"journal.{f} = {v} < 0")
+
+    # ------------------------------ breaker ------------------------------
+    breaker = getattr(svc, "breaker", None)
+    if breaker is not None:
+        snap = breaker.snapshot()
+        valid = {breaker.CLOSED, breaker.OPEN, breaker.HALF_OPEN}
+        for kind, state in snap["states"].items():
+            if state not in valid:
+                problems.append(
+                    f"breaker[{kind}] in unknown state {state!r}")
+        if snap["trips"] < 0 or snap["restores"] < 0:
+            problems.append(
+                f"breaker counters negative: trips={snap['trips']} "
+                f"restores={snap['restores']}")
+        if snap["restores"] > snap["trips"]:
+            problems.append(
+                f"breaker restored {snap['restores']} times but only "
+                f"tripped {snap['trips']}")
+        for kind, n in snap["consecutive_failures"].items():
+            if not (0 <= n < breaker.fail_threshold):
+                problems.append(
+                    f"breaker[{kind}] consecutive failures {n} outside "
+                    f"[0, {breaker.fail_threshold})")
     return problems
 
 

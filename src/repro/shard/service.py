@@ -51,7 +51,8 @@ from repro.engine.service import ServiceStats  # noqa: F401  (re-export)
 from repro.obs import Telemetry
 from repro.obs.trace import annotate as _trace_annotate
 from repro.obs.trace import maybe_span
-from repro.resil.faults import P_COLLECT_DELTA, P_COLLECT_DISPATCH, inject
+from repro.resil.faults import P_COLLECT_DELTA, P_COLLECT_DISPATCH, \
+    InjectedCrash, inject
 from repro.resil.policy import ResiliencePolicy
 
 from . import queries as shard_queries
@@ -102,7 +103,8 @@ class ShardedGraphService(BaseGraphService):
                  max_cached: int = 128,
                  telemetry: Optional[Telemetry] = None,
                  policy: Optional[ResiliencePolicy] = None,
-                 journal=None, monitor=None, adaptive=None):
+                 journal=None, monitor=None, adaptive=None, breaker=None,
+                 compact_every: Optional[int] = None):
         shard_queries._bc_kind(bc_mode, delta=False)  # validate up front
         self.mesh = as_graph_mesh(mesh)
         self.tile = tile
@@ -114,7 +116,8 @@ class ShardedGraphService(BaseGraphService):
             dirty_threshold=dirty_threshold, strict_order=strict_order,
             coalesce=coalesce, max_collects=max_collects,
             max_cached=max_cached, telemetry=telemetry, policy=policy,
-            journal=journal, monitor=monitor, adaptive=adaptive)
+            journal=journal, monitor=monitor, adaptive=adaptive,
+            breaker=breaker, compact_every=compact_every)
         self._view: Optional[ShardedTileView] = None
         self._view_version: int = -1
 
@@ -203,33 +206,49 @@ class ShardedGraphService(BaseGraphService):
         state = entry.state
         slot = self._cache.get(key)
         mode, res = "full", None
-        if slot is not None:
-            prior = slot.result
-            if slot.version == entry.version:
-                mode, res = "unchanged", prior
-            else:
-                dirty = self.ring.dirty_between(slot.version, entry.version)
-                union = _reached_union(kind, prior)
-                if dirty is not None and union.shape[0] == state.vcap:
-                    n_dirty, touched = (int(x) for x in
-                                        _dirty_stats(union, dirty))
-                    frac = n_dirty / state.vcap
-                    _trace_annotate(dirty=n_dirty,
-                                    dirty_frac=round(frac, 6))
-                    self._note_dirty_frac(frac)
-                    if not touched and self._revived_source(prior, srcs,
-                                                            state):
-                        touched = True
-                    if not touched:
-                        mode, res = "unchanged", prior
-                    elif (frac <= self._threshold(kind)
-                          and self._delta_usable(kind, prior, state)):
-                        mode, res = "delta", self._delta_collect(
-                            kind, prior, dirty, srcs, state)
-                        if res is None:  # new negative cycle: canonical full
-                            mode, res = "full", None
-        if res is None:
-            res = self._full_collect(kind, srcs, state)
+        # A tripped breaker quarantines the cached prior: no unchanged
+        # shortcut, no dirty-set math, no delta dispatch — the clean
+        # full path answers until half-open probes succeed.
+        use_prior = slot is not None and self._breaker_allows(kind)
+        try:
+            if use_prior:
+                prior = slot.result
+                if slot.version == entry.version:
+                    mode, res = "unchanged", prior
+                else:
+                    dirty = self.ring.dirty_between(slot.version,
+                                                    entry.version)
+                    union = _reached_union(kind, prior)
+                    if dirty is not None and union.shape[0] == state.vcap:
+                        n_dirty, touched = (int(x) for x in
+                                            _dirty_stats(union, dirty))
+                        frac = n_dirty / state.vcap
+                        _trace_annotate(dirty=n_dirty,
+                                        dirty_frac=round(frac, 6))
+                        self._note_dirty_frac(frac)
+                        if not touched and self._revived_source(prior, srcs,
+                                                                state):
+                            touched = True
+                        if not touched:
+                            mode, res = "unchanged", prior
+                        elif (frac <= self._threshold(kind)
+                              and self._delta_usable(kind, prior, state)):
+                            mode, res = "delta", self._delta_collect(
+                                kind, prior, dirty, srcs, state)
+                            if res is None:  # new negcycle: canonical full
+                                mode, res = "full", None
+            if res is None:
+                res = self._full_collect(kind, srcs, state)
+        except InjectedCrash:
+            raise
+        except Exception:
+            # conservative attribution: any failure while a usable prior
+            # was in play counts against the kind's delta path
+            if use_prior:
+                self._breaker_failure(kind)
+            raise
+        if use_prior:
+            self._breaker_success(kind, mode)
         self._cache_store(key, entry.version, res)
         return entry, res, mode
 

@@ -50,6 +50,8 @@ chaos failure additionally reproduces from
 """
 from __future__ import annotations
 
+import os
+
 import numpy as np
 
 from repro.core import PUTE, PUTV, REME, REMV, make_graph
@@ -58,9 +60,12 @@ from repro.engine.incremental import results_equal
 from repro.obs import AdaptiveThresholds, Telemetry
 from repro.resil import (
     InjectedFault,
+    OpJournal,
     ResiliencePolicy,
     assert_service_ok,
     fault_scope,
+    journal_meta,
+    recover,
 )
 from oracle import GraphOracle
 
@@ -172,7 +177,8 @@ def run_differential(seed: int, *, n: int = 24, steps: int = 8,
                      mesh=None, tile: int = 8, bc_mode: str = "gather",
                      batch_size: int = 4, score_every: int = 0,
                      trace_path=None, fault_plan=None, policy=None,
-                     adaptive: bool = False):
+                     adaptive: bool = False, journal_dir=None,
+                     compact_every=None, segment_bytes=None):
     """Replay one seeded stream against oracle + service(s).
 
     Returns ``{service_name: {"unchanged": k, "delta": k, "full": k,
@@ -197,6 +203,16 @@ def run_differential(seed: int, *, n: int = 24, steps: int = 8,
     invariants at the end (thresholds within clamps, one
     ``threshold_adjust`` span per adjustment) and returns each
     controller's snapshot under ``modes[name]["adaptive"]``.
+
+    ``journal_dir`` attaches a durable :class:`~repro.resil.OpJournal`
+    (``<dir>/<service>.jsonl``) to every service — with ``segment_bytes``
+    rotation and ``compact_every`` auto-compaction if given — and after
+    the stream runs the **recovery differential**: each journal is
+    recovered into a fresh service (the sharded one under the same live
+    mesh) whose ring latest must be bit-identical to the survivor's and
+    whose cold query answers must match the oracle at the final version.
+    The per-journal rotation/compaction tallies come back under
+    ``modes[name]["recovery"]``.
     """
     print(f"[stream-differential] seed={seed} n={n} steps={steps} "
           f"ops_per_step={ops_per_step} neg_frac={neg_frac} "
@@ -214,16 +230,30 @@ def run_differential(seed: int, *, n: int = 24, steps: int = 8,
         return (AdaptiveThresholds(period=6, min_full=1, min_delta=3,
                                    probe_every=7) if adaptive else None)
 
+    journals = {}
+
+    def make_journal(name):
+        if journal_dir is None:
+            return None
+        path = os.path.join(str(journal_dir), f"{name}.jsonl")
+        journals[name] = path
+        return OpJournal(path,
+                         meta=journal_meta(g0, {"batch_size": batch_size}),
+                         segment_bytes=segment_bytes)
+
     services = [("local", GraphService(g0, batch_size=batch_size,
                                        telemetry=telemetry, policy=policy,
-                                       adaptive=make_adaptive()),
+                                       adaptive=make_adaptive(),
+                                       journal=make_journal("local"),
+                                       compact_every=compact_every),
                  False)]
     if mesh is not None:
         from repro.shard import ShardedGraphService
         services.append(("sharded", ShardedGraphService(
             g0, mesh, tile=tile, batch_size=batch_size, bc_mode=bc_mode,
             src_chunk=2, telemetry=telemetry, policy=policy,
-            adaptive=make_adaptive()), True))
+            adaptive=make_adaptive(), journal=make_journal("sharded"),
+            compact_every=compact_every), True))
     modes = {name: {"unchanged": 0, "delta": 0, "full": 0, "degraded": 0,
                     "raised": 0}
              for name, _, _ in services}
@@ -317,11 +347,66 @@ def run_differential(seed: int, *, n: int = 24, steps: int = 8,
                     scores, _ = svc.bc_scores()
                     check_scores((name, "bc_scores", step, seed), scores,
                                  oracle, n)
+    for name, svc, _ in services:
+        # fault attribution for chaos callers: retries/errors only move
+        # when the ladder (i.e. a collect) actually failed on THIS service
+        modes[name]["errors"] = svc.stats.errors
+        modes[name]["retries"] = svc.stats.retries
     _check_telemetry(seed, telemetry, services, modes, expected)
     if adaptive:
         _check_adaptive(seed, telemetry, services, modes)
+    if journal_dir is not None:
+        _check_recovery(seed, services, journals, g0, oracle, n, modes,
+                        mesh=mesh, tile=tile, bc_mode=bc_mode,
+                        batch_size=batch_size)
     telemetry.close()
     return modes
+
+
+def _check_recovery(seed, services, journals, g0, oracle, n, modes, *,
+                    mesh, tile, bc_mode, batch_size):
+    """Recovery differential: every journaled service must rebuild — from
+    its (possibly rotated + compacted) WAL alone — into a fresh service
+    whose ring latest is bit-identical to the survivor's, whose pending
+    log depth matches, and whose cold query answers (full collects, no
+    cache) equal the oracle's at the final version.  The sharded journal
+    recovers under the same live mesh, proving replayed commits reproduce
+    sharded query answers exactly."""
+    import jax
+
+    for name, svc, sharded in services:
+        ctx = (seed, name, "recovery")
+        path = journals[name]
+        if sharded:
+            from repro.shard import ShardedGraphService
+
+            def make_service(state, **kw):
+                return ShardedGraphService(state, mesh, tile=tile,
+                                           bc_mode=bc_mode, src_chunk=2,
+                                           **kw)
+        else:
+            make_service = None
+        rec = recover(path, g0, make_service=make_service,
+                      batch_size=batch_size)
+        assert rec.version == svc.version, (ctx, rec.version, svc.version)
+        for a, b in zip(jax.tree_util.tree_leaves(svc.ring.latest.state),
+                        jax.tree_util.tree_leaves(rec.ring.latest.state)):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), ctx
+        assert rec.scheduler.pending() == svc.scheduler.pending(), ctx
+        assert_service_ok(rec)
+        for kind in ("bfs", "sssp", "bc"):
+            for src in (0, 1):
+                reply = rec.query(kind, [src] if sharded else src)
+                assert reply.version == svc.version, (ctx, kind, src)
+                _CHECK[kind]((*ctx, kind, src), reply, oracle, src, n,
+                             sharded)
+        j = svc.scheduler.journal
+        modes[name]["recovery"] = {
+            "version": int(rec.version),
+            "rotations": j.rotations,
+            "compactions": j.compactions,
+            "segments_dropped": j.segments_dropped,
+        }
 
 
 def _check_telemetry(seed, telemetry, services, modes, expected):

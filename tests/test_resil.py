@@ -27,6 +27,7 @@ from repro.resil import (
     P_RING_EVICT,
     P_SCHED_APPLY,
     P_SCHED_RING_COMMIT,
+    CircuitBreaker,
     FaultPlan,
     InjectedCrash,
     InjectedFault,
@@ -38,7 +39,10 @@ from repro.resil import (
     inject,
     journal_meta,
     read_journal,
+    read_journal_versions,
     recover,
+    segment_files,
+    snapshot_dir,
     verify_service,
 )
 
@@ -516,3 +520,342 @@ def test_service_stream_with_failing_sink_stays_correct(tmp_path):
     assert svc.stats.queries == 12
     assert_service_ok(svc)
     tel.close()
+
+
+# --------------------- segment rotation + compaction ------------------------
+
+def _segmented_service(tmp_path, g0, *, name="wal.jsonl", segment_bytes=700,
+                       **kw):
+    kw.setdefault("batch_size", 4)
+    meta = journal_meta(g0, kw)
+    journal = OpJournal(str(tmp_path / name), meta=meta,
+                        segment_bytes=segment_bytes)
+    return GraphService(g0, journal=journal, **kw), journal
+
+
+def test_segment_rotation_replays_bit_identical(tmp_path):
+    """Rotation seals segments only at barrier boundaries; the multi-file
+    reader stitches them back into the exact batch sequence."""
+    rng = np.random.default_rng(21)
+    g0 = _seed_graph(rng)
+    svc, journal = _segmented_service(tmp_path, g0)
+    svc.submit_many(_stream_ops(rng, count=42))
+    svc.flush()
+    assert journal.rotations >= 3
+    assert len(segment_files(journal.path)) == journal.rotations
+    meta, vbatches, pending = read_journal_versions(journal.path)
+    assert [v for v, _ in vbatches] == list(
+        range(1, svc.ring.latest.version + 1))
+    assert pending == []
+    journal.close()
+    rec = recover(journal.path, g0, batch_size=4)
+    assert rec.ring.latest.version == svc.ring.latest.version
+    _assert_same_state(svc.ring.latest.state, rec.ring.latest.state)
+    assert_service_ok(rec)
+
+
+def test_compaction_bounds_disk_and_recovers_without_initial_state(tmp_path):
+    """>= 3 sealed segments, then compact: every covered segment is
+    deleted, on-disk WAL = snapshot + (fresh) active file, and recovery
+    restores from the snapshot alone — no initial state, bit-identical
+    answers."""
+    rng = np.random.default_rng(22)
+    g0 = _seed_graph(rng)
+    svc, journal = _segmented_service(tmp_path, g0)
+    svc.submit_many(_stream_ops(rng, count=44))
+    svc.flush()
+    sealed = len(segment_files(journal.path))
+    assert sealed >= 3
+    report = svc.compact_wal()
+    # compact seals the active history first, so every segment is covered
+    assert report["segments_dropped"] == sealed + 1
+    assert report["segments_kept"] == 0
+    assert report["snapshot_bytes"] > 0
+    assert segment_files(journal.path) == []
+    # bounded disk: exactly the active WAL (one meta header) + snapshot
+    assert sorted(p.name for p in tmp_path.iterdir()) == [
+        "wal.jsonl", "wal.jsonl.ckpt"]
+    meta, batches, pending = read_journal_versions(journal.path)
+    assert batches == [] and pending == []
+
+    expected = {k: svc.query(k, 0) for k in ("bfs", "sssp", "bc")}
+    journal.close()
+    rec = recover(journal.path, batch_size=4)  # no initial_state
+    assert rec.ring.latest.version == svc.ring.latest.version
+    _assert_same_state(svc.ring.latest.state, rec.ring.latest.state)
+    for k, want in expected.items():
+        got = rec.query(k, 0)
+        assert got.version == want.version
+        for x, y in zip(want.result, got.result):
+            assert np.array_equal(np.asarray(x), np.asarray(y))
+    assert_service_ok(rec)
+
+
+def test_recovery_replays_tail_after_compaction(tmp_path):
+    """Post-compaction commits land in fresh segments; recovery is
+    snapshot + tail replay (never the full history)."""
+    rng = np.random.default_rng(23)
+    g0 = _seed_graph(rng)
+    svc, journal = _segmented_service(tmp_path, g0)
+    svc.submit_many(_stream_ops(rng, count=24))
+    svc.flush()
+    svc.compact_wal()
+    snap_version = svc.ring.latest.version
+    svc.submit_many(_stream_ops(rng, count=14))  # 3 commits + 2 pending
+    svc.flush()
+    journal.close()
+    rec = recover(journal.path, batch_size=4)
+    assert rec.ring.latest.version == svc.ring.latest.version
+    _assert_same_state(svc.ring.latest.state, rec.ring.latest.state)
+    # the rebased ring starts at the snapshot version: elided history
+    # is truly elided, not replayed
+    assert rec.ring.oldest_version >= snap_version
+    assert_service_ok(rec)
+
+
+def test_compacted_journal_recovers_from_any_crash_point(tmp_path):
+    """Chaos stream with auto-compaction: crash at EVERY barrier in turn,
+    recover, and the ring latest must equal the uninterrupted oracle's
+    state at that version — all-or-nothing batches, snapshot + tail."""
+    rng = np.random.default_rng(24)
+    g0 = _seed_graph(rng)
+    ops = _stream_ops(rng, count=36)  # 9 full batches at batch_size=4
+    twin, tj = _segmented_service(tmp_path, g0, name="twin.jsonl")
+    twin.submit_many(ops)
+    twin.flush()
+    n_barriers = twin.scheduler.stats.batches_committed
+    tj.close()
+    _, twin_batches, _ = read_journal(str(tmp_path / "twin.jsonl"))
+
+    for hit in range(n_barriers):
+        name = f"wal{hit}.jsonl"
+        svc, journal = _segmented_service(tmp_path, g0, name=name,
+                                          compact_every=3)
+        with fault_scope(FaultPlan({P_JOURNAL_BARRIER: [hit]})):
+            with pytest.raises(InjectedCrash):
+                svc.submit_many(ops)
+                svc.flush()
+        journal.close()
+        rec = recover(str(tmp_path / name), g0, batch_size=4)
+        assert rec.ring.latest.version == hit
+        expected = g0
+        for chunk in twin_batches[:hit]:
+            expected, _ = apply_ops(expected, list(chunk), batch_size=4)
+        _assert_same_state(expected, rec.ring.latest.state)
+        # the crashed batch's ops are back in the pending log, uncommitted
+        assert rec.scheduler.pending() == 4
+        assert_service_ok(rec)
+
+
+def test_recover_detects_missing_segment(tmp_path):
+    """A deleted (uncovered) segment is a replay gap, not silent skew."""
+    rng = np.random.default_rng(25)
+    g0 = _seed_graph(rng)
+    svc, journal = _segmented_service(tmp_path, g0)
+    svc.submit_many(_stream_ops(rng, count=40))
+    svc.flush()
+    segs = segment_files(journal.path)
+    assert len(segs) >= 3
+    journal.close()
+    (tmp_path / segs[1][1].split("/")[-1]).unlink()  # drop a middle segment
+    with pytest.raises(JournalError, match="replay gap"):
+        recover(journal.path, g0, batch_size=4)
+
+
+def test_adaptive_thresholds_ride_the_snapshot(tmp_path):
+    """Learned dirty thresholds persist through compact + recover: the
+    recovered service resumes tuned, not at cold defaults."""
+    from repro.obs import Telemetry
+    rng = np.random.default_rng(26)
+    g0 = _seed_graph(rng)
+    tel = Telemetry.make(str(tmp_path / "t.jsonl"), hlo=False, profile=False)
+    kw = dict(batch_size=4)
+    journal = OpJournal(str(tmp_path / "wal.jsonl"),
+                        meta=journal_meta(g0, kw))
+    svc = GraphService(g0, journal=journal, telemetry=tel, adaptive=True,
+                       **kw)
+    svc.submit_many(_stream_ops(rng, count=12))
+    svc.flush()
+    learned = {"bfs": 0.11, "sssp": 0.62, "bc": 0.33}
+    svc.adaptive.restore(learned)
+    report = svc.compact_wal()
+    assert report["version"] == svc.ring.latest.version
+    journal.close()
+
+    tel2 = Telemetry.make(str(tmp_path / "t2.jsonl"), hlo=False,
+                          profile=False)
+    rec = recover(str(tmp_path / "wal.jsonl"), batch_size=4,
+                  telemetry=tel2, adaptive=True)
+    got = rec.adaptive.thresholds()
+    for k, v in learned.items():
+        assert got[k] == pytest.approx(v)
+    # the op ledger rode along too: conservation invariants hold
+    assert_service_ok(rec)
+    tel.close()
+    tel2.close()
+
+
+def test_recover_resumed_journal_is_self_contained(tmp_path):
+    """recover(journal=new) after compaction re-compacts the restored
+    base into the new journal, so the new WAL alone can recover."""
+    rng = np.random.default_rng(27)
+    g0 = _seed_graph(rng)
+    svc, journal = _segmented_service(tmp_path, g0)
+    svc.submit_many(_stream_ops(rng, count=24))
+    svc.flush()
+    svc.compact_wal()
+    journal.close()
+    kw = dict(batch_size=4)
+    rec = recover(journal.path, batch_size=4,
+                  journal=OpJournal(str(tmp_path / "wal2.jsonl"),
+                                    meta=journal_meta(g0, kw)))
+    rec.submit_many(_stream_ops(rng, count=8))
+    rec.flush()
+    rec.scheduler.journal.close()
+    rec2 = recover(str(tmp_path / "wal2.jsonl"), batch_size=4)
+    assert rec2.ring.latest.version == rec.ring.latest.version
+    _assert_same_state(rec.ring.latest.state, rec2.ring.latest.state)
+    assert_service_ok(rec2)
+
+
+# --------------------------- circuit breaker --------------------------------
+
+def test_breaker_state_machine():
+    br = CircuitBreaker(fail_threshold=2, cooldown=3, probes=2)
+    assert br.state("bfs") == br.CLOSED
+    assert br.allow_delta("bfs")
+    br.record_failure("bfs")
+    br.record_success("bfs")  # success resets the consecutive count
+    br.record_failure("bfs")
+    assert br.state("bfs") == br.CLOSED
+    br.record_failure("bfs")
+    assert br.state("bfs") == br.OPEN and br.trips == 1
+    assert br.state("sssp") == br.CLOSED  # fault domains are per kind
+    # cooldown: two denials, the third consult is the half-open probe
+    assert not br.allow_delta("bfs")
+    assert not br.allow_delta("bfs")
+    assert br.allow_delta("bfs")
+    assert br.state("bfs") == br.HALF_OPEN
+    br.record_success("bfs")  # probe 1 of 2
+    assert br.state("bfs") == br.HALF_OPEN
+    br.record_success("bfs")
+    assert br.state("bfs") == br.CLOSED and br.restores == 1
+    # a half-open probe failure re-opens with a fresh cooldown
+    br.record_failure("bfs")
+    br.record_failure("bfs")
+    assert br.state("bfs") == br.OPEN
+    for _ in range(3):
+        br.allow_delta("bfs")
+    assert br.state("bfs") == br.HALF_OPEN
+    br.record_failure("bfs")
+    assert br.state("bfs") == br.OPEN and br.trips == 3
+
+
+def _churn(rng, *svcs, n=24):
+    """One random edge insert, applied identically to every service."""
+    u, v = int(rng.integers(0, n)), int(rng.integers(0, n))
+    op = (PUTE, u, v, float(rng.integers(1, 9)))
+    for svc in svcs:
+        svc.submit(op)
+        svc.flush()
+
+
+def test_breaker_trips_pins_full_and_half_open_restores(tmp_path):
+    """Acceptance: forced consecutive delta failures trip the breaker —
+    queries keep succeeding via full with zero wrong answers, a
+    ladder_pinned span + breaker_open gauge are emitted — and half-open
+    probes restore delta serving once the fault plan clears."""
+    from repro.obs import Telemetry
+    rng = np.random.default_rng(31)
+    g0 = _seed_graph(rng)
+    tel = Telemetry.make(str(tmp_path / "t.jsonl"), hlo=False, profile=False)
+    oracle = GraphService(g0, batch_size=4)  # fault-free twin
+    svc = GraphService(g0, batch_size=4, telemetry=tel,
+                       policy=ResiliencePolicy(max_retries=1),
+                       breaker=CircuitBreaker(fail_threshold=3, cooldown=2,
+                                              probes=1))
+    ops = _stream_ops(rng, count=8)
+    for s in (svc, oracle):
+        s.submit_many(ops)
+        s.flush()
+        s.query("bfs", 0)  # seed the delta path's cached prior
+
+    def check(reply):
+        with fault_scope(FaultPlan({})):  # shield the oracle from the plan
+            want = oracle.query("bfs", 0)
+        assert reply.version == want.version and not reply.degraded
+        assert np.array_equal(np.asarray(reply.result.dist),
+                              np.asarray(want.result.dist))
+
+    with fault_scope(FaultPlan({P_COLLECT_DELTA: list(range(64))})):
+        for i in range(3):  # every delta attempt fails -> retried as full
+            _churn(rng, svc, oracle)
+            reply = svc.query("bfs", 0)
+            assert reply.retries == 1
+            check(reply)
+        assert svc.breaker.state("bfs") == "open"
+        # tripped: the delta point is still armed, but the quarantined
+        # ladder never reaches it — clean full answers, zero retries
+        _churn(rng, svc, oracle)
+        reply = svc.query("bfs", 0)
+        assert reply.mode == "full" and reply.retries == 0
+        check(reply)
+    # plan cleared: next consult exhausts the cooldown and probes
+    _churn(rng, svc, oracle)
+    reply = svc.query("bfs", 0)
+    assert reply.mode == "delta" and svc.breaker.state("bfs") == "closed"
+    check(reply)
+    assert svc.breaker.trips == 1 and svc.breaker.restores == 1
+    assert svc.stats.errors == 3 and svc.stats.degraded == 0
+    assert_service_ok(svc)
+    tel.close()
+    recs = [json.loads(x) for x in
+            (tmp_path / "t.jsonl").read_text().splitlines()]
+    pinned = [r for r in recs if r.get("span") == "ladder_pinned"]
+    restored = [r for r in recs if r.get("span") == "ladder_restored"]
+    assert len(pinned) == 1 and pinned[0]["kind"] == "bfs"
+    assert len(restored) == 1
+    open_gauges = tel.registry.find("breaker_open", kind="bfs")
+    assert open_gauges and open_gauges[0].value == 0.0  # restored: back to 0
+
+
+def test_breaker_quarantines_sharded_delta_path(tmp_path):
+    """Sharded service: a tripped breaker pins the ladder at full; the
+    full-path answers stay bit-identical to the local oracle."""
+    from repro.shard import ShardedGraphService, as_graph_mesh
+    rng = np.random.default_rng(32)
+    g0 = _seed_graph(rng)
+    oracle = GraphService(g0, batch_size=4)
+    svc = ShardedGraphService(
+        g0, as_graph_mesh(), batch_size=4, src_chunk=2,
+        policy=ResiliencePolicy(max_retries=1),
+        breaker=CircuitBreaker(fail_threshold=2, cooldown=2, probes=1))
+    ops = _stream_ops(rng, count=8)
+    for s in (svc, oracle):
+        s.submit_many(ops)
+        s.flush()
+        s.query("bfs", [0] if s is svc else 0)
+    with fault_scope(FaultPlan({P_COLLECT_DELTA: list(range(64))})):
+        for i in range(2):
+            _churn(rng, svc, oracle)
+            reply = svc.query("bfs", [0])
+            assert reply.retries == 1
+    assert svc.breaker.state("bfs") == "open"
+    _churn(rng, svc, oracle)
+    reply = svc.query("bfs", [0])
+    want = oracle.query("bfs", 0)
+    assert reply.mode == "full" and reply.retries == 0
+    assert np.array_equal(np.asarray(reply.result.dist[0]),
+                          np.asarray(want.result.dist))
+    assert_service_ok(svc)
+
+
+def test_verify_service_flags_journal_ledger_skew(tmp_path):
+    rng = np.random.default_rng(33)
+    g0 = _seed_graph(rng)
+    svc, journal = _journaled_service(tmp_path, g0)
+    svc.submit_many(_stream_ops(rng, count=6))
+    assert verify_service(svc) == []
+    journal.ops_logged += 2  # fake write-ahead records with no pending ops
+    problems = verify_service(svc)
+    assert any("journal depth" in p for p in problems)
