@@ -103,29 +103,41 @@ def build_versions(graph, stream, depth):
     return out
 
 
-def bench_query_paths(graph, versions, src, kind, verify=False):
-    """Per-commit query latency: full fixed point vs engine delta path."""
+def bench_query_paths(graph, versions, src, kind, verify=False, reps=3):
+    """Per-commit query latency: full fixed point vs engine delta path.
+
+    Best-of-``reps`` on each path (the bench_shard convention): single
+    sub-second chain timings swing with CPU contention, and the
+    ``speedup >= 1.0`` structural gate on the committed artifact needs
+    the noise floor below the bc ladder's margin."""
     full_fn, incr_fn = _FULL[kind], _INCR[kind]
     # Warm up compilation on both paths.
     _block(full_fn(versions[0][0], src))
     prior, _ = incr_fn(versions[0][0], None, None, src)
     _block(incr_fn(versions[0][0], prior, versions[0][1], src)[0])
 
-    t0 = time.perf_counter()
-    for state, _ in versions:
-        _block(full_fn(state, src))
-    t_full = time.perf_counter() - t0
+    t_full = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for state, _ in versions:
+            _block(full_fn(state, src))
+        t_full = min(t_full, time.perf_counter() - t0)
 
-    t0 = time.perf_counter()
-    prior = None
+    t_incr = float("inf")
     modes = {"unchanged": 0, "delta": 0, "full": 0}
-    for state, d in versions:
-        res, stats = incr_fn(state, prior, d if prior is not None else None,
-                             src)
-        _block(res)
-        modes[stats.mode] += 1
-        prior = res
-    t_incr = time.perf_counter() - t0
+    for rep in range(reps):
+        t0 = time.perf_counter()
+        prior = None
+        rep_modes = {"unchanged": 0, "delta": 0, "full": 0}
+        for state, d in versions:
+            res, stats = incr_fn(state, prior,
+                                 d if prior is not None else None, src)
+            _block(res)
+            rep_modes[stats.mode] += 1
+            prior = res
+        t_incr = min(t_incr, time.perf_counter() - t0)
+        if rep == 0:
+            modes = rep_modes  # deterministic: identical across reps
 
     if verify:
         prior = None
@@ -215,6 +227,110 @@ def bench_service_stream(graph, stream, src, batch_size=32):
             "degraded": svc.stats.degraded + svc_tel.stats.degraded}
 
 
+def _run_concurrent_stream(graph, stream, srcs, batch_size, clients,
+                           per_client, burst, telemetry=None):
+    """One pass of the multi-client concurrent workload; timing + stats.
+
+    One updater thread drives the commit stream through the scheduler
+    while ``clients`` query threads fire pipelined bursts of BFS queries
+    (a burst admits together, so compatible requests land in the same
+    dispatcher drain and batch into one compiled call).  Every future is
+    awaited inside the timed region — the queries/s number is
+    end-to-end, admission to resolved reply.
+    """
+    import threading
+
+    from repro.serve import AsyncGraphService
+
+    svc = GraphService(graph, ring_depth=max(8, len(stream) + 2),
+                       batch_size=batch_size, telemetry=telemetry)
+    errs = []
+    with AsyncGraphService(svc, max_batch=32) as srv:
+        # Warm burst at v0: compiles the pow2 batched-dispatch variants.
+        for f in [srv.query_async("bfs", s) for s in (srcs * 3)[:16]]:
+            f.result(timeout=300)
+
+        def updater():
+            try:
+                for ops in stream:
+                    srv.submit_many(ops)
+                    srv.flush()
+            except Exception as e:  # pragma: no cover - harness guard
+                errs.append(e)
+
+        def querier(i):
+            try:
+                for q in range(0, per_client, burst):
+                    futs = [srv.query_async(
+                        "bfs", srcs[(i * 7 + q + j) % len(srcs)])
+                        for j in range(min(burst, per_client - q))]
+                    for f in futs:
+                        f.result(timeout=300)
+            except Exception as e:  # pragma: no cover - harness guard
+                errs.append(e)
+
+        threads = [threading.Thread(target=updater)]
+        threads += [threading.Thread(target=querier, args=(i,))
+                    for i in range(clients)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert srv.drain(timeout=300), "drain timed out"
+        dt = time.perf_counter() - t0
+        assert not errs, errs
+        stats = srv.stats
+    return dt, clients * per_client, svc, stats
+
+
+def bench_service_concurrent(graph, stream, src, batch_size=32, clients=4,
+                             per_client=96, burst=4):
+    """Concurrent serving front end: sustained queries/s vs the
+    single-caller baseline.
+
+    The mixed multi-client stream the tentpole exists for: updates
+    commit through the scheduler while ``clients`` threads query
+    concurrently on snapshot-pinned admissions; compatible queries
+    (same version + kind) batch into one compiled dispatch.  An untimed
+    rehearsal pass absorbs every batched-variant compile (the jit
+    caches are module-level, so they survive the fresh timed service),
+    then the timed pass reports end-to-end queries/s, request p50/p99
+    from ``serve_request_us``, and the batch-size histogram median —
+    the CI gate pins ``batch_p50 > 1`` (batching observable), batched
+    dispatch count > 0, and errors/degraded == 0.
+    """
+    from repro.obs import Telemetry
+
+    srcs = [(src + i) % graph.vcap for i in range(8)]
+    _run_concurrent_stream(graph, stream, srcs, batch_size, clients,
+                           per_client, burst)  # rehearsal: warm compiles
+    tel = Telemetry.make(hlo=False)
+    dt, n_q, svc, stats = _run_concurrent_stream(
+        graph, stream, srcs, batch_size, clients, per_client, burst,
+        telemetry=tel)
+    qps = n_q / dt
+    lat = tel.registry.merged_quantiles("serve_request_us", (0.5, 0.99))
+    p50_ms, p99_ms = lat[0.5] / 1e3, lat[0.99] / 1e3
+    bq = tel.registry.merged_quantiles("serve_batch_size", (0.5, 1.0))
+    tel.close()
+    _row("engine_service_concurrent", dt / max(n_q, 1) * 1e6,
+         f"clients={clients};queries_per_s={qps:.0f};"
+         f"p50_ms={p50_ms:.2f};p99_ms={p99_ms:.2f};"
+         f"batch_p50={bq[0.5]:.0f};batch_max={bq[1.0]:.0f};"
+         f"batched_dispatches={stats.batched_dispatches}")
+    return {"clients": clients, "queries": n_q,
+            "queries_per_s": round(qps, 1),
+            "p50_ms": round(p50_ms, 3), "p99_ms": round(p99_ms, 3),
+            "batch_p50": bq[0.5], "batch_max": bq[1.0],
+            "batched_dispatches": int(stats.batched_dispatches),
+            "dispatches": int(stats.dispatches),
+            "fallbacks": int(stats.fallbacks),
+            "deadline_expired": int(stats.deadline_expired),
+            "max_batch_seen": int(stats.max_batch_seen),
+            "errors": svc.stats.errors, "degraded": svc.stats.degraded}
+
+
 def bench_service_adaptive(graph, stream, src, batch_size=32,
                            base_stats=None):
     """The self-tuning ladder on a live stream (``repro.obs.adaptive``).
@@ -228,11 +344,12 @@ def bench_service_adaptive(graph, stream, src, batch_size=32,
     against the static-threshold telemetry run (``base_stats``) — the
     number that says what self-tuning bought (or cost) on this workload.
     """
+    from repro.engine.service import DEFAULT_DIRTY_THRESHOLDS
     from repro.obs import AdaptiveThresholds, Telemetry
 
     tel = Telemetry.make(hlo=False)
-    ctl = AdaptiveThresholds(period=8, min_full=1, min_delta=4,
-                             probe_every=8)
+    ctl = AdaptiveThresholds(base=DEFAULT_DIRTY_THRESHOLDS, period=8,
+                             min_full=1, min_delta=4, probe_every=8)
     before = ctl.thresholds()
     svc = GraphService(graph, ring_depth=max(8, len(stream) + 2),
                        batch_size=batch_size, telemetry=tel, adaptive=ctl)
@@ -426,6 +543,8 @@ def main(n=2048, edge_factor=8, n_commits=32, ops_per_commit=24,
         speedups[kind] = bench_query_paths(graph, versions, src, kind,
                                            verify=verify)
     service_stats = bench_service_stream(graph, stream, src)
+    service_stats["concurrent"] = bench_service_concurrent(graph, stream,
+                                                           src)
     service_stats["adaptive"] = bench_service_adaptive(
         graph, stream, src, base_stats=service_stats)
     service_stats["recovery"] = bench_service_recovery(graph, stream, src)

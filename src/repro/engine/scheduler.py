@@ -47,9 +47,20 @@ ring latest.  An optional
 latency: commits slower than ``factor`` x the rolling median raise the
 straggler flag, surfacing as a ``scheduler_stragglers`` counter and a
 ``straggler=True`` annotation on the commit's trace span.
+
+Concurrency
+-----------
+Many serving clients may submit concurrently (the async front end's
+update path), so the op-log and the commit pipeline run under one
+re-entrant scheduler lock: submits serialize, and whichever thread
+fills a batch carries out its auto-commit while holding it.  Queries
+never take this lock — in-flight reads on pinned ring versions overlap
+every commit; the only cross-structure touch point is the version ring,
+which has its own lock.
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence, Tuple
 
@@ -90,6 +101,8 @@ class StreamScheduler:
     compact_extra: object = None  # Optional[Callable[[], dict]] manifest extra
     _log: List[Tuple] = field(default_factory=list)
     stats: SchedulerStats = None
+    _lock: threading.RLock = field(default_factory=threading.RLock,
+                                   repr=False)
 
     def __post_init__(self):
         if self.batch_size < 1:
@@ -110,20 +123,22 @@ class StreamScheduler:
         """
         if op[0] not in _VERTEX_OPS and op[0] not in _EDGE_OPS:
             raise ValueError(f"scheduler accepts mutations only, got {op!r}")
-        seq = self.stats.ops_submitted
-        if self.journal is not None:
-            self.journal.append_op(seq, op)
-        self._log.append(op)
-        self.stats.ops_submitted += 1
-        if self.auto_commit:
-            self._commit_ready()
-        return seq
+        with self._lock:
+            seq = self.stats.ops_submitted
+            if self.journal is not None:
+                self.journal.append_op(seq, op)
+            self._log.append(op)
+            self.stats.ops_submitted += 1
+            if self.auto_commit:
+                self._commit_ready()
+            return seq
 
     def submit_many(self, ops: Sequence[Tuple]) -> List[int]:
         return [self.submit(op) for op in ops]
 
     def pending(self) -> int:
-        return len(self._log)
+        with self._lock:
+            return len(self._log)
 
     # ------------------------------ commits ------------------------------
 
@@ -208,29 +223,32 @@ class StreamScheduler:
     def _commit_ready(self) -> List[RingEntry]:
         """Commit every full batch currently in the log."""
         entries = []
-        while len(self._log) >= self.batch_size:
-            chunk = self._next_chunk(self.batch_size)
-            if not chunk:  # strict cut at position 0 cannot happen, but guard
-                break
-            entries.append(self._commit_chunk(chunk))
+        with self._lock:
+            while len(self._log) >= self.batch_size:
+                chunk = self._next_chunk(self.batch_size)
+                if not chunk:  # strict cut at 0 cannot happen, but guard
+                    break
+                entries.append(self._commit_chunk(chunk))
         return entries
 
     def commit_one(self) -> Optional[RingEntry]:
         """Commit a single batch (possibly partial); None when log is empty."""
-        if not self._log:
-            return None
-        # A strict cut always lands after >= 1 op, so the chunk is non-empty.
-        chunk = self._next_chunk(self.batch_size)
-        return self._commit_chunk(chunk)
+        with self._lock:
+            if not self._log:
+                return None
+            # A strict cut lands after >= 1 op, so the chunk is non-empty.
+            chunk = self._next_chunk(self.batch_size)
+            return self._commit_chunk(chunk)
 
     def flush(self) -> List[RingEntry]:
         """Drain the whole log in batch-size chunks (tail is NOP-padded)."""
         entries = []
-        while self._log:
-            entry = self.commit_one()
-            if entry is None:
-                break
-            entries.append(entry)
+        with self._lock:
+            while self._log:
+                entry = self.commit_one()
+                if entry is None:
+                    break
+                entries.append(entry)
         return entries
 
     # ------------------------------ recovery ------------------------------
@@ -246,11 +264,12 @@ class StreamScheduler:
         new journal is itself recoverable.
         """
         ops = [tuple(op) for op in chunk]
-        if self.journal is not None:
-            for i, op in enumerate(ops):
-                self.journal.append_op(self.stats.ops_submitted + i, op)
-        self.stats.ops_submitted += len(ops)
-        return self._commit_chunk(ops)
+        with self._lock:
+            if self.journal is not None:
+                for i, op in enumerate(ops):
+                    self.journal.append_op(self.stats.ops_submitted + i, op)
+            self.stats.ops_submitted += len(ops)
+            return self._commit_chunk(ops)
 
     def replay_pending(self, ops: Sequence[Tuple]) -> None:
         """Journal recovery: restore un-barriered tail ops as pending.
@@ -258,9 +277,10 @@ class StreamScheduler:
         Unlike ``submit``, never auto-commits — the original process had
         not committed these ops, and recovery must reproduce its state,
         not improve on it."""
-        for op in ops:
-            op = tuple(op)
-            if self.journal is not None:
-                self.journal.append_op(self.stats.ops_submitted, op)
-            self._log.append(op)
-            self.stats.ops_submitted += 1
+        with self._lock:
+            for op in ops:
+                op = tuple(op)
+                if self.journal is not None:
+                    self.journal.append_op(self.stats.ops_submitted, op)
+                self._log.append(op)
+                self.stats.ops_submitted += 1

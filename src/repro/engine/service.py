@@ -47,9 +47,10 @@ the per-mode tallies) count only successful collects, failures land in
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -90,6 +91,31 @@ _FULL = {"bfs": queries.bfs, "sssp": queries.sssp,
 _QUERY_COST_ZERO = {"coll_bytes": 0, "temp_bytes": 0, "flops": 0.0,
                     "device_us": 0.0}
 
+#: static delta-vs-full crossover per query kind.  BFS/SSSP deltas are
+#: frontier-local (cost tracks the dirty region), so a generous 25% bound
+#: holds; BC's incremental path re-runs the FULL backward dependency
+#: sweep no matter how small the cut, so its delta only wins when the
+#: forward warm start saves real work — measured crossover sits near a
+#: few percent dirty, and the old shared 0.25 default routed BC deltas
+#: into guaranteed losses (the `engine_bc_incr` 0.91x regression).
+DEFAULT_DIRTY_THRESHOLDS: Dict[str, float] = {
+    "bfs": 0.25, "sssp": 0.25, "bc": 0.05}
+
+#: a service's dirty_threshold= accepts one float for every kind or a
+#: per-kind mapping (missing kinds fall back to the defaults above).
+ThresholdSpec = Union[None, float, Mapping[str, float]]
+
+
+def resolve_dirty_thresholds(spec: ThresholdSpec,
+                             kinds: Sequence[str]) -> Dict[str, float]:
+    """Normalize a ``dirty_threshold`` spec to a per-kind dict."""
+    if spec is None:
+        return {k: DEFAULT_DIRTY_THRESHOLDS.get(k, 0.25) for k in kinds}
+    if isinstance(spec, (int, float)):
+        return {k: float(spec) for k in kinds}
+    return {k: float(spec.get(k, DEFAULT_DIRTY_THRESHOLDS.get(k, 0.25)))
+            for k in kinds}
+
 
 class ServiceStats(CounterStruct):
     """Per-query mode tallies: unchanged + delta + full == queries (a cn
@@ -126,7 +152,8 @@ class _CacheSlot:
     result: object  # BFSResult | SSSPResult | BCResult | Sharded*Result
 
 
-def prune_result_cache(cache: Dict, max_cached: int, floor: int) -> None:
+def prune_result_cache(cache: Dict, max_cached: int, floor: int,
+                       pinned=()) -> None:
     """Keep a per-``(kind, src)`` result cache bounded.
 
     Slots whose version fell below ``floor`` (out of the ring window) can
@@ -135,13 +162,24 @@ def prune_result_cache(cache: Dict, max_cached: int, floor: int) -> None:
     order LRU by delete-then-insert on every hit.  Shared by
     :class:`GraphService` and the sharded service
     (``repro.shard.service``) so eviction semantics cannot drift.
+
+    ``pinned`` (the ring's pin table) exempts slots at those versions
+    from BOTH sweeps: an admitted-but-undispatched query holds a pin on
+    the version it will read, and evicting its slot would demote its
+    unchanged/delta rung — or, worse, strip the stale-serve bottom rung —
+    out from under it.  The cache may transiently exceed ``max_cached``
+    when everything left is pinned; it shrinks again as pins release.
     """
     if len(cache) <= max_cached:
         return
-    for key in [k for k, s in cache.items() if s.version < floor]:
+    pinned = frozenset(pinned)
+    for key in [k for k, s in cache.items()
+                if s.version < floor and s.version not in pinned]:
         del cache[key]
-    while len(cache) > max_cached:
-        cache.pop(next(iter(cache)))
+    if len(cache) > max_cached:
+        evictable = [k for k, s in cache.items() if s.version not in pinned]
+        for key in evictable[:len(cache) - max_cached]:
+            del cache[key]
 
 
 @dataclass
@@ -181,7 +219,7 @@ class BaseGraphService:
     _service_name: str = "service"
 
     def _init_service(self, initial_state: GraphState, *, ring_depth: int,
-                      batch_size: int, dirty_threshold: float,
+                      batch_size: int, dirty_threshold: ThresholdSpec,
                       strict_order: bool, coalesce: bool, max_collects: int,
                       max_cached: int,
                       telemetry: Optional[Telemetry] = None,
@@ -192,13 +230,16 @@ class BaseGraphService:
         self.telemetry = telemetry
         self.policy = policy
         registry = telemetry.registry if telemetry is not None else None
+        self.dirty_thresholds = resolve_dirty_thresholds(
+            dirty_threshold, self._kinds)
         # Adaptive dirty-threshold control (repro.obs.adaptive): pass an
         # AdaptiveThresholds (or True for defaults seeded from the static
-        # threshold) to have the ladder consult a self-tuned per-kind
-        # crossover instead of the fixed dirty_threshold.  The controller
-        # feeds on the traced wall times, so it requires telemetry.
+        # per-kind thresholds) to have the ladder consult a self-tuned
+        # per-kind crossover instead of the fixed dirty_threshold.  The
+        # controller feeds on the traced wall times, so it requires
+        # telemetry.
         if adaptive is True:
-            adaptive = AdaptiveThresholds(base=dirty_threshold)
+            adaptive = AdaptiveThresholds(base=self.dirty_thresholds)
         if adaptive is not None:
             if telemetry is None:
                 raise ValueError("adaptive thresholds require telemetry= "
@@ -229,19 +270,46 @@ class BaseGraphService:
             coalesce=coalesce, telemetry=telemetry, journal=journal,
             monitor=monitor, compact_every=compact_every,
             compact_extra=self._wal_extra, stats=sched_stats)
-        self.dirty_threshold = dirty_threshold
         self.max_collects = max_collects
         self.max_cached = max_cached
         self.stats = ServiceStats(registry, service=self._service_name)
         self._cache: Dict[Tuple, _CacheSlot] = {}
+        # The result cache is shared between the dispatcher's collect
+        # path and the stale-serve bottom rung, which the async front end
+        # may walk from a different thread; one re-entrant lock keeps
+        # store + prune + stale-read atomic.
+        self._cache_lock = threading.RLock()
         # Per-query observation scratch, reset at query() entry: the
         # HLO-attributed cost of the query's device programs summed over
         # its collects (local collects have no collectives, so they
         # report zero bytes but real flops), the attributed device time,
         # and the dirty fraction the ladder decision saw (fed to the
-        # adaptive controller).
-        self._query_cost = dict(_QUERY_COST_ZERO)
-        self._query_dirty_frac: Optional[float] = None
+        # adaptive controller).  Thread-local so the query path is
+        # re-entrant: concurrent callers (the async front end's
+        # dispatcher vs. a direct caller) each see their own scratch.
+        self._query_tls = threading.local()
+
+    # ------------------------- per-thread scratch -------------------------
+
+    @property
+    def _query_cost(self) -> dict:
+        cost = getattr(self._query_tls, "cost", None)
+        if cost is None:
+            cost = dict(_QUERY_COST_ZERO)
+            self._query_tls.cost = cost
+        return cost
+
+    @_query_cost.setter
+    def _query_cost(self, value: dict) -> None:
+        self._query_tls.cost = value
+
+    @property
+    def _query_dirty_frac(self) -> Optional[float]:
+        return getattr(self._query_tls, "dirty_frac", None)
+
+    @_query_dirty_frac.setter
+    def _query_dirty_frac(self, value: Optional[float]) -> None:
+        self._query_tls.dirty_frac = value
 
     # ------------------------------ updates ------------------------------
 
@@ -314,16 +382,21 @@ class BaseGraphService:
         inject(P_CACHE_STORE)
         # Delete-then-insert moves the key to the back of the dict so
         # _prune_cache's front-of-dict eviction is LRU, not FIFO.
-        self._cache.pop(key, None)
-        self._cache[key] = _CacheSlot(version, result)
-        self._prune_cache()
+        with self._cache_lock:
+            self._cache.pop(key, None)
+            self._cache[key] = _CacheSlot(version, result)
+            self._prune_cache()
 
     def _prune_cache(self) -> None:
         # dirty_between still has a span for slots at oldest_version - 1
         # (the first in-window commit's dirty set covers that gap), so only
-        # versions strictly below that are unservable.
-        prune_result_cache(self._cache, self.max_cached,
-                           self.ring.oldest_version - 1)
+        # versions strictly below that are unservable.  The ring's pin
+        # table exempts versions admitted queries still hold (pins are
+        # taken at admission, before dispatch reads the slot).
+        with self._cache_lock:
+            prune_result_cache(self._cache, self.max_cached,
+                               self.ring.oldest_version - 1,
+                               pinned=self.ring.pinned_versions())
 
     # ------------------------------- hooks -------------------------------
 
@@ -379,10 +452,10 @@ class BaseGraphService:
     def _threshold(self, kind: str) -> float:
         """The ladder's delta-vs-full crossover for ``kind``: the adaptive
         controller's current (possibly probing) value when one is bound,
-        else the static ``dirty_threshold``."""
+        else the static per-kind threshold."""
         if self.adaptive is not None:
             return self.adaptive.threshold(kind)
-        return self.dirty_threshold
+        return self.dirty_thresholds[kind]
 
     def _note_dirty_frac(self, frac) -> None:
         """Record the dirty fraction the ladder decision just saw, feeding
@@ -524,14 +597,27 @@ class BaseGraphService:
     def _stale_reply(self, kind: str, srcs) -> Optional[QueryReply]:
         """Bottom rung: last cached answer, iff its version is still
         resident in the ring (the answer is exact at that version — the
-        cache is only written after a successful collect)."""
+        cache is only written after a successful collect).
+
+        The residency check and the reply assembly are atomic w.r.t.
+        ring eviction: ``try_pin`` bumps the refcount in the same
+        critical section that verifies residency, so a concurrent commit
+        rotating the ring cannot evict the version between the check and
+        the reply — a degraded reply never names a version that was
+        already gone when it was built.
+        """
         key = self._key(kind, srcs)
-        slot = self._cache.get(key)
-        if slot is None or self.ring.get_entry(slot.version) is None:
+        with self._cache_lock:
+            slot = self._cache.get(key)
+            if slot is None:
+                return None
+            pin = self.ring.try_pin(slot.version)
+        if pin is None:
             return None
-        return QueryReply(slot.result, slot.version, "degraded", False,
-                          ScanStats(), degraded=True,
-                          stale_version=slot.version)
+        with pin:
+            return QueryReply(slot.result, slot.version, "degraded", False,
+                              ScanStats(), degraded=True,
+                              stale_version=slot.version)
 
     def _query_inner(self, kind: str, srcs, mode: str,
                      force_full: bool = False) -> QueryReply:
@@ -597,7 +683,8 @@ class GraphService(BaseGraphService):
     _service_name = "local"
 
     def __init__(self, initial_state: GraphState, *, ring_depth: int = 8,
-                 batch_size: int = 32, dirty_threshold: float = 0.25,
+                 batch_size: int = 32,
+                 dirty_threshold: ThresholdSpec = None,
                  strict_order: bool = False, coalesce: bool = False,
                  max_collects: int = 16, max_cached: int = 512,
                  telemetry: Optional[Telemetry] = None,
@@ -642,7 +729,8 @@ class GraphService(BaseGraphService):
                 acct = self._acct_begin()
                 res, inc = _INCREMENTAL[kind](
                     entry.state, None, None, src,
-                    dirty_threshold=self.dirty_threshold, accountant=acct)
+                    dirty_threshold=self.dirty_thresholds[kind],
+                    accountant=acct)
                 self._acct_charge(acct)
             self._cache_store(key, entry.version, res)
             return entry, res, inc.mode

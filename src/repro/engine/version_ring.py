@@ -18,9 +18,23 @@ moves to a side table instead of being evicted); ``release`` drops it once
 the last pin is gone.  Dirty-set history, however, lives only in the ring
 window — ``dirty_between`` returns ``None`` when the window no longer
 covers the span, which callers treat as "fall back to full recompute".
+
+Concurrency: the ring is shared between the async serving front end's
+admission path (pin), its dispatcher (read + release), and the update
+scheduler (commit/evict), so every mutation and every read that feeds a
+decision runs under one re-entrant lock.  Pins are refcounted —
+concurrent queries at the same version share one table entry — and a
+:class:`PinnedSnapshot` handle releases exactly once no matter how many
+threads call ``release()`` on it (the released flag flips under the ring
+lock, not in racy Python-attribute space).  ``try_pin`` exists for
+check-then-use sites (e.g. stale-reply assembly): residency check and
+refcount bump happen in one critical section, so the caller either holds
+the version or learns it is gone — never a reply naming an evicted
+version.
 """
 from __future__ import annotations
 
+import threading
 from collections import deque
 from dataclasses import dataclass
 from typing import NamedTuple, Optional
@@ -43,7 +57,13 @@ class RingEntry(NamedTuple):
 
 @dataclass
 class PinnedSnapshot:
-    """A pin handle; use as a context manager or call ``release()``."""
+    """A pin handle; use as a context manager or call ``release()``.
+
+    ``release()`` is idempotent under concurrency: the first caller to
+    flip ``_released`` (inside the ring lock) decrements the refcount,
+    every later or racing caller is a no-op.  Double-release therefore
+    can never steal a pin another in-flight query still holds.
+    """
 
     ring: "VersionRing"
     version: int
@@ -57,9 +77,7 @@ class PinnedSnapshot:
         return entry.state
 
     def release(self) -> None:
-        if not self._released:
-            self._released = True
-            self.ring.release(self.version)
+        self.ring._release_handle(self)
 
     def __enter__(self) -> "PinnedSnapshot":
         return self
@@ -84,16 +102,24 @@ class VersionRing:
         self._pins: dict[int, int] = {}          # version -> pin count
         self._parked: dict[int, RingEntry] = {}  # pinned but rotated out
         self.evictions = 0
+        # One re-entrant lock covers window rotation, the pin table, and
+        # the parked side table: commit/evict, pin/release, and the
+        # residency reads that feed decisions all serialize here.  The
+        # lock is held only around bookkeeping (dict/deque ops), never
+        # around device compute, so it is not a dispatch bottleneck.
+        self._lock = threading.RLock()
 
     # ------------------------------ commits ------------------------------
 
     @property
     def latest(self) -> RingEntry:
-        return self._window[-1]
+        with self._lock:
+            return self._window[-1]
 
     @property
     def oldest_version(self) -> int:
-        return self._window[0].version
+        with self._lock:
+            return self._window[0].version
 
     def commit(self, state: GraphState) -> RingEntry:
         """Append a new version; dirty set is derived vs the previous latest.
@@ -101,32 +127,39 @@ class VersionRing:
         The commit is atomic: the ``ring.evict`` fault point (an eviction
         racing an in-flight query) fires BEFORE the append, so a planned
         eviction failure leaves the ring exactly as it was — callers
-        (the scheduler's atomic-commit path) rely on that.
+        (the scheduler's atomic-commit path) rely on that.  The dirty-set
+        derivation (device work) runs outside the lock; only the window
+        rotation itself is serialized against pin/release.
         """
-        if len(self._window) >= self.depth:
-            inject(P_RING_EVICT)
-        prev = self._window[-1]
-        entry = RingEntry(
-            version=prev.version + 1,
-            state=state,
-            dirty=dirty_vertices_padded(prev.state, state),
-        )
-        self._window.append(entry)
-        while len(self._window) > self.depth:
-            old = self._window.popleft()
-            if self._pins.get(old.version, 0) > 0:
-                self._parked[old.version] = old
-            else:
-                self.evictions += 1
-        return entry
+        with self._lock:
+            if len(self._window) >= self.depth:
+                inject(P_RING_EVICT)
+            prev = self._window[-1]
+        dirty = dirty_vertices_padded(prev.state, state)
+        with self._lock:
+            if self._window[-1].version != prev.version:
+                raise RuntimeError(
+                    "concurrent VersionRing.commit: commits must be "
+                    "serialized by the scheduler")
+            entry = RingEntry(
+                version=prev.version + 1, state=state, dirty=dirty)
+            self._window.append(entry)
+            while len(self._window) > self.depth:
+                old = self._window.popleft()
+                if self._pins.get(old.version, 0) > 0:
+                    self._parked[old.version] = old
+                else:
+                    self.evictions += 1
+            return entry
 
     # ------------------------------ reads --------------------------------
 
     def get_entry(self, version: int) -> Optional[RingEntry]:
-        for e in self._window:
-            if e.version == version:
-                return e
-        return self._parked.get(version)
+        with self._lock:
+            for e in self._window:
+                if e.version == version:
+                    return e
+            return self._parked.get(version)
 
     def get(self, version: int) -> Optional[GraphState]:
         e = self.get_entry(version)
@@ -143,17 +176,18 @@ class VersionRing:
         """
         if v_from > v_to:
             raise ValueError(f"dirty_between({v_from}, {v_to}): reversed span")
-        if v_to > self.latest.version:
-            return None
-        if v_from == v_to:
-            entry = self.get_entry(v_to)
-            if entry is None:
+        with self._lock:
+            if v_to > self._window[-1].version:
                 return None
-            return jnp.zeros((entry.state.vcap,), jnp.bool_)
-        if v_from + 1 < self.oldest_version:
-            return None  # span starts before the window: dirty info evicted
-        masks = [e.dirty for e in self._window
-                 if v_from < e.version <= v_to]
+            if v_from == v_to:
+                entry = self.get_entry(v_to)
+                if entry is None:
+                    return None
+                return jnp.zeros((entry.state.vcap,), jnp.bool_)
+            if v_from + 1 < self._window[0].version:
+                return None  # span starts before window: dirty info evicted
+            masks = [e.dirty for e in self._window
+                     if v_from < e.version <= v_to]
         if len(masks) != v_to - v_from:
             return None
         vcap = masks[-1].shape[0]
@@ -168,22 +202,62 @@ class VersionRing:
     # ------------------------------ pinning ------------------------------
 
     def pin(self, version: Optional[int] = None) -> PinnedSnapshot:
-        """Pin a resident version (default: latest) against eviction."""
-        if version is None:
-            version = self.latest.version
-        if self.get_entry(version) is None:
-            raise KeyError(f"version {version} is not resident in the ring")
-        self._pins[version] = self._pins.get(version, 0) + 1
-        return PinnedSnapshot(self, version)
+        """Pin a resident version (default: latest) against eviction.
+
+        Residency check and refcount bump are one critical section, so a
+        returned handle always holds the version it names.
+        """
+        with self._lock:
+            if version is None:
+                version = self._window[-1].version
+            if self.get_entry(version) is None:
+                raise KeyError(
+                    f"version {version} is not resident in the ring")
+            self._pins[version] = self._pins.get(version, 0) + 1
+            return PinnedSnapshot(self, version)
+
+    def try_pin(self, version: Optional[int] = None
+                ) -> Optional[PinnedSnapshot]:
+        """Like :meth:`pin` but returns ``None`` for a non-resident
+        version instead of raising — the atomic form of the
+        check-then-pin pattern callers would otherwise race."""
+        with self._lock:
+            try:
+                return self.pin(version)
+            except KeyError:
+                return None
 
     def release(self, version: int) -> None:
-        count = self._pins.get(version, 0)
-        if count <= 1:
-            self._pins.pop(version, None)
-            if self._parked.pop(version, None) is not None:
-                self.evictions += 1
-        else:
-            self._pins[version] = count - 1
+        """Drop one pin on ``version``; extra releases are no-ops.
+
+        Refcounted: the parked entry is evicted only when the LAST pin
+        goes, so concurrent queries sharing a version never unpin each
+        other.
+        """
+        with self._lock:
+            count = self._pins.get(version, 0)
+            if count <= 0:
+                return  # already fully released: idempotent
+            if count == 1:
+                self._pins.pop(version, None)
+                if self._parked.pop(version, None) is not None:
+                    self.evictions += 1
+            else:
+                self._pins[version] = count - 1
+
+    def _release_handle(self, handle: PinnedSnapshot) -> None:
+        """Release a :class:`PinnedSnapshot` exactly once (see its
+        docstring); the released flag flips under the ring lock."""
+        with self._lock:
+            if handle._released:
+                return
+            handle._released = True
+            self.release(handle.version)
+
+    def pin_count(self, version: int) -> int:
+        with self._lock:
+            return self._pins.get(version, 0)
 
     def pinned_versions(self) -> list[int]:
-        return sorted(self._pins)
+        with self._lock:
+            return sorted(self._pins)

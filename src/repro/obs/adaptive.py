@@ -55,8 +55,13 @@ LADDER_KINDS = ("bfs", "sssp", "bc")
 class AdaptiveThresholds:
     """Per-kind ``dirty_threshold`` controller (see module docstring).
 
-    ``base`` seeds every kind's threshold (the service's static value);
-    ``lo``/``hi`` clamp it; ``alpha`` damps each step toward the fitted
+    ``base`` seeds the thresholds — one float for every kind, or a
+    per-kind mapping (the services pass their static per-kind defaults:
+    BC's profitable crossover sits an order of magnitude below
+    BFS/SSSP's, see ``repro.engine.service.DEFAULT_DIRTY_THRESHOLDS``);
+    ``lo``/``hi`` clamp it — ``lo`` defaults low enough (0.005) that the
+    controller can actually reach BC's few-percent crossover instead of
+    being pinned above it; ``alpha`` damps each step toward the fitted
     crossover; ``period`` is the adjustment cadence in observations per
     kind; ``min_full``/``min_delta`` gate the fit on sample coverage;
     ``probe_every`` forces every Nth threshold consult to a full
@@ -65,22 +70,27 @@ class AdaptiveThresholds:
     don't export.
     """
 
-    def __init__(self, *, base: float = 0.25, lo: float = 0.02,
+    def __init__(self, *, base=0.25, lo: float = 0.005,
                  hi: float = 0.75, alpha: float = 0.5, period: int = 16,
                  min_full: int = 2, min_delta: int = 6,
                  probe_every: int = 16, max_samples: int = 512,
                  kinds: Tuple[str, ...] = LADDER_KINDS):
-        if not (0.0 <= lo <= base <= hi <= 1.0):
-            raise ValueError(
-                f"need 0 <= lo <= base <= hi <= 1, got {lo}/{base}/{hi}")
+        self.kinds = tuple(kinds)
+        if isinstance(base, (int, float)):
+            bases = {k: float(base) for k in self.kinds}
+        else:
+            bases = {k: float(base[k]) for k in self.kinds}
+        for k, b in bases.items():
+            if not (0.0 <= lo <= b <= hi <= 1.0):
+                raise ValueError(f"need 0 <= lo <= base <= hi <= 1, got "
+                                 f"{lo}/{b} ({k})/{hi}")
         if not (0.0 < alpha <= 1.0):
             raise ValueError(f"alpha must be in (0, 1], got {alpha}")
-        self.base, self.lo, self.hi, self.alpha = base, lo, hi, alpha
+        self.base, self.lo, self.hi, self.alpha = bases, lo, hi, alpha
         self.period, self.min_full, self.min_delta = period, min_full, \
             min_delta
         self.probe_every = probe_every
-        self.kinds = tuple(kinds)
-        self._thr: Dict[str, float] = {k: float(base) for k in self.kinds}
+        self._thr: Dict[str, float] = dict(bases)
         self._full: Dict[str, deque] = {
             k: deque(maxlen=max_samples) for k in self.kinds}
         self._pairs: Dict[str, deque] = {
@@ -119,7 +129,7 @@ class AdaptiveThresholds:
         answer is the cached one either way.
         """
         if kind not in self._thr:
-            return self.base
+            return self.base.get(kind, 0.25)
         self._consults[kind] += 1
         if self.probe_every and self._consults[kind] % self.probe_every == 0:
             self.probes += 1
@@ -224,7 +234,7 @@ class AdaptiveThresholds:
         return {
             "thresholds": {k: round(v, 6) for k, v in self._thr.items()},
             "clamps": {"lo": self.lo, "hi": self.hi},
-            "base": self.base,
+            "base": {k: round(v, 6) for k, v in self.base.items()},
             "adjustments": self.adjustments,
             "probes": self.probes,
             "samples": {k: {"full": len(self._full[k]),

@@ -13,10 +13,21 @@ feeds per query.
 Instruments are keyed by ``(name, sorted(labels))``; asking for the same
 key twice returns the same instrument, so shims and tracers can share
 counters without coordination.  Everything here is plain Python — no jax
-import — and single-threaded like the services it observes.
+import.
+
+Thread-safety: the async serving front end (``repro.serve``) drives one
+registry from several threads (admission, dispatcher, committer), so
+instrument *creation* is serialized by a registry lock and instrument
+*mutation* (``inc``/``set``/``observe``) by a shared module lock — both
+far off any device-dispatch hot path.  The attribute shims'
+``stats.field += k`` surface remains a read-then-write pair: each shim's
+counters must stay owned by one thread (the serve layer's threading
+model guarantees this — the dispatcher owns query stats, the committer
+owns scheduler stats); cross-thread tallies should use plain ``inc``.
 """
 from __future__ import annotations
 
+import threading
 from collections import deque
 from collections.abc import MutableMapping
 from typing import Dict, Iterable, Optional, Tuple
@@ -29,10 +40,15 @@ __all__ = [
 #: the rungs of the unchanged -> delta -> full query ladder.
 LADDER_MODES = ("unchanged", "delta", "full")
 
+#: one lock for every instrument mutation: cheap (host bookkeeping only)
+#: and makes ``inc``/``observe`` atomic across serving threads.
+_MUT_LOCK = threading.Lock()
+
 
 class Counter:
-    """Monotonic tally.  ``set`` exists for the attribute shims
-    (``stats.field += k`` reads then writes) — use ``inc`` elsewhere."""
+    """Monotonic tally.  ``inc`` is atomic under concurrent callers;
+    ``set`` exists for the attribute shims (``stats.field += k`` reads
+    then writes — single-owner-thread only) — use ``inc`` elsewhere."""
 
     __slots__ = ("name", "labels", "_value")
 
@@ -46,7 +62,8 @@ class Counter:
         return self._value
 
     def inc(self, n: int = 1) -> None:
-        self._value += n
+        with _MUT_LOCK:
+            self._value += n
 
     def set(self, v: int) -> None:
         self._value = int(v)
@@ -97,19 +114,21 @@ class Histogram:
 
     def observe(self, v: float) -> None:
         v = float(v)
-        self._samples.append(v)
-        self.count += 1
-        self.total += v
+        with _MUT_LOCK:
+            self._samples.append(v)
+            self.count += 1
+            self.total += v
 
     @property
     def samples(self) -> list:
-        return list(self._samples)
+        with _MUT_LOCK:
+            return list(self._samples)
 
     def quantile(self, q: float) -> float:
         return quantile(self.samples, q)
 
     def quantiles(self, qs: Iterable[float]) -> Dict[float, float]:
-        s = sorted(self._samples)
+        s = sorted(self.samples)
         return {q: _q_sorted(s, q) for q in qs}
 
     def __repr__(self):
@@ -134,14 +153,16 @@ class MetricsRegistry:
 
     def __init__(self):
         self._metrics: Dict[Tuple, object] = {}
+        self._lock = threading.Lock()
 
     def _get(self, cls, name: str, labels: dict, **kw):
         key = (cls.__name__, name, tuple(sorted(labels.items())))
-        inst = self._metrics.get(key)
-        if inst is None:
-            inst = cls(name, tuple(sorted(labels.items())), **kw)
-            self._metrics[key] = inst
-        return inst
+        with self._lock:
+            inst = self._metrics.get(key)
+            if inst is None:
+                inst = cls(name, tuple(sorted(labels.items())), **kw)
+                self._metrics[key] = inst
+            return inst
 
     def counter(self, name: str, **labels) -> Counter:
         return self._get(Counter, name, labels)
@@ -155,12 +176,13 @@ class MetricsRegistry:
     def instruments(self) -> list:
         """Every registered instrument, in registration order (the
         exposition renderer groups them into OpenMetrics families)."""
-        return list(self._metrics.values())
+        with self._lock:
+            return list(self._metrics.values())
 
     def find(self, name: str, **label_filter) -> list:
         """Every instrument called ``name`` whose labels cover the filter."""
         out = []
-        for inst in self._metrics.values():
+        for inst in self.instruments():
             if inst.name != name:
                 continue
             labels = dict(inst.labels)
@@ -182,7 +204,7 @@ class MetricsRegistry:
     def snapshot(self) -> list:
         """JSON-able dump of every instrument (histograms as summaries)."""
         out = []
-        for inst in self._metrics.values():
+        for inst in self.instruments():
             rec = {"name": inst.name, "labels": dict(inst.labels),
                    "kind": type(inst).__name__.lower()}
             if isinstance(inst, Histogram):

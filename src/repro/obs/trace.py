@@ -27,12 +27,20 @@ a long stream grows without limit): with ``max_bytes`` set, a write that
 would cross the limit first rotates ``trace.jsonl`` → ``trace.jsonl.1``
 (shifting older rotations up to ``keep``, dropping the oldest) and
 reopens fresh — counted in ``tracer.rotations``.
+
+Thread-safety: span *nesting* is already per-thread for free
+(:mod:`contextvars` — each serving thread sees its own current-span
+stack), but id assignment and record emission mutate shared tracer
+state, so both run under a tracer lock; interleaved spans from the
+dispatcher and the committer each come out as complete, well-parented
+records.
 """
 from __future__ import annotations
 
 import contextvars
 import json
 import os
+import threading
 import time
 from contextlib import contextmanager
 from typing import IO, Optional
@@ -102,15 +110,17 @@ class Tracer:
         self.rotations = 0
         self._next_id = 0
         self._t0 = time.perf_counter()
+        self._lock = threading.Lock()
         self._sink: Optional[IO] = open(path, "a") if path else None
         self._sink_bytes = (os.path.getsize(path)
                             if path and os.path.exists(path) else 0)
 
     @contextmanager
     def span(self, name: str, **attrs):
-        sp = Span(name, self._next_id, getattr(_CURRENT.get(), "id", None),
-                  attrs)
-        self._next_id += 1
+        with self._lock:
+            span_id = self._next_id
+            self._next_id += 1
+        sp = Span(name, span_id, getattr(_CURRENT.get(), "id", None), attrs)
         token = _CURRENT.set(sp)
         try:
             yield sp
@@ -125,11 +135,13 @@ class Tracer:
                "t_s": round(sp.t0 - self._t0, 6),
                "wall_us": round(sp.wall_us, 1)}
         rec.update(sp.attrs)
-        if len(self.records) >= self.max_records:
-            self.records.pop(0)
-            self.dropped += 1
-        self.records.append(rec)
-        if self._sink is not None:
+        with self._lock:
+            if len(self.records) >= self.max_records:
+                self.records.pop(0)
+                self.dropped += 1
+            self.records.append(rec)
+            if self._sink is None:
+                return
             try:
                 inject(P_OBS_SINK)
                 line = json.dumps(rec) + "\n"

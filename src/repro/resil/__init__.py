@@ -34,6 +34,7 @@ from .faults import (  # noqa: F401
     P_RING_EVICT,
     P_SCHED_APPLY,
     P_SCHED_RING_COMMIT,
+    P_SERVE_DISPATCH,
     FaultPlan,
     InjectedCrash,
     InjectedFault,

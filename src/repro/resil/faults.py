@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
+import threading
 import zlib
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -43,8 +44,8 @@ __all__ = [
     "FAULT_POINTS", "FaultPlan", "InjectedCrash", "InjectedFault",
     "P_CACHE_STORE", "P_COLLECT_DELTA", "P_COLLECT_DISPATCH",
     "P_JOURNAL_BARRIER", "P_JOURNAL_TORN", "P_OBS_SINK", "P_RING_EVICT",
-    "P_SCHED_APPLY", "P_SCHED_RING_COMMIT", "active_plan", "fault_scope",
-    "inject",
+    "P_SCHED_APPLY", "P_SCHED_RING_COMMIT", "P_SERVE_DISPATCH",
+    "active_plan", "fault_scope", "inject",
 ]
 
 # ----------------------------- named points --------------------------------
@@ -67,12 +68,16 @@ P_JOURNAL_BARRIER = "journal.barrier"
 P_JOURNAL_TORN = "journal.torn"
 #: telemetry JSONL sink IO.
 P_OBS_SINK = "obs.sink"
+#: the async front end's batched dispatch (a whole compatible-query batch
+#: is about to run as one compiled call; a failure here must degrade to
+#: the per-request resilient path, never lose a request).
+P_SERVE_DISPATCH = "serve.dispatch"
 
 #: every point the hot paths are wired with, for ``FaultPlan(points=...)``.
 FAULT_POINTS: Tuple[str, ...] = (
     P_SCHED_APPLY, P_SCHED_RING_COMMIT, P_COLLECT_DISPATCH, P_COLLECT_DELTA,
     P_RING_EVICT, P_CACHE_STORE, P_JOURNAL_BARRIER, P_JOURNAL_TORN,
-    P_OBS_SINK,
+    P_OBS_SINK, P_SERVE_DISPATCH,
 )
 
 #: points that simulate process death by default (InjectedCrash).
@@ -134,6 +139,10 @@ class FaultPlan:
         # draw sequence never depends on cross-point interleaving or on
         # PYTHONHASHSEED.
         self._rngs: Dict[str, np.random.Generator] = {}
+        # Concurrent serving threads share one plan (the async front end
+        # runs its dispatcher in the activating thread's copied context);
+        # the per-hit bookkeeping must not tear across them.
+        self._lock = threading.Lock()
 
     def _rng(self, point: str) -> np.random.Generator:
         rng = self._rngs.get(point)
@@ -145,22 +154,29 @@ class FaultPlan:
 
     def check(self, point: str) -> bool:
         """Consume one hit of ``point``; True when this hit must fail."""
-        hit = self.hits.get(point, 0)
-        self.hits[point] = hit + 1
-        fire = hit in self.schedule.get(point, ())
-        if (not fire and self.seed is not None and self.rate > 0.0
-                and point in self.points):
-            # always draw, even past max_faults, so the stream position of
-            # later hits is independent of how many already fired
-            draw = float(self._rng(point).random()) < self.rate
-            fire = fire or draw
-        if fire and (self.max_faults is not None
-                     and self.fired >= self.max_faults):
-            fire = False
-        self.log.append((point, hit, fire))
-        if fire:
-            self.fired += 1
-        return fire
+        return self.consume(point) is not None
+
+    def consume(self, point: str):
+        """Consume one hit of ``point``; its hit index when it must fail,
+        else ``None`` — the atomic form ``inject`` uses (the index must
+        come from the same critical section that drew the decision)."""
+        with self._lock:
+            hit = self.hits.get(point, 0)
+            self.hits[point] = hit + 1
+            fire = hit in self.schedule.get(point, ())
+            if (not fire and self.seed is not None and self.rate > 0.0
+                    and point in self.points):
+                # always draw, even past max_faults, so the stream position
+                # of later hits is independent of how many already fired
+                draw = float(self._rng(point).random()) < self.rate
+                fire = fire or draw
+            if fire and (self.max_faults is not None
+                         and self.fired >= self.max_faults):
+                fire = False
+            self.log.append((point, hit, fire))
+            if fire:
+                self.fired += 1
+            return hit if fire else None
 
     def to_schedule(self) -> Dict[str, List[int]]:
         """The explicit schedule of everything this plan fired so far —
@@ -204,8 +220,8 @@ def inject(point: str) -> None:
     plan = _ACTIVE.get()
     if plan is None:
         return
-    if plan.check(point):
-        hit = plan.hits[point] - 1
+    hit = plan.consume(point)
+    if hit is not None:
         if point in plan.crash_points:
             raise InjectedCrash(point, hit)
         raise InjectedFault(point, hit)

@@ -48,6 +48,7 @@ from repro.core.tiles import TILE
 from repro.engine.incremental import _dirty_stats
 from repro.engine.service import BaseGraphService, QueryReply  # noqa: F401
 from repro.engine.service import ServiceStats  # noqa: F401  (re-export)
+from repro.engine.service import ThresholdSpec
 from repro.obs import Telemetry
 from repro.obs.trace import annotate as _trace_annotate
 from repro.obs.trace import maybe_span
@@ -98,7 +99,8 @@ class ShardedGraphService(BaseGraphService):
                  tile: int = TILE, use_kernel: bool = False,
                  src_chunk: Optional[int] = None, bc_mode: str = "gather",
                  ring_depth: int = 8, batch_size: int = 32,
-                 dirty_threshold: float = 0.25, strict_order: bool = False,
+                 dirty_threshold: ThresholdSpec = None,
+                 strict_order: bool = False,
                  coalesce: bool = False, max_collects: int = 16,
                  max_cached: int = 128,
                  telemetry: Optional[Telemetry] = None,

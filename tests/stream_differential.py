@@ -453,6 +453,210 @@ def _check_telemetry(seed, telemetry, services, modes, expected):
         assert sum(per_mode.values()) == len(clean), (seed, name)
 
 
+# ------------------------- concurrent replay -------------------------------
+
+def run_concurrent_differential(seed: int, *, n: int = 24, chunks: int = 10,
+                                ops_per_chunk: int = 4, clients: int = 3,
+                                queries_per_client: int = 12,
+                                neg_frac: float = 0.0, fault_plan=None,
+                                policy=None, max_batch: int = 16,
+                                trace_path=None):
+    """Concurrent-schedule replay through the async serving front end.
+
+    One seeded RNG fixes everything decidable up front — the base graph,
+    the per-commit op chunks, and each client thread's query schedule —
+    then ``clients`` query threads and one updater thread run against a
+    single :class:`repro.serve.AsyncGraphService` concurrently.  The OS
+    interleaving is NOT controlled (that is the point); correctness must
+    not depend on it, because every reply pins the ring version it was
+    admitted at:
+
+      * each resolved reply is checked **at its own version** — the
+        sequential oracle (``tests/oracle.py``) replays the committed
+        chunk prefix to that version and the answer must match it
+        semantically AND be bit-equal (``results_equal``) to a fresh
+        sequential full collect on the reconstructed snapshot — the
+        vmap/batched-dispatch bit-identity claim, enforced per reply;
+      * chunk boundaries equal commit boundaries by construction (each
+        chunk is exactly ``batch_size`` ops, auto-committed), so the
+        state at version ``v`` is reproducible as ``apply_ops`` over the
+        chunk prefix regardless of thread timing;
+      * conservation must survive concurrency: ``unchanged + delta +
+        full == stats.queries == #clean query trace records`` and
+        degraded records == ``stats.degraded``.
+
+    **Chaos mode** (``fault_plan=``): the whole run — admission, the
+    dispatcher (which inherits the fault scope via its copied context),
+    and the client commits — executes under the plan; the contract is
+    the sequential harness's *degraded-or-correct, never silently
+    wrong*: degraded replies are checked bit-exactly at their
+    ``stale_version``; raising queries only count (``raised``) and must
+    verify clean afterwards.
+
+    Returns the mode tallies plus the front end's own counters
+    (``serve`` key) so callers can assert batching actually happened.
+    """
+    print(f"[concurrent-differential] seed={seed} n={n} chunks={chunks} "
+          f"ops_per_chunk={ops_per_chunk} clients={clients} "
+          f"chaos={fault_plan is not None}", flush=True)
+    import threading
+
+    from repro.core import apply_ops
+    from repro.core.queries import bc_dependencies, bfs, sssp
+    from repro.serve import AsyncGraphService
+
+    rng = np.random.default_rng(seed)
+    half = n // 2
+    base = [(PUTV, i) for i in range(n)]
+    for lo, hi in ((0, half), (half, n)):
+        for _ in range(3 * half):
+            base.append((PUTE, int(rng.integers(lo, hi)),
+                         int(rng.integers(lo, hi)),
+                         float(WEIGHTS[int(rng.integers(0, len(WEIGHTS)))])))
+    # Base population goes into version 0 directly (not through the
+    # scheduler): v0 is then the well-known starting snapshot every
+    # warm-up query pins, and version v == chunk prefix [0, v).
+    g0, _ = apply_ops(make_graph(n, 16 * n), base)
+    oracle = GraphOracle()
+    _apply_oracle(oracle, base)
+
+    chunk_list = [gen_ops(rng, *((half, n) if c % 2 else (0, half)),
+                          ops_per_chunk, neg_frac)
+                  for c in range(chunks)]
+    pinned = [0, 1]
+    schedules = []
+    for _ in range(clients):
+        sched = []
+        for q in range(queries_per_client):
+            kind = ("bfs", "sssp", "bc")[int(rng.integers(0, 3))]
+            src = (pinned[int(rng.integers(0, len(pinned)))]
+                   if float(rng.random()) < 0.7 else int(rng.integers(0, n)))
+            sched.append((kind, src))
+        schedules.append(sched)
+
+    if fault_plan is not None and policy is None:
+        policy = ResiliencePolicy(max_retries=2)
+    telemetry = Telemetry.make(trace_path)
+    svc = GraphService(g0, batch_size=ops_per_chunk, telemetry=telemetry,
+                       policy=policy)
+
+    results = [[] for _ in range(clients)]   # (kind, src, future)
+    errs = []
+
+    def updater(srv):
+        try:
+            for chunk in chunk_list:
+                for op in chunk:
+                    # a submit can fault inside its auto-commit; the op
+                    # itself is already logged, and atomicity returned
+                    # the chunk — a later commit drains it
+                    try:
+                        srv.submit(op)
+                    except InjectedFault:
+                        pass
+            for _ in range(256):
+                try:
+                    srv.flush()
+                    return
+                except InjectedFault:
+                    continue
+            errs.append(AssertionError("flush never succeeded"))
+        except Exception as e:  # pragma: no cover - harness guard
+            errs.append(e)
+
+    def querier(srv, idx):
+        try:
+            for kind, src in schedules[idx]:
+                results[idx].append((kind, src,
+                                     srv.query_async(kind, src)))
+        except Exception as e:  # pragma: no cover - harness guard
+            errs.append(e)
+
+    with fault_scope(fault_plan):
+        with AsyncGraphService(svc, max_batch=max_batch) as srv:
+            # Warm-up burst at v0: populates the result cache (enabling
+            # unchanged/delta rungs mid-stream) and is itself a batched
+            # dispatch (many sources, one kind, one version).
+            warm = [(k, s, srv.query_async(k, s))
+                    for k in ("bfs", "sssp", "bc") for s in pinned]
+            for _, _, f in warm:
+                try:
+                    f.result(timeout=120)
+                except Exception:
+                    assert fault_plan is not None, (seed, "warm raised")
+            threads = [threading.Thread(target=updater, args=(srv,))]
+            threads += [threading.Thread(target=querier, args=(srv, i))
+                        for i in range(clients)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            assert not errs, (seed, errs)
+            assert srv.drain(timeout=300), (seed, "drain timed out")
+    assert svc.version == chunks, (seed, svc.version, chunks)
+
+    # ---- collect replies; only chaos runs may raise ----
+    modes = {"unchanged": 0, "delta": 0, "full": 0, "degraded": 0,
+             "raised": 0}
+    by_version = {}
+    for kind, src, fut in warm + [r for res in results for r in res]:
+        try:
+            reply = fut.result(timeout=120)
+        except Exception as e:
+            assert fault_plan is not None, (seed, kind, src, e)
+            modes["raised"] += 1
+            continue
+        if reply.degraded:
+            modes["degraded"] += 1
+            assert reply.stale_version == reply.version, (seed, reply)
+        else:
+            modes[reply.mode] += 1
+        assert 0 <= reply.version <= chunks, (seed, reply.version)
+        by_version.setdefault(reply.version, []).append((kind, src, reply))
+
+    # ---- sequential oracle replay: check every reply at its version ----
+    fresh = {"bfs": bfs, "sssp": sssp, "bc": bc_dependencies}
+    state = g0
+    for v in range(0, chunks + 1):
+        if v > 0:
+            chunk = chunk_list[v - 1]
+            _apply_oracle(oracle, chunk)
+            state, _ = apply_ops(state, chunk, batch_size=ops_per_chunk)
+        for kind, src, reply in by_version.get(v, ()):
+            ctx = (seed, kind, src, v,
+                   "degraded" if reply.degraded else reply.mode)
+            _CHECK[kind](ctx, reply, oracle, src, n, False)
+            # the bit-identity claim: every batched/pinned answer equals
+            # a sequential full collect on the reconstructed snapshot
+            assert results_equal(reply.result, fresh[kind](state, src)), \
+                (ctx, "batched reply not bit-equal to sequential collect")
+    assert_service_ok(svc)
+
+    # ---- conservation under concurrency ----
+    st = svc.stats
+    assert st.unchanged + st.delta + st.full == st.queries, (seed, st)
+    recs = [r for r in telemetry.tracer.records if r["span"] == "query"]
+    clean = [r for r in recs if "error" not in r and not r.get("degraded")]
+    deg = [r for r in recs if r.get("degraded")]
+    assert len(clean) == st.queries, (seed, len(clean), st.queries)
+    assert len(deg) == st.degraded == modes["degraded"], (seed, st.degraded)
+    if fault_plan is None:
+        assert modes["raised"] == 0 and st.errors == 0, (seed, modes)
+
+    modes["errors"] = st.errors
+    modes["retries"] = st.retries
+    modes["serve"] = {
+        "admitted": srv.stats.admitted,
+        "dispatches": srv.stats.dispatches,
+        "batched_dispatches": srv.stats.batched_dispatches,
+        "fallbacks": srv.stats.fallbacks,
+        "deadline_expired": srv.stats.deadline_expired,
+        "max_batch_seen": srv.stats.max_batch_seen,
+    }
+    telemetry.close()
+    return modes
+
+
 def _check_adaptive(seed, telemetry, services, modes):
     """Controller invariants after an ``adaptive=True`` replay: every
     tuned threshold within its clamps, one ``threshold_adjust`` trace

@@ -598,11 +598,11 @@ def test_adaptive_no_movement_without_signal():
     # degenerate fit: every delta at the same fraction -> no movement
     _drive(ctl, "bfs", full_us=[500.0] * 2,
            delta=[(0.2, 100.0), (0.2, 120.0), (0.2, 90.0)])
-    assert ctl.thresholds()["bfs"] == ctl.base and ctl.adjustments == 0
+    assert ctl.thresholds()["bfs"] == ctl.base["bfs"] and ctl.adjustments == 0
     # negative slope (delta CHEAPER when dirtier - noise): no movement
     _drive(ctl, "sssp", full_us=[500.0] * 2,
            delta=[(0.1, 300.0), (0.3, 200.0), (0.5, 100.0)])
-    assert ctl.thresholds()["sssp"] == ctl.base
+    assert ctl.thresholds()["sssp"] == ctl.base["sssp"]
     # unchanged observations carry no crossover signal at all
     for _ in range(64):
         ctl.observe("bc", "unchanged", 1.0, None)
@@ -615,12 +615,12 @@ def test_adaptive_probe_cadence():
     ctl = AdaptiveThresholds(probe_every=4)
     got = [ctl.threshold("bfs") for _ in range(12)]
     assert got.count(0.0) == 3 and ctl.probes == 3
-    assert all(t == ctl.base for t in got if t != 0.0)
+    assert all(t == ctl.base["bfs"] for t in got if t != 0.0)
     # probing disabled
     ctl2 = AdaptiveThresholds(probe_every=0)
     assert all(ctl2.threshold("bfs") != 0.0 for _ in range(20))
     # unknown kind: static base, never probed
-    assert ctl.threshold("nope") == ctl.base
+    assert ctl.threshold("nope") == 0.25   # static fallback
 
 
 def test_adaptive_emits_spans_and_gauges():
@@ -630,7 +630,7 @@ def test_adaptive_emits_spans_and_gauges():
     ctl = AdaptiveThresholds(alpha=1.0, period=8, min_full=1, min_delta=4,
                              probe_every=0).bind(reg, tr, "local")
     assert reg.gauge("adaptive_dirty_threshold", service="local",
-                     kind="bfs").value == ctl.base
+                     kind="bfs").value == ctl.base["bfs"]
     _drive(ctl, "bfs", full_us=[600.0] * 3,
            delta=[(f, 100.0 + 1000.0 * f)
                   for f in (0.1, 0.2, 0.3, 0.4, 0.5)])

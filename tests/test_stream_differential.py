@@ -305,3 +305,37 @@ def test_sigkill_crash_recovery(tmp_path):
     assert_service_ok(rec)
     reply = rec.query("bfs", 0)
     assert reply.version == rec.version and not reply.degraded
+
+
+# ------------------------- concurrent serving -------------------------------
+
+def test_stream_differential_concurrent(tmp_path):
+    """Concurrent-schedule replay: client threads race an updater through
+    the async front end; every reply is oracle-checked (semantic + bit-
+    equal) at its own pinned version, conservation survives concurrency,
+    and at least one compiled dispatch actually batched."""
+    from stream_differential import run_concurrent_differential
+
+    trace = tmp_path / "concurrent.jsonl"
+    modes = run_concurrent_differential(11, trace_path=str(trace))
+    assert modes["raised"] == 0 and modes["degraded"] == 0, modes
+    assert modes["full"] > 0 and modes["unchanged"] > 0, modes
+    serve = modes["serve"]
+    assert serve["batched_dispatches"] > 0, serve
+    assert serve["deadline_expired"] == 0, serve
+
+
+def test_stream_differential_concurrent_chaos():
+    """The concurrent replay under seeded faults: dispatch-level faults
+    (propagated into the dispatcher via its copied context) degrade to
+    the per-request ladder, commits retry, and every resolved reply is
+    still degraded-or-correct at its pinned (or stale) version."""
+    from repro.resil import FaultPlan, ResiliencePolicy
+    from stream_differential import run_concurrent_differential
+
+    plan = FaultPlan(seed=13, rate=0.25)
+    modes = run_concurrent_differential(
+        12, fault_plan=plan, policy=ResiliencePolicy(max_retries=1))
+    assert plan.fired > 0
+    assert modes["full"] > 0, modes
+    assert modes["serve"]["admitted"] > 0, modes
